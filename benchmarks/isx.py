@@ -1,0 +1,62 @@
+"""Paper Figure 5: ISx bucket sort via queue exchange.
+
+Measures keys/second through distribute(queue push with aggregation) +
+local sort, sweeping the aggregation message size — the paper's central
+claim is that aggregation turns latency-bound pushes into bandwidth-
+bound ones and that larger messages amortize slow transports.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import ShapeDtypeStruct as SDS
+
+from benchmarks.util import emit, time_fn
+from repro.core import get_backend
+from repro.containers import queue as q
+
+N_KEYS = 1 << 16
+
+
+def bucket_sort(message_size: int, n_keys: int = N_KEYS):
+    """The paper's Fig. 3 program: buffer locally per destination, push
+    full buckets, barrier, local sort."""
+    bk = get_backend(None)
+    spec, st0 = q.queue_create(bk, n_keys * 2, SDS((), jnp.uint32))
+    n_msgs = n_keys // message_size
+
+    @jax.jit
+    def sort_fn(st, keys):
+        dest = jnp.zeros(message_size, jnp.int32)
+        for i in range(n_msgs):
+            st, _, _ = q.push(bk, spec, st,
+                              keys[i * message_size:(i + 1) * message_size],
+                              dest, capacity=message_size)
+        bk.barrier()
+        rows, got = q.local_drain(spec, st)
+        return jnp.sort(jnp.where(got, rows, jnp.uint32(0xFFFFFFFF)))
+
+    return sort_fn, st0
+
+
+def run():
+    rng = np.random.default_rng(2)
+    keys = jnp.asarray(rng.integers(0, 1 << 28, N_KEYS), jnp.uint32)
+    results = {}
+    for msg in (256, 1024, 4096, 16384):
+        fn, st0 = bucket_sort(msg)
+        t = time_fn(fn, st0, keys, warmup=1, iters=3)
+        keys_per_s = N_KEYS / t
+        results[f"isx_msg{msg}"] = t * 1e6
+        emit(f"isx_msg{msg}", t * 1e6, f"{keys_per_s/1e6:.2f}Mkeys/s")
+    # correctness spot check
+    fn, st0 = bucket_sort(4096)
+    out = np.asarray(fn(st0, keys))[:N_KEYS]
+    assert np.array_equal(out, np.sort(np.asarray(keys))), "sort wrong!"
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Framework-side benchmark: LM train/decode step throughput (reduced
+configs on CPU; the full-size numbers live in the dry-run roofline)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.util import emit, time_fn
+from repro.configs import get_config, reduced
+from repro.launch.mesh import make_test_mesh
+from repro.launch.steps import init_state, make_serve_step, make_train_step
+from repro.models import lm
+from repro.models.sharding import Axes
+
+
+def run():
+    mesh = make_test_mesh(1, 1)
+    axes = Axes.from_mesh(mesh)
+    rng = jax.random.PRNGKey(0)
+    results = {}
+    for arch in ("stablelm-1.6b", "arctic-480b", "rwkv6-1.6b"):
+        cfg = reduced(get_config(arch))
+        params, opt, _, _ = init_state(cfg, mesh, rng)
+        b, t = 4, 128
+        batch = {"tokens": jax.random.randint(rng, (b, t + 1), 0, cfg.vocab),
+                 "loss_mask": jnp.ones((b, t), jnp.float32)}
+        step = jax.jit(make_train_step(cfg, mesh))
+        dt = time_fn(step, params, opt, batch, warmup=1, iters=3)
+        toks_s = b * t / dt
+        results[f"train_{arch}"] = dt * 1e6
+        emit(f"lm_train_{arch}", dt * 1e6, f"{toks_s/1e3:.1f}ktok/s")
+
+        cache, _ = jax.jit(lambda p, bb: lm.prefill(
+            p, cfg, bb, cache_len=t + 8, mesh=mesh, axes=axes))(
+            params, {"tokens": batch["tokens"][:, :t]})
+        dstep = jax.jit(make_serve_step(cfg, mesh))
+        tok = jnp.zeros((b, 1), jnp.int32)
+        dt = time_fn(lambda c: dstep(params, c, tok)[1], cache,
+                     warmup=1, iters=3)
+        results[f"decode_{arch}"] = dt * 1e6
+        emit(f"lm_decode_{arch}", dt * 1e6, f"{b/dt:.0f}tok/s")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,108 @@
+"""Paper Figures 6/7: Meraculous contig generation.
+
+Two phases over a synthetic genome (the chr14 workflow shape):
+  build      k-mer -> next-base de Bruijn table via HashMapBuffer
+             (staged inserts + flush with local fast inserts)
+  traverse   batched walks with phase-local finds (Table 3d promise)
+
+Reported as k-mers/s per phase; the BCL claims under test are that the
+buffered build beats direct atomic insertion and that the relaxed
+traversal beats atomic finds (benchmarks/micro_hashmap.py isolates the
+per-op ratios; this one shows them inside the real pipeline).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import ShapeDtypeStruct as SDS
+
+from benchmarks.util import emit, time_fn
+from repro.core import ConProm, get_backend
+from repro.containers import hashmap as hm
+from repro.containers import hashmap_buffer as hb
+from repro.data.genomics import extract_kmers, pack_kmers
+
+K = 15
+
+
+def run():
+    bk = get_backend(None)
+    rng = np.random.default_rng(4)
+    genome = rng.integers(0, 4, 1 << 13).astype(np.uint8)
+    kmers = pack_kmers(extract_kmers(genome[None], K))[:-1]
+    next_base = jnp.asarray(genome[K:].astype(np.uint32))
+    n = kmers.shape[0]
+    kspec = {"hi": SDS((), jnp.uint32), "lo": SDS((), jnp.uint32)}
+    keys = {"hi": jnp.asarray(kmers[:, 0]), "lo": jnp.asarray(kmers[:, 1])}
+
+    # ---- build phase: buffered vs direct ----
+    def fresh():
+        return hm.hashmap_create(bk, 1 << 15, kspec, SDS((), jnp.uint32),
+                                 block_size=64)
+
+    @jax.jit
+    def build_direct(keys, vals):
+        spec, st = fresh()
+        st, ok = hm.insert(bk, spec, st, keys, vals, capacity=n, attempts=2)
+        return st, ok
+
+    @jax.jit
+    def build_buffered(keys, vals):
+        spec, st = fresh()
+        bspec, bst = hb.create(bk, spec, st, queue_capacity=2 * n,
+                               buffer_cap=2 * n)
+        bst, _ = hb.insert(bspec, bst, keys, vals)
+        bst, dropped = hb.flush(bk, bspec, bst, capacity=2 * n)
+        return bst.map, dropped
+
+    t_direct = time_fn(build_direct, keys, next_base, warmup=1, iters=3)
+    t_buf = time_fn(build_buffered, keys, next_base, warmup=1, iters=3)
+
+    # ---- traversal phase: batched de Bruijn walk ----
+    spec, _ = fresh()
+    state, ok = build_direct(keys, next_base)
+    assert bool(np.asarray(ok).all())
+
+    starts = kmers[rng.integers(0, n, 256)]
+    steps = 64
+
+    @jax.jit
+    def traverse(state, start_hi, start_lo):
+        cur_hi, cur_lo = start_hi, start_lo
+        mask = (jnp.uint64(1) if False else None)
+        total = jnp.zeros((), jnp.uint32)
+        for _ in range(steps):
+            st2, v, found = hm.find(bk, spec, state,
+                                    {"hi": cur_hi, "lo": cur_lo},
+                                    capacity=cur_hi.shape[0],
+                                    promise=ConProm.HashMap.find,
+                                    attempts=2)
+            b = v & jnp.uint32(3)
+            # advance kmer: (cur << 2 | b) mod 4^K   on u32-pair lanes
+            new_hi = ((cur_hi << 2) | (cur_lo >> 30)) & \
+                jnp.uint32((1 << (2 * K - 32)) - 1 if 2 * K > 32 else 0)
+            new_lo = (cur_lo << 2) | b
+            cur_hi = jnp.where(found, new_hi, cur_hi)
+            cur_lo = jnp.where(found, new_lo, cur_lo)
+            total = total + found.sum().astype(jnp.uint32)
+        return total
+
+    t_walk = time_fn(traverse, state, jnp.asarray(starts[:, 0]),
+                     jnp.asarray(starts[:, 1]), warmup=1, iters=3)
+    walked = int(traverse(state, jnp.asarray(starts[:, 0]),
+                          jnp.asarray(starts[:, 1])))
+
+    emit("meraculous_build_direct", t_direct / n * 1e6,
+         f"{n/t_direct/1e6:.2f}Mkmer/s")
+    emit("meraculous_build_buffered", t_buf / n * 1e6,
+         f"speedup={t_direct/t_buf:.2f}x")
+    emit("meraculous_traverse", t_walk / (256 * steps) * 1e6,
+         f"extended={walked}")
+    return {"build_direct": t_direct, "build_buffered": t_buf,
+            "traverse": t_walk}
+
+
+if __name__ == "__main__":
+    run()

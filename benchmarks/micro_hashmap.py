@@ -1,0 +1,109 @@
+"""Paper Figure 9: HashMap operation microbenchmarks.
+
+Variants (paper naming):
+  insert          fully-atomic insert (Table 3a: 2A + W)
+  insert_buffer   HashMapBuffer staged insert + flush (the 10x mechanism)
+  find_atomic     fully-atomic find (Table 3c: 2A + R)
+  find            phase-local find (Table 3d: R)
+
+Reported as microseconds per operation (amortized over the batch) plus
+the collective/bytes observables, so the paper's relative claims
+(buffer >> insert; find 2-3x over find_atomic) are directly checkable.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import ShapeDtypeStruct as SDS
+
+from benchmarks.util import emit, time_fn
+from repro.core import ConProm, costs, get_backend
+from repro.containers import hashmap as hm
+from repro.containers import hashmap_buffer as hb
+
+N_OPS = 1 << 14
+TABLE = 1 << 17
+WAVES = 8                      # fine-grained ops issue per-wave
+
+
+def run():
+    bk = get_backend(None)
+    rng = np.random.default_rng(0)
+    keys = jnp.asarray(rng.permutation(1 << 22)[:N_OPS], jnp.uint32)
+    vals = keys * 3 + 1
+    results = {}
+
+    def fresh():
+        return hm.hashmap_create(bk, TABLE, SDS((), jnp.uint32),
+                                 SDS((), jnp.uint32), block_size=64)
+
+    # --- insert (fully atomic), issued in WAVES batches ---
+    spec, st0 = fresh()
+    wave = N_OPS // WAVES
+
+    @jax.jit
+    def insert_waves(st, keys, vals):
+        for i in range(WAVES):
+            st, _ = hm.insert(bk, spec, st, keys[i * wave:(i + 1) * wave],
+                              vals[i * wave:(i + 1) * wave], capacity=wave,
+                              promise=ConProm.HashMap.find_insert,
+                              attempts=1)
+        return st
+
+    t = time_fn(insert_waves, st0, keys, vals)
+    results["hashmap_insert"] = t / N_OPS * 1e6
+
+    # --- insert through the HashMapBuffer ---
+    spec, st0 = fresh()
+    bspec, bst0 = hb.create(bk, spec, st0, queue_capacity=N_OPS,
+                            buffer_cap=N_OPS)
+
+    @jax.jit
+    def insert_buffered(bst, keys, vals):
+        for i in range(WAVES):
+            bst, _ = hb.insert(bspec, bst, keys[i * wave:(i + 1) * wave],
+                               vals[i * wave:(i + 1) * wave])
+        bst, _ = hb.flush(bk, bspec, bst, capacity=N_OPS)
+        return bst
+
+    t = time_fn(insert_buffered, bst0, keys, vals)
+    results["hashmap_insert_buffer"] = t / N_OPS * 1e6
+
+    # --- finds against a populated table ---
+    spec, st = fresh()
+    st, _ = hm.insert(bk, spec, st, keys, vals, capacity=N_OPS)
+
+    @jax.jit
+    def find_atomic(st, keys):
+        for i in range(WAVES):
+            st, v, f = hm.find(bk, spec, st, keys[i * wave:(i + 1) * wave],
+                               capacity=wave,
+                               promise=ConProm.HashMap.find_insert,
+                               attempts=1)
+        return v, f
+
+    @jax.jit
+    def find_relaxed(st, keys):
+        for i in range(WAVES):
+            _, v, f = hm.find(bk, spec, st, keys[i * wave:(i + 1) * wave],
+                              capacity=wave, promise=ConProm.HashMap.find,
+                              attempts=1)
+        return v, f
+
+    results["hashmap_find_atomic"] = time_fn(find_atomic, st, keys) \
+        / N_OPS * 1e6
+    results["hashmap_find"] = time_fn(find_relaxed, st, keys) / N_OPS * 1e6
+
+    emit("hashmap_insert", results["hashmap_insert"], "2A+W")
+    emit("hashmap_insert_buffer", results["hashmap_insert_buffer"],
+         f"speedup={results['hashmap_insert'] / results['hashmap_insert_buffer']:.2f}x")
+    emit("hashmap_find_atomic", results["hashmap_find_atomic"], "2A+R")
+    emit("hashmap_find", results["hashmap_find"],
+         f"speedup={results['hashmap_find_atomic'] / results['hashmap_find']:.2f}x")
+    return results
+
+
+if __name__ == "__main__":
+    run()

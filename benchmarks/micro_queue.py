@@ -1,0 +1,94 @@
+"""Paper Figures 10/11: CircularQueue and FastQueue microbenchmarks.
+
+Variants (paper naming):
+  push_pushpop / pop_pushpop    CircularQueue fully atomic (2A + nW/nR)
+  push_push / pop_pop           CircularQueue phase-relaxed
+  fq_push / fq_pop              FastQueue (A + nW/nR)
+  *_many                        one queue per rank, all ranks pushing
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import ShapeDtypeStruct as SDS
+
+from benchmarks.util import emit, time_fn
+from repro.core import ConProm, get_backend
+from repro.containers import queue as q
+
+N_OPS = 1 << 14
+WAVES = 8
+
+
+def run():
+    bk = get_backend(None)
+    rng = np.random.default_rng(1)
+    vals = jnp.asarray(rng.integers(0, 1 << 30, N_OPS), jnp.uint32)
+    dest = jnp.zeros(N_OPS, jnp.int32)
+    wave = N_OPS // WAVES
+    results = {}
+
+    def bench_push(circular, promise, tag):
+        spec, st0 = q.queue_create(bk, N_OPS * 2, SDS((), jnp.uint32),
+                                   circular=circular)
+
+        @jax.jit
+        def pushes(st, vals, dest):
+            for i in range(WAVES):
+                st, _, _ = q.push(bk, spec, st,
+                                  vals[i * wave:(i + 1) * wave],
+                                  dest[i * wave:(i + 1) * wave],
+                                  capacity=wave, promise=promise)
+            return st
+
+        t = time_fn(pushes, st0, vals, dest)
+        results[tag] = t / N_OPS * 1e6
+        return spec, pushes
+
+    bench_push(True, ConProm.CircularQueue.push_pop, "cq_push_pushpop")
+    bench_push(True, ConProm.CircularQueue.push, "cq_push_push")
+    bench_push(False, ConProm.FastQueue.push, "fq_push")
+
+    def bench_pop(circular, promise, tag):
+        spec, st0 = q.queue_create(bk, N_OPS * 2, SDS((), jnp.uint32),
+                                   circular=circular)
+        st0, _, _ = q.push(bk, spec, st0, vals, dest, capacity=N_OPS)
+
+        @jax.jit
+        def pops(st):
+            outs = []
+            for _ in range(WAVES):
+                st, out, got = q.pop(bk, spec, st, wave, 0, promise=promise)
+                outs.append(out)
+            return st, outs
+
+        t = time_fn(pops, st0)
+        results[tag] = t / N_OPS * 1e6
+
+    bench_pop(True, ConProm.CircularQueue.push_pop, "cq_pop_pushpop")
+    bench_pop(True, ConProm.CircularQueue.pop, "cq_pop_pop")
+    bench_pop(False, ConProm.FastQueue.pop, "fq_pop")
+
+    # local nonatomic pop (Table 2: l)
+    spec, st0 = q.queue_create(bk, N_OPS * 2, SDS((), jnp.uint32))
+    st0, _, _ = q.push(bk, spec, st0, vals, dest, capacity=N_OPS)
+
+    @jax.jit
+    def local_pops(st):
+        for _ in range(WAVES):
+            st, out, got = q.local_nonatomic_pop(spec, st, wave)
+        return st, out
+
+    results["fq_local_pop"] = time_fn(local_pops, st0) / N_OPS * 1e6
+
+    for k in ("cq_push_pushpop", "cq_push_push", "fq_push",
+              "cq_pop_pushpop", "cq_pop_pop", "fq_pop", "fq_local_pop"):
+        emit(k, results[k],
+             "2A" if "pushpop" in k else ("A" if k.startswith("fq") else "2A"))
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/util.emit).
+
+  micro_hashmap   paper Fig. 9   (insert / insert_buffer / find variants)
+  micro_queue     paper Fig. 10/11 (CircularQueue vs FastQueue, promises)
+  isx             paper Fig. 5   (bucket sort, aggregation sweep)
+  meraculous      paper Fig. 6/7 (contig-generation build + traversal)
+  kmer            paper Fig. 8   (k-mer counting +/- Bloom filter)
+  lm_step         framework-side step throughput (reduced configs)
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import isx, kmer, lm_step, meraculous, micro_hashmap, \
+        micro_queue
+    mods = {
+        "micro_hashmap": micro_hashmap,
+        "micro_queue": micro_queue,
+        "isx": isx,
+        "meraculous": meraculous,
+        "kmer": kmer,
+        "lm_step": lm_step,
+    }
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for name, mod in mods.items():
+        if only and name != only:
+            continue
+        try:
+            mod.run()
+        except Exception as e:  # keep the harness going; report the row
+            print(f"{name},ERROR,{type(e).__name__}: {e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Serving example: batched prefill + decode with slot reuse.
+
+Run: PYTHONPATH=src python examples/serve_lm.py
+
+Thin wrapper over launch/serve.py with a reduced qwen3 config — shows
+the public serving API (prefill -> iterated decode_step with a typed,
+sharded KV cache).
+"""
+
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.exit(main(["--arch", "qwen3-4b", "--reduced",
+                   "--requests", "8", "--batch", "4",
+                   "--prompt-len", "24", "--gen", "12"]))

@@ -1,0 +1,22 @@
+"""repro — BCL (Berkeley Container Library) reproduced as a TPU-native JAX framework.
+
+The package is layered exactly like the paper's stack:
+
+  core/        the "BCL Core" internal DSL: backends, global pointers,
+               object containers (serialization), concurrency promises and
+               the many-to-many exchange engine (the TPU analogue of
+               one-sided RDMA + remote atomics).
+  containers/  the distributed data structures: DHashMap, FastQueue,
+               CircularQueue, BloomFilter, DArray, HashMapBuffer.
+  kernels/     Pallas TPU kernels for the compute hot spots (blocked hash
+               probing, blocked Bloom hashing, binning, flash attention).
+  models/      the LM framework built on top of the containers (MoE dispatch
+               uses the BCL exchange; embeddings are DArray rgets).
+  optim/ data/ checkpoint/ runtime/   training substrate.
+  configs/     assigned architecture configs + paper app configs.
+  launch/      production mesh, multi-pod dry-run, train/serve drivers.
+"""
+
+__version__ = "1.0.0"
+
+from repro.core.promises import ConProm  # noqa: F401

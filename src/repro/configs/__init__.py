@@ -1,0 +1,34 @@
+"""Assigned architecture configs (+ the paper's own app configs).
+
+Every module exports CONFIG (the exact assigned configuration) and the
+registry below maps --arch ids to them.  ``reduced(CONFIG)`` gives the
+CPU smoke-test variant.
+"""
+
+from repro.configs.base import ArchConfig, MoEConfig, MLAConfig, SSMConfig, reduced
+from repro.configs.shapes import SHAPES, ShapeSpec, input_specs, shape_applicable
+
+
+def get_config(name: str) -> ArchConfig:
+    import importlib
+    mod = importlib.import_module(
+        f"repro.configs.{name.replace('-', '_').replace('.', '_')}")
+    return mod.CONFIG
+
+
+ARCH_IDS = [
+    "stablelm-1.6b",
+    "nemotron-4-15b",
+    "gemma3-4b",
+    "qwen3-4b",
+    "seamless-m4t-medium",
+    "internvl2-76b",
+    "arctic-480b",
+    "deepseek-v3-671b",
+    "rwkv6-1.6b",
+    "zamba2-7b",
+]
+
+__all__ = ["ArchConfig", "MoEConfig", "MLAConfig", "SSMConfig", "reduced",
+           "SHAPES", "ShapeSpec", "input_specs", "shape_applicable",
+           "get_config", "ARCH_IDS"]

@@ -1,0 +1,83 @@
+"""Assigned input shapes and ShapeDtypeStruct input specs.
+
+Four shapes per LM architecture (assignment):
+  train_4k      seq 4,096    global_batch 256    lowers train_step
+  prefill_32k   seq 32,768   global_batch 32     lowers prefill
+  decode_32k    seq 32,768   global_batch 128    lowers decode_step
+  long_500k     seq 524,288  global_batch 1      lowers decode_step
+                (sub-quadratic archs only — skips recorded in the table)
+
+``input_specs`` returns weak-type-correct ShapeDtypeStructs: the dry-run
+lowers against them with zero allocation.  Modality frontends are stubs
+per the assignment: [audio] provides precomputed frame embeddings,
+[vlm] precomputed patch embeddings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import ShapeDtypeStruct as SDS
+
+from repro.configs.base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ArchConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped) per the assignment rules."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("pure full-attention arch: 500k decode requires "
+                       "sub-quadratic mixing (DESIGN.md section 6)")
+    return True, ""
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, t = shape.global_batch, shape.seq_len
+    i32, f32 = jnp.int32, jnp.float32
+    d = cfg.d_model
+
+    if shape.kind == "train":
+        if cfg.frontend == "patch":
+            n_txt = t - cfg.frontend_len
+            return {"tokens": SDS((b, n_txt + 1), i32),
+                    "patch_embeds": SDS((b, cfg.frontend_len, d), f32),
+                    "loss_mask": SDS((b, n_txt), f32)}
+        if cfg.frontend == "frame":
+            return {"tokens": SDS((b, t + 1), i32),
+                    "src_embeds": SDS((b, max(t // 4, 8), d), f32),
+                    "loss_mask": SDS((b, t), f32)}
+        return {"tokens": SDS((b, t + 1), i32),
+                "loss_mask": SDS((b, t), f32)}
+
+    if shape.kind == "prefill":
+        batch = {"tokens": SDS((b, t), i32)}
+        if cfg.frontend == "patch":
+            batch = {"tokens": SDS((b, t - cfg.frontend_len), i32),
+                     "patch_embeds": SDS((b, cfg.frontend_len, d), f32)}
+        if cfg.frontend == "frame":
+            batch["src_embeds"] = SDS((b, max(t // 4, 8), d), f32)
+        return batch
+
+    # decode: one new token against a cache of seq_len
+    from repro.models.lm import cache_init
+    cross = max(t // 4, 8) if cfg.frontend == "frame" else 0
+    cache = jax.eval_shape(lambda: cache_init(cfg, b, t, cross))
+    return {"tokens": SDS((b, 1), i32), "cache": cache}

@@ -1,0 +1,32 @@
+"""BCL distributed data structures (paper section 5), JAX edition.
+
+Containers are functional: state is a NamedTuple pytree of per-rank
+shards (usable inside ``jax.shard_map``), specs are static Python
+objects carrying packers/geometry, and every method returns new state.
+
+=====================  ===========  =========================================
+Container              Locality     Description
+=====================  ===========  =========================================
+DHashMap               distributed  blocked open-addressing hash table
+FastQueue              hosted       multi-reader OR multi-writer ring buffer
+CircularQueue          hosted       multi-reader AND multi-writer ring buffer
+HashMapBuffer          distributed  aggregates hash-table insertions
+BloomFilter            distributed  blocked Bloom filter (atomic insert)
+DArray                 distributed  1-D array
+Heap                   hosted       bump-allocator for varlen payloads
+=====================  ===========  =========================================
+"""
+
+from repro.containers.darray import DArraySpec, darray_create, rget, rput
+from repro.containers.hashmap import HashMapSpec, hashmap_create
+from repro.containers.queue import QueueSpec, queue_create
+from repro.containers.bloom import BloomSpec, bloom_create
+from repro.containers.hashmap_buffer import HashMapBufferSpec
+
+__all__ = [
+    "DArraySpec", "darray_create", "rget", "rput",
+    "HashMapSpec", "hashmap_create",
+    "QueueSpec", "queue_create",
+    "BloomSpec", "bloom_create",
+    "HashMapBufferSpec",
+]

@@ -1,0 +1,103 @@
+"""BCL::DArray — a distributed 1-D array (paper Table 1).
+
+Block layout: global element g lives on rank ``g // local_n`` at local
+offset ``g % local_n``.  ``rget``/``rput`` are the one-sided read/write
+primitives: batches of global indices are routed to owners, served
+locally, and (for rget) routed back — the TPU realization of an RDMA
+get/put at cost R / W per element.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import costs
+from repro.core.backend import Backend
+from repro.core.exchange import route, reply
+from repro.core.object_container import Packer, packer_for
+
+_U32 = jnp.uint32
+_I32 = jnp.int32
+
+
+@dataclasses.dataclass(frozen=True)
+class DArraySpec:
+    global_n: int
+    local_n: int
+    packer: Packer
+
+    @property
+    def lanes(self) -> int:
+        return self.packer.lanes
+
+
+class DArrayState(NamedTuple):
+    local: jax.Array  # (local_n, L) u32
+
+
+def darray_create(backend: Backend, global_n: int, value_spec) -> tuple[DArraySpec, DArrayState]:
+    packer = packer_for(value_spec)
+    nprocs = backend.nprocs()
+    if global_n % nprocs:
+        global_n += nprocs - global_n % nprocs
+    local_n = global_n // nprocs
+    spec = DArraySpec(global_n, local_n, packer)
+    state = DArrayState(jnp.zeros((local_n, packer.lanes), _U32))
+    return spec, state
+
+
+def owner_of(spec: DArraySpec, idx: jax.Array) -> tuple[jax.Array, jax.Array]:
+    idx = idx.astype(_I32)
+    return idx // spec.local_n, idx % spec.local_n
+
+
+def rget(backend: Backend, spec: DArraySpec, state: DArrayState,
+         idx: jax.Array, capacity: int):
+    """Batched one-sided read of global indices. Returns (values, found)."""
+    n = idx.shape[0]
+    owner, off = owner_of(spec, idx)
+    req = route(backend, off.astype(_U32)[:, None], owner, capacity,
+                op_name="darray.rget")
+    loff = jnp.where(req.valid, req.payload[:, 0].astype(_I32), 0)
+    rows = state.local[loff]
+    out, answered = reply(backend, req, rows, n, op_name="darray.rget")
+    costs.record("darray.rget", costs.Cost(R=n))
+    return spec.packer.unpack(out), answered
+
+
+def rput(backend: Backend, spec: DArraySpec, state: DArrayState,
+         idx: jax.Array, values, capacity: int, mode: str = "set"):
+    """Batched one-sided write. mode='set'|'add'. Returns new state."""
+    n = idx.shape[0]
+    owner, off = owner_of(spec, idx)
+    lanes = spec.packer.pack(values)
+    body = jnp.concatenate([off.astype(_U32)[:, None], lanes], axis=1)
+    res = route(backend, body, owner, capacity, op_name="darray.rput")
+    loff = jnp.where(res.valid, res.payload[:, 0].astype(_I32), spec.local_n)
+    rows = res.payload[:, 1:]
+    if mode == "add":
+        local = state.local.at[loff].add(rows, mode="drop")
+    else:
+        local = state.local.at[loff].set(rows, mode="drop")
+    costs.record("darray.rput", costs.Cost(W=n))
+    return DArrayState(local)
+
+
+def local_read(spec: DArraySpec, state: DArrayState, off: jax.Array):
+    return spec.packer.unpack(state.local[off.astype(_I32)])
+
+
+def local_write(spec: DArraySpec, state: DArrayState, off: jax.Array, values):
+    lanes = spec.packer.pack(values)
+    return DArrayState(state.local.at[off.astype(_I32)].set(lanes))
+
+
+def to_global(backend: Backend, spec: DArraySpec, state: DArrayState):
+    """All-gather the full array (testing/debug; cost nR)."""
+    shards = backend.all_gather(state.local)          # (P, local_n, L)
+    flat = shards.reshape(-1, spec.packer.lanes)
+    return spec.packer.unpack(flat)

@@ -1,0 +1,256 @@
+"""BCL::HashMap — the distributed hash table (paper section 5.1).
+
+Layout: a logically contiguous array of *blocks* of B buckets,
+distributed block-wise across ranks (DESIGN.md: "blocked open
+addressing").  A key hashes to a block; probing compares the key against
+all B slots of the block at once (vectorized; the Pallas kernel's tile).
+When a block fills, the container rehashes the failed items to a new
+block — quadratic in the attempt number — with a bounded number of
+attempts, mirroring the paper's quadratic probing plus its "insertion
+may fail when full" semantics.
+
+Concurrency promises select the schedule (paper Table 3):
+  (a) find|insert   fully atomic   insert 2A + W     find 2A + R
+  (b) local         local insert   l
+  (c) find|insert   fully atomic find
+  (d) find          phase-local find: one read, no AMOs     R
+
+"Atomic" ops execute the paper's flag dance (reserve CAS / read-bit
+fetch-or + fetch-and) as real owner-side RMW passes over the status
+word, so their extra cost is measurable; promise-relaxed ops skip it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import costs
+from repro.core.backend import Backend
+from repro.core.exchange import route, reply
+from repro.core.hashing import hash_lanes
+from repro.core.object_container import Packer, packer_for
+from repro.core.promises import (Promise, find_only, fully_atomic_hashmap,
+                                 local_only)
+from repro.kernels import ops as kops
+
+_U32 = jnp.uint32
+_I32 = jnp.int32
+
+# a "read bit" in the upper 30 bits of the status word (paper 5.1.2)
+_READ_BIT = jnp.uint32(1 << 7)
+
+
+@dataclasses.dataclass(frozen=True)
+class HashMapSpec:
+    nblocks_global: int
+    nblocks_local: int
+    block_size: int
+    key_packer: Packer
+    val_packer: Packer
+    impl: str = "auto"   # kernel dispatch: auto|jnp|pallas|oracle
+
+    @property
+    def capacity(self) -> int:
+        return self.nblocks_global * self.block_size
+
+
+class HashMapState(NamedTuple):
+    tkeys: jax.Array    # (nb_local, B, Lk) u32
+    tvals: jax.Array    # (nb_local, B, Lv) u32
+    status: jax.Array   # (nb_local, B) u32
+
+
+def hashmap_create(backend: Backend, capacity: int, key_spec, val_spec,
+                   block_size: int = 128,
+                   impl: str = "auto") -> tuple[HashMapSpec, HashMapState]:
+    """Collective constructor (paper 5.1.1): fixed size, fixed K/V types."""
+    kp, vp = packer_for(key_spec), packer_for(val_spec)
+    nprocs = backend.nprocs()
+    nb_global = max(1, -(-capacity // block_size))
+    nb_global = -(-nb_global // nprocs) * nprocs       # round up to P
+    nb_local = nb_global // nprocs
+    spec = HashMapSpec(nb_global, nb_local, block_size, kp, vp, impl)
+    state = HashMapState(
+        jnp.zeros((nb_local, block_size, kp.lanes), _U32),
+        jnp.zeros((nb_local, block_size, vp.lanes), _U32),
+        jnp.zeros((nb_local, block_size), _U32))
+    return spec, state
+
+
+def _block_of(spec: HashMapSpec, key_lanes: jax.Array,
+              attempt: int) -> jax.Array:
+    """Global block index; attempts rehash quadratically (paper 5.1)."""
+    h1 = hash_lanes(key_lanes, seed=1)
+    if attempt == 0:
+        g = h1
+    else:
+        h2 = hash_lanes(key_lanes, seed=3) | _U32(1)
+        g = h1 + jnp.uint32(attempt * attempt) * h2
+    return (g % jnp.uint32(spec.nblocks_global)).astype(_I32)
+
+
+def _owner_local(spec: HashMapSpec, gblock: jax.Array):
+    return gblock // spec.nblocks_local, gblock % spec.nblocks_local
+
+
+def insert(backend: Backend, spec: HashMapSpec, state: HashMapState,
+           keys, vals, capacity: int,
+           promise: Promise = Promise.FIND | Promise.INSERT,
+           valid: jax.Array | None = None,
+           mode: int = kops.MODE_SET,
+           attempts: int = 2,
+           return_success: bool = True):
+    """Insert a batch of (key, value) pairs.
+
+    Returns (state, success(N,) | None).  With ``promise=local`` the keys
+    must hash to this rank's own blocks (cost l, no collectives) — the
+    HashMapBuffer flush path (paper Table 3b).
+    """
+    klanes = spec.key_packer.pack(keys)
+    vlanes = spec.val_packer.pack(vals)
+    n = klanes.shape[0]
+    if valid is None:
+        valid = jnp.ones((n,), bool)
+
+    if local_only(promise):
+        gblock = _block_of(spec, klanes, 0)
+        _, lblock = _owner_local(spec, gblock)
+        tk, tv, st, ok = kops.bulk_insert(
+            state.tkeys, state.tvals, state.status, lblock, klanes, vlanes,
+            valid, mode, impl=spec.impl)
+        costs.record("hashmap.insert", costs.Cost(local=n))
+        return HashMapState(tk, tv, st), ok
+
+    atomic = fully_atomic_hashmap(promise)
+    pending = valid
+    success = jnp.zeros((n,), bool)
+    new_state = state
+    for a in range(max(1, attempts)):
+        gblock = _block_of(spec, klanes, a)
+        owner, lblock = _owner_local(spec, gblock)
+        body = jnp.concatenate(
+            [lblock.astype(_U32)[:, None], klanes, vlanes], axis=1)
+        res = route(backend, body, owner, capacity, valid=pending,
+                    op_name="hashmap.insert")
+        rb = jnp.where(res.valid, res.payload[:, 0].astype(_I32), 0)
+        rk = res.payload[:, 1:1 + spec.key_packer.lanes]
+        rv = res.payload[:, 1 + spec.key_packer.lanes:]
+
+        tk, tv, st = new_state
+        if atomic:
+            # paper 5.1.3: CAS free->reserved ... XOR ->ready.  The state
+            # machine is owner-serialized here, but we execute the reserve
+            # pass so its traffic is real: a net-zero RMW on the status
+            # word of every touched block.
+            st = st.at[rb].add(_READ_BIT, mode="drop")
+            st = st.at[rb].add(_U32(0) - _READ_BIT, mode="drop")
+        tk, tv, st, ok_here = kops.bulk_insert(
+            tk, tv, st, rb, rk, rv, res.valid, mode, impl=spec.impl)
+        new_state = HashMapState(tk, tv, st)
+
+        if return_success or attempts > 1:
+            back, _ = reply(backend, res, ok_here.astype(_U32), n,
+                            op_name="hashmap.insert")
+            ok_src = (back[:, 0] == 1) & pending
+            success = success | ok_src
+            pending = pending & ~ok_src
+        else:
+            break
+    costs.record("hashmap.insert",
+                 costs.Cost(A=2 if atomic else 1, W=n))
+    return new_state, (success if (return_success or attempts > 1) else None)
+
+
+def find(backend: Backend, spec: HashMapSpec, state: HashMapState,
+         keys, capacity: int,
+         promise: Promise = Promise.FIND | Promise.INSERT,
+         valid: jax.Array | None = None,
+         attempts: int = 2):
+    """Find a batch of keys. Returns (state, values, found(N,)).
+
+    State is returned because the fully-atomic path's read-bit dance
+    writes (net-zero) to the status array, exactly like the paper's
+    fetch-and-or / fetch-and-and pair.
+    """
+    klanes = spec.key_packer.pack(keys)
+    n = klanes.shape[0]
+    if valid is None:
+        valid = jnp.ones((n,), bool)
+
+    if local_only(promise):
+        gblock = _block_of(spec, klanes, 0)
+        _, lblock = _owner_local(spec, gblock)
+        found, vlanes = kops.bulk_find(state.tkeys, state.tvals, state.status,
+                                       lblock, klanes, valid, impl=spec.impl)
+        costs.record("hashmap.find", costs.Cost(local=n))
+        return state, spec.val_packer.unpack(vlanes), found
+
+    atomic = not find_only(promise)
+    pending = valid
+    found_all = jnp.zeros((n,), bool)
+    vals_all = jnp.zeros((n, spec.val_packer.lanes), _U32)
+    for a in range(max(1, attempts)):
+        gblock = _block_of(spec, klanes, a)
+        owner, lblock = _owner_local(spec, gblock)
+        body = jnp.concatenate([lblock.astype(_U32)[:, None], klanes], axis=1)
+        res = route(backend, body, owner, capacity, valid=pending,
+                    op_name="hashmap.find")
+        rb = jnp.where(res.valid, res.payload[:, 0].astype(_I32), 0)
+        rk = res.payload[:, 1:]
+        tk, tv, st = state
+        if atomic:
+            # fetch-and-or a read bit, read, fetch-and-and it away
+            st = st.at[rb].add(_READ_BIT, mode="drop")
+        found_here, vlanes = kops.bulk_find(tk, tv, st, rb, rk, res.valid,
+                                            impl=spec.impl)
+        if atomic:
+            st = st.at[rb].add(_U32(0) - _READ_BIT, mode="drop")
+            state = HashMapState(tk, tv, st)
+        body_back = jnp.concatenate(
+            [vlanes, found_here.astype(_U32)[:, None]], axis=1)
+        back, _ = reply(backend, res, body_back, n, op_name="hashmap.find")
+        got = (back[:, -1] == 1) & pending
+        vals_all = jnp.where(got[:, None], back[:, :-1], vals_all)
+        found_all = found_all | got
+        pending = pending & ~got
+        if attempts == 1:
+            break
+    costs.record("hashmap.find",
+                 costs.Cost(A=2 if atomic else 0, R=n))
+    return state, spec.val_packer.unpack(vals_all), found_all
+
+
+def count_ready(backend: Backend, state: HashMapState) -> jax.Array:
+    """Global number of occupied buckets."""
+    from repro.kernels.ref import READY, bucket_state
+    return backend.psum((bucket_state(state.status) == READY).sum())
+
+
+def local_entries(spec: HashMapSpec, state: HashMapState):
+    """This rank's (keys, vals, occupied) — flattened local view."""
+    from repro.kernels.ref import READY, bucket_state
+    nb, b = state.status.shape
+    occ = (bucket_state(state.status) == READY).reshape(-1)
+    keys = spec.key_packer.unpack(state.tkeys.reshape(nb * b, -1))
+    vals = spec.val_packer.unpack(state.tvals.reshape(nb * b, -1))
+    return keys, vals, occ
+
+
+def resize(backend: Backend, spec: HashMapSpec, state: HashMapState,
+           new_capacity: int, capacity_per_pair: int):
+    """Collective resize (paper 5.1.5): rebuild and re-insert all entries."""
+    backend.barrier()
+    new_spec, new_state = hashmap_create(
+        backend, new_capacity,
+        spec.key_packer, spec.val_packer, spec.block_size, spec.impl)
+    keys, vals, occ = local_entries(spec, state)
+    new_state, _ = insert(backend, new_spec, new_state, keys, vals,
+                          capacity_per_pair, valid=occ,
+                          promise=Promise.INSERT, attempts=3)
+    costs.record("hashmap.resize",
+                 costs.Cost(B=1, W=int(occ.shape[0])))
+    return new_spec, new_state

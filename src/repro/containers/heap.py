@@ -1,0 +1,92 @@
+"""Hosted bump-allocator heap: the variable-length ObjectContainer path.
+
+Paper section 6: serializers returning ``BCL::serial_ptr`` store their
+payload behind a global pointer in globally-addressable memory.  The
+heap provides that memory: each rank hosts a segment; ``store_local``
+bump-allocates rows on the calling rank (a *local* fetch-and-add), and
+``rget_rows`` reads arbitrary remote spans through the exchange.
+
+Records inside other containers then carry (rank, offset, length) —
+``SerialPtrPacker`` in core/object_container.py — while the bytes live
+here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import costs
+from repro.core.backend import Backend
+from repro.core.exchange import reply, route
+from repro.core.pointers import GlobalPointer
+
+_U32 = jnp.uint32
+_I32 = jnp.int32
+
+
+@dataclasses.dataclass(frozen=True)
+class HeapSpec:
+    local_rows: int
+    lanes: int
+
+
+class HeapState(NamedTuple):
+    data: jax.Array   # (local_rows, lanes) u32
+    top: jax.Array    # (1,) i32 bump pointer
+
+
+def heap_create(backend: Backend, local_rows: int,
+                lanes: int) -> tuple[HeapSpec, HeapState]:
+    return (HeapSpec(local_rows, lanes),
+            HeapState(jnp.zeros((local_rows, lanes), _U32),
+                      jnp.zeros((1,), _I32)))
+
+
+def store_local(backend: Backend, spec: HeapSpec, state: HeapState,
+                rows: jax.Array, lengths: jax.Array):
+    """Allocate contiguous spans on this rank; one record per span.
+
+    rows (N, lanes) u32 — the concatenated span payload rows;
+    lengths (K,) i32 — rows per record (sum == N).
+    Returns (state, ptrs: GlobalPointer (K,), ok).
+    """
+    n = rows.shape[0]
+    base = state.top[0]
+    ok = base + n <= spec.local_rows
+    idx = jnp.where(ok, base + jnp.arange(n, dtype=_I32), spec.local_rows)
+    data = state.data.at[idx].set(rows.astype(_U32), mode="drop")
+    offsets = base + jnp.concatenate(
+        [jnp.zeros((1,), _I32), jnp.cumsum(lengths)[:-1].astype(_I32)])
+    rank = jnp.broadcast_to(backend.rank(), offsets.shape)
+    new_top = jnp.where(ok, state.top + n, state.top)
+    costs.record("heap.store_local", costs.Cost(local=n))
+    return (HeapState(data, new_top),
+            GlobalPointer(rank, offsets),
+            jnp.broadcast_to(ok, offsets.shape))
+
+
+def rget_rows(backend: Backend, spec: HeapSpec, state: HeapState,
+              ptrs: GlobalPointer, span: int, capacity: int):
+    """Read ``span`` consecutive rows behind each pointer (static span).
+
+    Returns (rows (K, span, lanes), found (K,)).  Variable-length
+    records read their max span and slice by the stored length.
+    """
+    k = ptrs.rank.shape[0]
+    # expand each pointer into `span` unit row-requests
+    off = (ptrs.offset[:, None] + jnp.arange(span, dtype=_I32)[None]
+           ).reshape(-1)
+    dst = jnp.repeat(ptrs.rank, span)
+    req = route(backend, off.astype(_U32)[:, None], dst,
+                capacity=capacity * span, op_name="heap.rget")
+    loff = jnp.where(req.valid, req.payload[:, 0].astype(_I32), 0)
+    served = state.data[jnp.clip(loff, 0, spec.local_rows - 1)]
+    out, answered = reply(backend, req, served, k * span,
+                          op_name="heap.rget")
+    costs.record("heap.rget", costs.Cost(R=k * span))
+    return (out.reshape(k, span, spec.lanes),
+            answered.reshape(k, span).all(axis=1))

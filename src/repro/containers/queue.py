@@ -1,0 +1,226 @@
+"""BCL queues (paper section 5.2): FastQueue and CircularQueue.
+
+Both are *hosted* ring buffers: every rank hosts one ring, and any rank
+may push to / pop from any ring (a single-host queue is the special case
+where all traffic targets one rank; the "many" pattern of the paper's
+microbenchmarks is the general case).
+
+RDMA BCL reserves ring slots with remote fetch-and-add.  Here the
+reservation is owner-side: routed items arrive in a deterministic order
+(source rank, then source position), and an exclusive prefix sum over
+the arrivals assigns disjoint slots — associative fetch-and-add.
+
+Cost model (paper Table 2):
+  FastQueue      push = A + nW     pop = A + nR
+  CircularQueue  push = 2A + nW    pop = 2A + nR   (extra AMO maintains
+                 the ready cursors that make concurrent push/pop safe)
+  local_nonatomic_pop = l           resize = B + l   migrate = B + nW
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import costs
+from repro.core.backend import Backend
+from repro.core.exchange import route, reply
+from repro.core.object_container import Packer, packer_for
+from repro.core.promises import Promise, fully_atomic_queue
+
+_U32 = jnp.uint32
+_I32 = jnp.int32
+
+
+@dataclasses.dataclass(frozen=True)
+class QueueSpec:
+    capacity: int          # ring capacity per host rank
+    packer: Packer
+    circular: bool = False  # CircularQueue: maintains ready cursors
+
+    @property
+    def lanes(self) -> int:
+        return self.packer.lanes
+
+
+class QueueState(NamedTuple):
+    data: jax.Array        # (capacity, L) u32
+    head: jax.Array        # (1,) i32 — monotone pop cursor
+    tail: jax.Array        # (1,) i32 — monotone push cursor
+    tail_ready: jax.Array  # (1,) i32 — CircularQueue publish cursor
+    head_ready: jax.Array  # (1,) i32
+
+
+def queue_create(backend: Backend, capacity: int, value_spec,
+                 circular: bool = False) -> tuple[QueueSpec, QueueState]:
+    packer = packer_for(value_spec)
+    spec = QueueSpec(capacity, packer, circular)
+    z = lambda: jnp.zeros((1,), _I32)
+    state = QueueState(jnp.zeros((capacity, packer.lanes), _U32),
+                       z(), z(), z(), z())
+    return spec, state
+
+
+def size(state: QueueState) -> jax.Array:
+    return (state.tail - state.head)[0]
+
+
+def _amo_count(spec: QueueSpec, promise: Promise) -> int:
+    """AMOs per op per the paper's Tables 2/4."""
+    if promise & Promise.LOCAL:
+        return 0
+    return 2 if spec.circular else 1
+
+
+def push(backend: Backend, spec: QueueSpec, state: QueueState,
+         values, dest: jax.Array, capacity: int,
+         valid: jax.Array | None = None,
+         promise: Promise = Promise.PUSH):
+    """Push each value to the ring hosted on ``dest[i]``.
+
+    Returns (state, pushed_here, dropped):
+      pushed_here  items this rank's ring accepted
+      dropped      global count rejected (route overflow or ring full)
+    """
+    lanes = spec.packer.pack(values)
+    n = lanes.shape[0]
+    if valid is None:
+        valid = jnp.ones((n,), bool)
+
+    if promise & Promise.LOCAL:
+        # local push: no collectives, CPU-only ring append (paper 4c)
+        costs.record("queue.push", costs.Cost(local=n))
+        return _append(spec, state, lanes, valid)
+
+    res = route(backend, lanes, dest, capacity, valid=valid,
+                op_name="queue.push")
+    state, pushed, full_drop = _append(spec, state, res.payload, res.valid)
+    a = _amo_count(spec, promise)
+    costs.record("queue.push", costs.Cost(A=a, W=n))
+    dropped = res.dropped + backend.psum(full_drop)
+    return state, pushed, dropped
+
+
+def _append(spec: QueueSpec, state: QueueState, rows: jax.Array,
+            valid: jax.Array):
+    """Owner-side ring append in deterministic arrival order."""
+    m = rows.shape[0]
+    pos = jnp.cumsum(valid.astype(_I32)) - valid.astype(_I32)  # exclusive
+    total = valid.sum().astype(_I32)
+    used = (state.tail - state.head)[0]
+    room = jnp.maximum(spec.capacity - used, 0)
+    accept = valid & (pos < room)
+    n_acc = jnp.minimum(total, room)
+    slot = jnp.where(accept, (state.tail[0] + pos) % spec.capacity,
+                     spec.capacity)
+    data = state.data.at[slot].set(rows, mode="drop")
+    tail = state.tail + n_acc
+    tail_ready = tail if spec.circular else state.tail_ready
+    new = QueueState(data, state.head, tail, tail_ready, state.head_ready)
+    return new, n_acc, (total - n_acc)
+
+
+def pop(backend: Backend, spec: QueueSpec, state: QueueState,
+        n: int, src: jax.Array | int,
+        promise: Promise = Promise.POP):
+    """Pop up to ``n`` items from the ring hosted on rank ``src``.
+
+    Every rank issues its own request; the owner grants ranges in
+    deterministic requester order (the FAA analogue).  Returns
+    (state, values, got_mask).
+    """
+    nprocs = backend.nprocs()
+    if isinstance(src, int):
+        src = jnp.full((n,), src, _I32)
+    elif src.ndim == 0:
+        src = jnp.broadcast_to(src, (n,)).astype(_I32)
+
+    if promise & Promise.LOCAL:
+        return local_nonatomic_pop(spec, state, n)
+
+    # unit requests: one row per wanted item (per-(src,dst) capacity = n)
+    req = route(backend, jnp.zeros((n, 1), _U32), src, capacity=n,
+                op_name="queue.pop")
+    # grant in arrival order
+    arrival = jnp.cumsum(req.valid.astype(_I32)) - req.valid.astype(_I32)
+    limit = state.tail[0] - state.head[0]
+    if spec.circular and fully_atomic_queue(promise):
+        limit = state.tail_ready[0] - state.head[0]
+    grant = req.valid & (arrival < limit)
+    idx = jnp.where(grant, (state.head[0] + arrival) % spec.capacity, 0)
+    rows = jnp.where(grant[:, None], state.data[idx], 0)
+    n_grant = jnp.minimum(req.valid.sum().astype(_I32), limit)
+    head = state.head + n_grant
+    head_ready = head if spec.circular else state.head_ready
+    new = QueueState(state.data, head, state.tail, state.tail_ready,
+                     head_ready)
+
+    body = jnp.concatenate([rows, grant.astype(_U32)[:, None]], axis=1)
+    out, _ = reply(backend, req, body, n, op_name="queue.pop")
+    got = out[:, -1] == 1
+    values = spec.packer.unpack(out[:, :-1])
+    a = _amo_count(spec, promise)
+    costs.record("queue.pop", costs.Cost(A=a, R=n))
+    return new, values, got
+
+
+def local_nonatomic_pop(spec: QueueSpec, state: QueueState, n: int):
+    """Pop n items from this rank's own ring; no collectives (paper 4f)."""
+    avail = state.tail[0] - state.head[0]
+    take = jnp.arange(n, dtype=_I32)
+    got = take < avail
+    idx = jnp.where(got, (state.head[0] + take) % spec.capacity, 0)
+    rows = jnp.where(got[:, None], state.data[idx], 0)
+    n_got = jnp.minimum(jnp.int32(n), avail)
+    head = state.head + n_got
+    head_ready = head if spec.circular else state.head_ready
+    new = QueueState(state.data, head, state.tail, state.tail_ready,
+                     head_ready)
+    costs.record("queue.local_nonatomic_pop", costs.Cost(local=n))
+    return new, spec.packer.unpack(rows), got
+
+
+def local_drain(spec: QueueSpec, state: QueueState):
+    """Read the whole local ring in FIFO order (the ``as_vector`` of the
+    paper's Fig. 3); state unchanged.  Returns (rows, valid)."""
+    take = jnp.arange(spec.capacity, dtype=_I32)
+    avail = state.tail[0] - state.head[0]
+    got = take < avail
+    idx = (state.head[0] + take) % spec.capacity
+    rows = jnp.where(got[:, None], state.data[idx], 0)
+    return spec.packer.unpack(rows), got
+
+
+def resize(backend: Backend, spec: QueueSpec, state: QueueState,
+           new_capacity: int) -> tuple[QueueSpec, QueueState]:
+    """Collective resize (paper cost B + l)."""
+    backend.barrier()
+    rows, got = local_drain(spec, state)
+    lanes = spec.packer.pack(rows)
+    new_spec = dataclasses.replace(spec, capacity=new_capacity)
+    m = jnp.minimum((state.tail - state.head)[0], new_capacity)
+    take = jnp.arange(spec.capacity, dtype=_I32)
+    data = jnp.zeros((new_capacity, spec.lanes), _U32)
+    data = data.at[jnp.where(got & (take < m), take, new_capacity)].set(
+        lanes, mode="drop")
+    z = jnp.zeros((1,), _I32)
+    tail = m[None]
+    costs.record("queue.resize", costs.Cost(B=1, local=int(spec.capacity)))
+    return new_spec, QueueState(data, z, tail,
+                                tail if spec.circular else z, z)
+
+
+def migrate(backend: Backend, spec: QueueSpec, state: QueueState,
+            shift: int = 1) -> QueueState:
+    """Collective migration: ring moves to (rank + shift) % P (B + nW)."""
+    nprocs = backend.nprocs()
+    if nprocs == 1:
+        return state
+    backend.barrier()
+    perm = [(i, (i + shift) % nprocs) for i in range(nprocs)]
+    moved = jax.tree_util.tree_map(lambda x: backend.ppermute(x, perm), state)
+    costs.record("queue.migrate", costs.Cost(B=1, W=int(spec.capacity)))
+    return moved

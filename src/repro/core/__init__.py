@@ -1,0 +1,33 @@
+"""BCL Core: the cross-platform internal DSL, adapted to JAX SPMD.
+
+The paper's BCL Core provides global pointers, remote put/get, remote
+atomics, and barriers over four communication backends (MPI, OpenSHMEM,
+GASNet-EX, UPC++).  On TPU there is no RDMA and no remote atomic; the
+core instead provides the same *semantics* over three JAX lowering
+backends (serial / spmd / gspmd), with:
+
+  * remote get/put      -> owner-routed batched transfers (all_to_all)
+  * fetch-and-add       -> prefix-sum slot reservation (associative scan)
+  * CAS / fetch-and-or  -> owner-computes deterministic resolution
+  * barrier/fence       -> SPMD program order (explicit token when needed)
+
+See DESIGN.md section 2 for the full adaptation table.
+"""
+
+from repro.core.backend import Backend, SerialBackend, SpmdBackend, get_backend
+from repro.core.promises import ConProm
+from repro.core.pointers import GlobalPointer
+from repro.core.exchange import route, RouteResult
+from repro.core import costs
+
+__all__ = [
+    "Backend",
+    "SerialBackend",
+    "SpmdBackend",
+    "get_backend",
+    "ConProm",
+    "GlobalPointer",
+    "route",
+    "RouteResult",
+    "costs",
+]

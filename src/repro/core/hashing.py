@@ -1,0 +1,68 @@
+"""Vectorized integer hashing for BCL containers.
+
+The containers hash 64-bit keys represented as pairs of u32 lanes (JAX
+x64 stays disabled — TPU-realistic).  We use the xxHash/murmur-style
+avalanche finalizer, which is cheap on the VPU (shifts, xors, mults) and
+passes the usual avalanche tests.  ``k`` independent hashes (Bloom filter)
+come from the standard double-hashing construction h1 + i*h2 [Kirsch &
+Mitzenmacher], matching the paper's "k hash functions" at 2 hashes of cost.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_U32 = jnp.uint32
+
+# murmur3 fmix32 constants
+_C1 = jnp.uint32(0x85EBCA6B)
+_C2 = jnp.uint32(0xC2B2AE35)
+# golden-ratio stream-mixing constants
+_PHI = jnp.uint32(0x9E3779B9)
+
+
+def fmix32(h: jax.Array) -> jax.Array:
+    """murmur3 finalizer: full-avalanche mix of a u32 lane."""
+    h = h.astype(_U32)
+    h = h ^ (h >> 16)
+    h = h * _C1
+    h = h ^ (h >> 13)
+    h = h * _C2
+    h = h ^ (h >> 16)
+    return h
+
+
+def hash_u32(x: jax.Array, seed: int = 0) -> jax.Array:
+    """Hash u32 lanes with a seed (vectorized)."""
+    h = x.astype(_U32) ^ (jnp.uint32(seed) * _PHI + jnp.uint32(1))
+    return fmix32(h)
+
+
+def hash_lanes(lanes: jax.Array, seed: int = 0) -> jax.Array:
+    """Hash a (N, L) u32 lane matrix to one u32 per row.
+
+    Horner-style stream mix over lanes followed by the avalanche
+    finalizer.  ``L`` is a static trace-time constant, so the loop
+    unrolls into straight-line VPU code.
+    """
+    if lanes.ndim == 1:
+        lanes = lanes[:, None]
+    n, num_lanes = lanes.shape
+    h = jnp.full((n,), jnp.uint32(seed) * _PHI + jnp.uint32(num_lanes), _U32)
+    for i in range(num_lanes):
+        h = (h ^ fmix32(lanes[:, i].astype(_U32))) * _C1 + jnp.uint32(i + 1)
+    return fmix32(h)
+
+
+def double_hash(lanes: jax.Array, k: int, modulo: int) -> jax.Array:
+    """k hash values per row in [0, modulo) via double hashing.
+
+    Returns (N, k) u32.  ``h2`` is forced odd so that for power-of-two
+    ``modulo`` the probe sequence visits distinct slots.
+    """
+    h1 = hash_lanes(lanes, seed=1)
+    h2 = hash_lanes(lanes, seed=2) | jnp.uint32(1)
+    i = jnp.arange(k, dtype=_U32)[None, :]
+    hk = h1[:, None] + i * h2[:, None]
+    return (hk % jnp.uint32(modulo)).astype(jnp.uint32)

@@ -1,0 +1,51 @@
+"""Global pointers (paper section 3).
+
+A BCL global pointer is ``(rank, offset)`` into that rank's shared memory
+segment.  Here a *segment* is a container shard: every rank holds a local
+``(local_n, ...)`` slice of a logically global ``(nprocs * local_n, ...)``
+array.  A ``GlobalPointer`` is a pytree of i32 arrays, so pointers can be
+stored inside other containers, communicated through the exchange engine,
+and manipulated with ordinary pointer arithmetic — exactly the paper's
+"global pointers are regular data objects".
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class GlobalPointer(NamedTuple):
+    """(rank, offset) pair; both i32 arrays of matching shape."""
+
+    rank: jax.Array
+    offset: jax.Array
+
+    # -- pointer arithmetic (paper: "analogous to local pointer arithmetic")
+
+    def __add__(self, n) -> "GlobalPointer":
+        return GlobalPointer(self.rank, self.offset + jnp.int32(n))
+
+    def __sub__(self, n) -> "GlobalPointer":
+        return GlobalPointer(self.rank, self.offset - jnp.int32(n))
+
+    def is_null(self) -> jax.Array:
+        return self.rank < 0
+
+    @staticmethod
+    def null(shape=()) -> "GlobalPointer":
+        return GlobalPointer(jnp.full(shape, -1, jnp.int32),
+                             jnp.full(shape, 0, jnp.int32))
+
+
+def global_index(ptr: GlobalPointer, local_n: int) -> jax.Array:
+    """Flatten (rank, offset) to a global element index."""
+    return ptr.rank * jnp.int32(local_n) + ptr.offset
+
+
+def from_global_index(idx: jax.Array, local_n: int) -> GlobalPointer:
+    """Split a global element index into (rank, offset) for block layout."""
+    idx = idx.astype(jnp.int32)
+    return GlobalPointer(idx // jnp.int32(local_n), idx % jnp.int32(local_n))

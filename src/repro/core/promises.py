@@ -1,0 +1,83 @@
+"""Concurrency promises (paper section 7).
+
+A concurrency promise is a callsite annotation listing which data-structure
+operations may execute concurrently with the one being issued.  The promise
+lets a container statically select a cheaper implementation with weaker
+atomicity guarantees (paper Tables 3 and 4).
+
+In the C++ original the promise chooses between AMO-heavy and AMO-free code
+paths at template-instantiation time.  Here the promise is a Python-level
+(trace-time) constant, so it selects between different *collective
+schedules and kernels* at jit-trace time — same mechanism, same zero
+runtime cost.
+
+Promise algebra: promises are bitflags and combine with ``|`` exactly as in
+the paper (``ConProm.HashMap.find | ConProm.HashMap.insert``).
+"""
+
+from __future__ import annotations
+
+import enum
+
+
+class Promise(enum.IntFlag):
+    """Operations that may run concurrently with the annotated callsite."""
+
+    NONE = 0
+    FIND = enum.auto()     # hash-map find may be concurrent
+    INSERT = enum.auto()   # hash-map insert may be concurrent
+    PUSH = enum.auto()     # queue push may be concurrent
+    POP = enum.auto()      # queue pop may be concurrent
+    LOCAL = enum.auto()    # op targets this process' own shard exclusively
+    FINE = enum.auto()     # caller wants fine-grained (per-op) issue, no batching
+
+
+class _HashMapProms:
+    """``ConProm.HashMap.*`` namespace (paper spelling)."""
+
+    find = Promise.FIND
+    insert = Promise.INSERT
+    local = Promise.LOCAL
+    find_insert = Promise.FIND | Promise.INSERT
+
+
+class _QueueProms:
+    """``ConProm.CircularQueue.*`` namespace (paper spelling)."""
+
+    push = Promise.PUSH
+    pop = Promise.POP
+    local = Promise.LOCAL
+    push_pop = Promise.PUSH | Promise.POP
+
+
+class ConProm:
+    """Namespace mirroring the paper's ``ConProm::HashMap::find`` etc."""
+
+    HashMap = _HashMapProms
+    CircularQueue = _QueueProms
+    FastQueue = _QueueProms
+
+    NONE = Promise.NONE
+    FIND = Promise.FIND
+    INSERT = Promise.INSERT
+    PUSH = Promise.PUSH
+    POP = Promise.POP
+    LOCAL = Promise.LOCAL
+    FINE = Promise.FINE
+
+
+def fully_atomic_hashmap(promise: Promise) -> bool:
+    """True when the callsite must assume concurrent finds AND inserts."""
+    return bool(promise & Promise.FIND) and bool(promise & Promise.INSERT)
+
+
+def find_only(promise: Promise) -> bool:
+    return bool(promise & Promise.FIND) and not (promise & Promise.INSERT)
+
+
+def local_only(promise: Promise) -> bool:
+    return bool(promise & Promise.LOCAL)
+
+
+def fully_atomic_queue(promise: Promise) -> bool:
+    return bool(promise & Promise.PUSH) and bool(promise & Promise.POP)

@@ -1,0 +1,5 @@
+from repro.data.tokens import TokenStream, synth_batch
+from repro.data.genomics import GenomeSim, extract_kmers, pack_kmers
+
+__all__ = ["TokenStream", "synth_batch", "GenomeSim", "extract_kmers",
+           "pack_kmers"]

@@ -1,0 +1,92 @@
+"""Training-data dedup/counting on the BCL containers (DESIGN.md section 3).
+
+The k-mer counting pipeline re-skinned for LM data: documents hash to
+shingle fingerprints (n-gram rolling hashes); a blocked BloomFilter
+drops first-seen shingles cheaply, and a DHashMap counts repeated ones.
+Documents whose shingles are mostly already-seen are near-duplicates.
+
+Used by the data pipeline as a pre-tokenization filter; this module is
+pure-container logic so it runs serial (tests) or SPMD (shard over the
+corpus) unchanged.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import ShapeDtypeStruct as SDS
+
+from repro.core.backend import Backend
+from repro.containers import bloom as bl
+from repro.containers import hashmap as hm
+from repro.kernels.ops import MODE_ADD
+
+_U32 = jnp.uint32
+
+
+@dataclasses.dataclass(frozen=True)
+class DedupSpec:
+    ngram: int = 8
+    nbits: int = 1 << 22
+    table_capacity: int = 1 << 16
+    dup_threshold: float = 0.5      # duplicate if > this frac seen before
+
+
+class Deduper:
+    """Stateful wrapper (host-side) over the bloom+hashmap pair."""
+
+    def __init__(self, backend: Backend, spec: DedupSpec = DedupSpec()):
+        self.backend = backend
+        self.spec = spec
+        kspec = {"hi": SDS((), jnp.uint32), "lo": SDS((), jnp.uint32)}
+        self.bspec, self.bstate = bl.bloom_create(
+            backend, spec.nbits, kspec, k=4)
+        self.hspec, self.hstate = hm.hashmap_create(
+            backend, spec.table_capacity, kspec, SDS((), jnp.uint32),
+            block_size=64)
+
+    def shingles(self, tokens: np.ndarray) -> dict:
+        """(B, T) token ids -> rolling n-gram fingerprints (B, T-n+1)."""
+        b, t = tokens.shape
+        n = self.spec.ngram
+        h = np.zeros((b, t - n + 1), np.uint64)
+        for i in range(n):
+            h = h * np.uint64(1099511628211) ^ \
+                tokens[:, i:t - n + 1 + i].astype(np.uint64)
+        return {"hi": jnp.asarray((h >> np.uint64(32)).astype(np.uint32)),
+                "lo": jnp.asarray((h & np.uint64(0xFFFFFFFF))
+                                  .astype(np.uint32))}
+
+    def observe(self, tokens: np.ndarray):
+        """Ingest a batch of documents.
+
+        Returns (dup_frac (B,), is_duplicate (B,)) and updates the
+        filter + count table (repeated shingles only — the Bloom
+        pre-pass keeps singletons out, the paper's memory win).
+        """
+        b, t = tokens.shape
+        sh = self.shingles(tokens)
+        n_sh = sh["hi"].shape[1]
+        flat = {k: v.reshape(-1) for k, v in sh.items()}
+        m = b * n_sh
+
+        self.bstate, seen = bl.insert(self.backend, self.bspec, self.bstate,
+                                      flat, capacity=m)
+        self.hstate, _ = hm.insert(self.backend, self.hspec, self.hstate,
+                                   flat, jnp.ones((m,), _U32), capacity=m,
+                                   valid=seen, mode=MODE_ADD, attempts=3)
+        dup_frac = np.asarray(seen).reshape(b, n_sh).mean(axis=1)
+        return dup_frac, dup_frac > self.spec.dup_threshold
+
+    def count_of(self, tokens: np.ndarray):
+        """Occurrence counts (beyond first sighting) of a doc's shingles."""
+        sh = self.shingles(tokens)
+        flat = {k: v.reshape(-1) for k, v in sh.items()}
+        m = flat["hi"].shape[0]
+        self.hstate, v, found = hm.find(self.backend, self.hspec,
+                                        self.hstate, flat, capacity=m)
+        counts = np.where(np.asarray(found), np.asarray(v) + 1, 1)
+        return counts.reshape(tokens.shape[0], -1)

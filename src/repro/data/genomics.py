@@ -1,0 +1,90 @@
+"""Synthetic genomics data for the Meraculous / k-mer benchmarks.
+
+Generates a random genome, error-prone reads, and packed k-mers exactly
+shaped like the paper's chr14 workflow: k-mer counting feeds a histogram
+hash table (+ Bloom pre-filter), contig generation builds a de Bruijn
+hash table keyed by k-mer with (prev_base, next_base) extensions and
+walks it.
+
+K-mers pack 2 bits/base into u32 lanes (ObjectContainer-friendly:
+k<=31 -> 2 lanes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+_BASES = np.array(list("ACGT"))
+
+
+@dataclasses.dataclass
+class GenomeSim:
+    genome_len: int = 1 << 16
+    read_len: int = 100
+    coverage: int = 8
+    error_rate: float = 0.01
+    seed: int = 0
+
+    def genome(self) -> np.ndarray:
+        rng = np.random.default_rng(self.seed)
+        return rng.integers(0, 4, self.genome_len).astype(np.uint8)
+
+    def reads(self) -> np.ndarray:
+        """(n_reads, read_len) u8 base codes with substitution errors."""
+        rng = np.random.default_rng(self.seed + 1)
+        g = self.genome()
+        n = self.genome_len * self.coverage // self.read_len
+        starts = rng.integers(0, self.genome_len - self.read_len, n)
+        idx = starts[:, None] + np.arange(self.read_len)[None]
+        reads = g[idx]
+        errs = rng.random(reads.shape) < self.error_rate
+        reads = np.where(errs, (reads + rng.integers(1, 4, reads.shape)) % 4,
+                         reads).astype(np.uint8)
+        return reads
+
+
+def extract_kmers(seqs: np.ndarray, k: int) -> np.ndarray:
+    """(N, L) base codes -> (M, k) all k-mers from every sequence."""
+    n, length = seqs.shape
+    m = length - k + 1
+    idx = np.arange(m)[:, None] + np.arange(k)[None]
+    return seqs[:, idx].reshape(n * m, k)
+
+
+def pack_kmers(kmers: np.ndarray) -> np.ndarray:
+    """(M, k<=31) 2-bit pack into (M, 2) u32 lanes (the key record)."""
+    m, k = kmers.shape
+    if k > 31:
+        raise ValueError("k must be <= 31 for 2-lane packing")
+    val = np.zeros((m,), np.uint64)
+    for i in range(k):
+        val = (val << np.uint64(2)) | kmers[:, i].astype(np.uint64)
+    lo = (val & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    hi = (val >> np.uint64(32)).astype(np.uint32)
+    return np.stack([hi, lo], axis=1)
+
+
+def unpack_kmers(lanes: np.ndarray, k: int) -> np.ndarray:
+    val = (lanes[:, 0].astype(np.uint64) << np.uint64(32)) | \
+        lanes[:, 1].astype(np.uint64)
+    out = np.zeros((lanes.shape[0], k), np.uint8)
+    for i in range(k - 1, -1, -1):
+        out[:, i] = (val & np.uint64(3)).astype(np.uint8)
+        val >>= np.uint64(2)
+    return out
+
+
+def kmer_neighbors(lanes: np.ndarray, k: int):
+    """For contig walking: the 4 possible next k-mers of each k-mer."""
+    val = (lanes[:, 0].astype(np.uint64) << np.uint64(32)) | \
+        lanes[:, 1].astype(np.uint64)
+    mask = (np.uint64(1) << np.uint64(2 * k)) - np.uint64(1)
+    out = []
+    for b in range(4):
+        nxt = ((val << np.uint64(2)) | np.uint64(b)) & mask
+        out.append(np.stack([(nxt >> np.uint64(32)).astype(np.uint32),
+                             (nxt & np.uint64(0xFFFFFFFF)).astype(np.uint32)],
+                            axis=1))
+    return out

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel ships three ways (see ops.py): a sequential-semantics oracle
+(ref.py), a vectorized jnp implementation, and the Pallas kernel proper
+(pl.pallas_call + BlockSpec VMEM tiling, interpret=True on CPU).
+
+  hash_probe       blocked open-addressing insert/find (DHashMap)
+  bloom_kernel     blocked Bloom hashing + membership
+  binning          destination histogram (exchange engine / ISx)
+  flash_attention  fused online-softmax attention (LM hot spot)
+"""
+
+from repro.kernels import ops, ref  # noqa: F401

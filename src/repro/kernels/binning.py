@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: destination histogram for the exchange engine / ISx.
+
+The distribution stage of ISx (paper section 9.1) bins every key to a
+destination bucket.  On TPU the per-tile histogram is a one-hot
+contraction — an (1, TM) x (TM, NB) matmul that runs on the MXU — with
+partial histograms accumulated across grid steps in the output block
+(all grid steps map to the same output tile; step 0 initializes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_I32 = jnp.int32
+_F32 = jnp.float32
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _hist_kernel(bins_ref, valid_ref, out_ref, *, nbins: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    bins = bins_ref[...].astype(_I32)            # (TM,)
+    valid = valid_ref[...].astype(_F32)          # (TM,)
+    onehot = (bins[:, None] ==
+              jax.lax.broadcasted_iota(_I32, (bins.shape[0], nbins), 1))
+    # (1, TM) @ (TM, NB) on the MXU
+    part = jnp.dot(valid[None, :], onehot.astype(_F32),
+                   preferred_element_type=_F32)[0]
+    out_ref[...] = out_ref[...] + part.astype(_I32)
+
+
+def histogram(bins: jax.Array, nbins: int, valid: jax.Array | None = None,
+              tile: int = 2048) -> jax.Array:
+    """Count items per destination bin; oracle: ref.bin_histogram_ref."""
+    m = bins.shape[0]
+    if valid is None:
+        valid = jnp.ones((m,), bool)
+    pad = (-m) % tile
+    if pad:
+        bins = jnp.pad(bins, (0, pad))
+        valid = jnp.pad(valid, (0, pad))
+    mp = bins.shape[0]
+    kern = functools.partial(_hist_kernel, nbins=nbins)
+    return pl.pallas_call(
+        kern,
+        grid=(mp // tile,),
+        in_specs=[pl.BlockSpec((tile,), lambda i: (i,)),
+                  pl.BlockSpec((tile,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((nbins,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((nbins,), _I32),
+        interpret=_interpret(),
+    )(bins.astype(_I32), valid)

@@ -1,0 +1,256 @@
+"""Public kernel API with implementation dispatch.
+
+Every op comes in up to three implementations:
+
+  impl="oracle"  sequential-semantics pure-jnp oracle (ref.py)
+  impl="jnp"     vectorized pure-jnp (sort + segment ops) — the CPU
+                 production path and the second correctness witness
+  impl="pallas"  the Pallas TPU kernel (interpret=True on CPU)
+
+``impl="auto"`` picks "pallas" on TPU and "jnp" elsewhere.  Containers
+call through this module only.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.ref import (FREE, READY, STATE_MASK, bucket_state,  # noqa: F401
+                               MODE_SET, MODE_ADD, MODE_KEEP)
+
+_U32 = jnp.uint32
+_I32 = jnp.int32
+
+
+def default_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+def _resolve(impl: str) -> str:
+    return default_impl() if impl == "auto" else impl
+
+
+# --------------------------------------------------------------------------
+# segmented scan helpers
+# --------------------------------------------------------------------------
+
+def seg_exclusive_or_scan(words: jax.Array, seg_start: jax.Array) -> jax.Array:
+    """Exclusive segmented bitwise-OR scan over rows (segments contiguous).
+
+    words: (M, L) u32; seg_start: (M,) bool marking segment heads.
+    Row i receives the OR of earlier rows in its segment (0 at heads).
+    """
+    def combine(a, b):
+        fa, va = a
+        fb, vb = b
+        return fa | fb, jnp.where(fb[:, None], vb, va | vb)
+
+    flags = seg_start
+    incl_f, incl_v = jax.lax.associative_scan(combine, (flags, words))
+    del incl_f
+    # exclusive = inclusive shifted down by one, zeroed at segment heads
+    shifted = jnp.concatenate([jnp.zeros_like(words[:1]), incl_v[:-1]], axis=0)
+    return jnp.where(seg_start[:, None], jnp.zeros_like(words), shifted)
+
+
+def _lexsort_items(qblock, qkeys, qvalid, nb):
+    """Stable order grouping items by (block, key lanes); invalid last."""
+    b = jnp.where(qvalid, qblock.astype(_I32), nb)
+    keys = [qkeys[:, i] for i in range(qkeys.shape[1] - 1, -1, -1)] + [b]
+    order = jnp.lexsort(keys)
+    return order, b[order]
+
+
+# --------------------------------------------------------------------------
+# blocked hash table: bulk insert
+# --------------------------------------------------------------------------
+
+def bulk_insert(tkeys, tvals, status, qblock, qkeys, qvals, qvalid,
+                mode: int = MODE_SET, impl: str = "auto"):
+    """Insert a batch into the blocked table; see ref.hash_probe_insert_ref.
+
+    Vectorized semantics match the sequential oracle for any batch,
+    including duplicate keys (SET keeps the last duplicate's value, ADD
+    accumulates, KEEP keeps the first).
+    Returns (tkeys, tvals, status, success(M,)).
+    """
+    impl = _resolve(impl)
+    if impl == "oracle":
+        return _ref.hash_probe_insert_ref(tkeys, tvals, status, qblock,
+                                          qkeys, qvals, qvalid, mode)
+    if impl == "pallas":
+        from repro.kernels import hash_probe
+        return hash_probe.insert(tkeys, tvals, status, qblock, qkeys,
+                                 qvals, qvalid, mode)
+
+    nb, bsz, lk = tkeys.shape
+    m = qblock.shape[0]
+    lv = qvals.shape[1]
+
+    order, sb = _lexsort_items(qblock, qkeys, qvalid, nb)
+    sk = qkeys[order]
+    sv = qvals[order]
+    svalid = qvalid[order]
+    idx = jnp.arange(m, dtype=_I32)
+
+    prev_same = jnp.concatenate([
+        jnp.zeros((1,), bool),
+        (sb[1:] == sb[:-1]) & (sk[1:] == sk[:-1]).all(axis=1)])
+    is_leader = svalid & ~prev_same
+    group_id = jnp.cumsum(is_leader.astype(_I32)) - 1          # (M,)
+    group_id = jnp.maximum(group_id, 0)
+
+    # combine duplicate values per group, honoring batch order
+    if mode == MODE_ADD:
+        gval = jnp.zeros((m, lv), _U32).at[group_id].add(
+            jnp.where(svalid[:, None], sv, 0))
+    elif mode == MODE_SET:   # last duplicate wins
+        last_pos = jnp.full((m,), -1, _I32).at[group_id].max(
+            jnp.where(svalid, idx, -1))
+        gval = sv[jnp.maximum(last_pos, 0)]
+    else:                     # MODE_KEEP: first duplicate (== leader row)
+        gval = jnp.zeros((m, lv), _U32).at[group_id].add(
+            jnp.where((is_leader & svalid)[:, None], sv, 0))
+    leader_val = gval[group_id]   # value each leader should write
+
+    # probe each leader's block
+    blk_keys = tkeys[sb % nb]                                   # (M, B, Lk)
+    blk_stat = status[sb % nb]                                  # (M, B)
+    match = (blk_keys == sk[:, None, :]).all(axis=2) & (bucket_state(blk_stat) == READY)
+    found = match.any(axis=1) & is_leader
+    mslot = jnp.argmax(match, axis=1).astype(_I32)
+
+    # free-slot ranking per block
+    free_mask = bucket_state(status) == FREE                                  # (nb, B)
+    free_order = jnp.argsort(~free_mask, axis=1).astype(_I32)   # free first
+    nfree = free_mask.sum(axis=1).astype(_I32)                  # (nb,)
+
+    new_leader = is_leader & ~found
+    # Rank each new leader within its block by ORIGINAL batch position, so
+    # free slots are claimed in the same order the sequential oracle claims
+    # them (this fixes which items fail when a block overflows).
+    orig_idx = order.astype(_I32)
+    ord2 = jnp.lexsort((jnp.where(new_leader, orig_idx, m),
+                        jnp.where(new_leader, sb, nb)))
+    nl2 = new_leader[ord2]
+    sb2 = jnp.where(nl2, sb[ord2], nb)
+    blk_change2 = jnp.concatenate([jnp.ones((1,), bool), sb2[1:] != sb2[:-1]])
+    seg2 = jnp.cumsum(blk_change2.astype(_I32)) - 1
+    incl2 = jnp.cumsum(nl2.astype(_I32))
+    ex2 = incl2 - nl2.astype(_I32)
+    base2 = jnp.zeros((m,), _I32).at[seg2].add(jnp.where(blk_change2, ex2, 0))
+    r2 = ex2 - base2[seg2]
+    r = jnp.zeros((m,), _I32).at[ord2].set(r2)                  # (M,)
+
+    sb_c = jnp.clip(sb, 0, nb - 1)
+    has_room = r < nfree[sb_c]
+    slot_new = free_order[sb_c, jnp.clip(r, 0, bsz - 1)]
+    slot = jnp.where(found, mslot, slot_new)
+    ok_leader = is_leader & (found | (new_leader & has_room))
+
+    # value to store
+    old_val = tvals[sb_c, slot]
+    if mode == MODE_ADD:
+        store_val = jnp.where(found[:, None], old_val + leader_val, leader_val)
+    elif mode == MODE_KEEP:
+        store_val = jnp.where(found[:, None], old_val, leader_val)
+    else:
+        store_val = leader_val
+
+    wb = jnp.where(ok_leader, sb_c, nb)    # drop sentinel
+    tkeys = tkeys.at[wb, slot].set(sk, mode="drop")
+    tvals = tvals.at[wb, slot].set(store_val, mode="drop")
+    old_st = status[sb_c, slot]
+    status = status.at[wb, slot].set((old_st & ~STATE_MASK) | READY,
+                                     mode="drop")
+
+    # per-item success = its group leader's success
+    succ_g = jnp.zeros((m,), _I32).at[group_id].add(
+        (ok_leader & is_leader).astype(_I32))
+    succ_sorted = (succ_g[group_id] > 0) & svalid
+    success = jnp.zeros((m,), bool).at[order].set(succ_sorted)
+    return tkeys, tvals, status, success
+
+
+def bulk_find(tkeys, tvals, status, qblock, qkeys, qvalid, impl: str = "auto"):
+    """Batch find; returns (found(M,), values(M,Lv))."""
+    impl = _resolve(impl)
+    if impl == "pallas":
+        from repro.kernels import hash_probe
+        return hash_probe.find(tkeys, tvals, status, qblock, qkeys, qvalid)
+    return _ref.hash_probe_find_ref(tkeys, tvals, status, qblock, qkeys, qvalid)
+
+
+# --------------------------------------------------------------------------
+# blocked Bloom filter
+# --------------------------------------------------------------------------
+
+def bloom_insert(filter_words, qblock, qwords, qvalid, impl: str = "auto"):
+    """Batch blocked-Bloom insert with first-inserter-wins atomicity.
+
+    Returns (filter_words, already_present(M,)).
+    """
+    impl = _resolve(impl)
+    if impl == "oracle":
+        return _ref.bloom_insert_ref(filter_words, qblock, qwords, qvalid)
+
+    nb = filter_words.shape[0]
+    m = qblock.shape[0]
+    b = jnp.where(qvalid, qblock.astype(_I32), nb)
+    order = jnp.argsort(b, stable=True)
+    sb = b[order]
+    sw = qwords[order]
+    svalid = qvalid[order]
+
+    seg_start = jnp.concatenate([jnp.ones((1,), bool), sb[1:] != sb[:-1]])
+    ex_or = seg_exclusive_or_scan(jnp.where(svalid[:, None], sw, 0), seg_start)
+
+    sb_c = jnp.clip(sb, 0, nb - 1)
+    prior = filter_words[sb_c] | ex_or
+    already = ((prior & sw) == sw).all(axis=1) & svalid
+
+    # inclusive OR per segment lands on the segment's last row
+    incl_or = ex_or | jnp.where(svalid[:, None], sw, 0)
+    is_last = jnp.concatenate([sb[1:] != sb[:-1], jnp.ones((1,), bool)])
+    wb = jnp.where(is_last & (sb < nb), sb_c, nb)
+    new_words = filter_words[sb_c] | incl_or
+    if impl == "pallas":
+        from repro.kernels import bloom_kernel
+        already = bloom_kernel.membership(prior, sw, svalid)
+    filter_words = filter_words.at[wb].set(new_words, mode="drop")
+
+    out = jnp.zeros((m,), bool).at[order].set(already)
+    return filter_words, out
+
+
+def bloom_find(filter_words, qblock, qwords, qvalid, impl: str = "auto"):
+    return _ref.bloom_find_ref(filter_words, qblock, qwords, qvalid)
+
+
+# --------------------------------------------------------------------------
+# binning histogram
+# --------------------------------------------------------------------------
+
+def bin_histogram(bins, nbins: int, valid=None, impl: str = "auto"):
+    impl = _resolve(impl)
+    if impl == "pallas":
+        from repro.kernels import binning
+        return binning.histogram(bins, nbins, valid)
+    return _ref.bin_histogram_ref(bins, nbins, valid)
+
+
+# --------------------------------------------------------------------------
+# flash attention
+# --------------------------------------------------------------------------
+
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    impl: str = "auto"):
+    impl = _resolve(impl)
+    if impl == "pallas":
+        from repro.kernels import flash_attention as fa
+        return fa.flash_attention(q, k, v, causal=causal, window=window)
+    return _ref.flash_attention_ref(q, k, v, causal=causal, window=window)

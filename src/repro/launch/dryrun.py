@@ -1,0 +1,215 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input shape) cell this lowers + compiles the
+real step function (train_step / prefill_step / serve_step) against
+ShapeDtypeStruct inputs on the production mesh — 16x16 single-pod and
+2x16x16 multi-pod — and extracts:
+
+  * memory_analysis()      argument/output/temp bytes per device
+  * cost_analysis()        HLO FLOPs + bytes accessed
+  * collective wire bytes  parsed from the compiled HLO (roofline.py)
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+  python -m repro.launch.dryrun --all --mesh both --out dryrun.json
+
+The two os.environ lines above MUST stay the first statements: jax locks
+the device count at first init.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import (ARCH_IDS, SHAPES, get_config, input_specs,
+                           shape_applicable)
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh, HBM_PER_CHIP
+from repro.launch.steps import (batch_shardings, cache_shardings,
+                                make_prefill_step, make_serve_step,
+                                make_train_step, train_shardings)
+
+
+def lower_cell(cfg, shape, mesh, verbose: bool = True):
+    """Lower + compile one (arch, shape) on ``mesh``; return the record."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.models.sharding import Axes
+    axes = Axes.from_mesh(mesh)
+    specs = input_specs(cfg, shape)
+    t0 = time.time()
+
+    from repro.launch import jaxpr_stats
+    axis_env = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    if shape.kind == "train":
+        pshape, oshape, psh, osh = train_shardings(cfg, mesh)
+        bsh = batch_shardings(cfg, mesh, specs)
+        step = make_train_step(cfg, mesh)
+        lowered = jax.jit(step,
+                          in_shardings=(psh, osh, bsh),
+                          out_shardings=(psh, osh, None),
+                          donate_argnums=(0, 1)).lower(
+            pshape, oshape, specs)
+        st_mult, st_once = jaxpr_stats.analyze_pair(
+            step, pshape, oshape, specs, axis_env=axis_env)
+    elif shape.kind == "prefill":
+        pshape, _, psh, _ = train_shardings(cfg, mesh)
+        bsh = batch_shardings(cfg, mesh, specs)
+        step = make_prefill_step(cfg, mesh, cache_len=shape.seq_len)
+        lowered = jax.jit(step, in_shardings=(psh, bsh)).lower(
+            pshape, specs)
+        st_mult, st_once = jaxpr_stats.analyze_pair(
+            step, pshape, specs, axis_env=axis_env)
+    else:  # decode
+        pshape, _, psh, _ = train_shardings(cfg, mesh)
+        cache_shape = specs["cache"]
+        csh = cache_shardings(cfg, mesh, cache_shape)
+        from repro.launch.steps import _n_data
+        b_tok = specs["tokens"].shape[0]
+        lead = axes.data if b_tok % _n_data(mesh, axes) == 0 else None
+        tok_sh = NamedSharding(mesh, P(lead, None))
+        step = make_serve_step(cfg, mesh)
+        lowered = jax.jit(step,
+                          in_shardings=(psh, csh, tok_sh),
+                          donate_argnums=(1,)).lower(
+            pshape, cache_shape, specs["tokens"])
+        st_mult, st_once = jaxpr_stats.analyze_pair(
+            step, pshape, cache_shape, specs["tokens"], axis_env=axis_env)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = rl.parse_collectives(hlo, mesh.size)
+    model_flops = rl.model_flops_for(cfg, shape)
+
+    # Reconcile collective bytes: the HLO parse sees GSPMD-inserted
+    # collectives but counts scan bodies once; the jaxpr pass multiplies
+    # our explicit (BCL exchange) collectives by trip count.  Correction
+    # = the trips-minus-once delta of the explicit set (global bytes).
+    scan_correction = st_mult.total_wire() - st_once.total_wire()
+    wire_total = coll.total_wire() + max(scan_correction, 0.0)
+
+    roof = rl.compute_roofline(
+        flops=st_mult.flops / mesh.size,            # analytic, scan-exact
+        hbm_bytes=st_mult.dot_bytes / mesh.size,    # fusion-aware estimate
+        wire_bytes=wire_total / mesh.size,
+        n_chips=mesh.size,
+        model_flops=model_flops)
+
+    mem = {
+        "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+        "output_bytes": getattr(ma, "output_size_in_bytes", None),
+        "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+        "alias_bytes": getattr(ma, "alias_size_in_bytes", None),
+        "code_bytes": getattr(ma, "generated_code_size_in_bytes", None),
+    }
+    live = (mem["argument_bytes"] or 0) + (mem["temp_bytes"] or 0) \
+        + (mem["output_bytes"] or 0) - (mem["alias_bytes"] or 0)
+    rec = {
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "n_devices": mesh.size,
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": mem,
+        "per_device_live_bytes": live,
+        "fits_16g": bool(live <= HBM_PER_CHIP),
+        "xla_flops_per_device_raw": float(ca.get("flops", 0.0)),
+        "xla_bytes_per_device_raw": float(ca.get("bytes accessed", 0.0)),
+        "analytic_flops_total": st_mult.flops,
+        "analytic_hbm_bytes_total": st_mult.dot_bytes,
+        "collectives_hlo": {
+            "counts": coll.counts,
+            "payload_bytes": coll.payload_bytes,
+            "wire_bytes": coll.wire_bytes,
+        },
+        "collectives_jaxpr": {
+            "counts": st_mult.coll_counts,
+            "payload_bytes": st_mult.coll_payload,
+            "wire_bytes": st_mult.coll_wire,
+        },
+        "wire_bytes_total": wire_total,
+        "roofline": roof.to_dict(),
+    }
+    if verbose:
+        print(f"    memory_analysis: {ma}")
+        print(f"    cost_analysis(raw): flops={rec['xla_flops_per_device_raw']:.3e} "
+              f"bytes={rec['xla_bytes_per_device_raw']:.3e}")
+        print(f"    collectives: {coll.counts} wire={coll.total_wire():.3e}B")
+        print(f"    roofline[s]: compute={roof.compute_s:.4f} "
+              f"memory={roof.memory_s:.4f} "
+              f"collective={roof.collective_s:.4f} -> {roof.dominant}")
+    return rec
+
+
+def run(arch_ids, shape_names, meshes, out_path, verbose=True):
+    results = {}
+    for mesh_name in meshes:
+        mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+        for arch in arch_ids:
+            cfg = get_config(arch)
+            for sname in shape_names:
+                shape = SHAPES[sname]
+                key = f"{arch}|{sname}|{mesh_name}"
+                ok, reason = shape_applicable(cfg, shape)
+                if not ok:
+                    results[key] = {"status": "skipped", "reason": reason}
+                    print(f"[skip] {key}: {reason}")
+                    continue
+                print(f"[cell] {key} ...", flush=True)
+                try:
+                    rec = lower_cell(cfg, shape, mesh, verbose=verbose)
+                    rec["status"] = "ok"
+                    results[key] = rec
+                    print(f"  OK lower={rec['lower_s']}s "
+                          f"compile={rec['compile_s']}s "
+                          f"live={rec['per_device_live_bytes']/2**30:.2f}GiB "
+                          f"dominant={rec['roofline']['dominant']}")
+                except Exception as e:  # a failure here is a bug in our system
+                    results[key] = {"status": "error",
+                                    "error": f"{type(e).__name__}: {e}"}
+                    print(f"  FAIL {type(e).__name__}: {e}")
+                    if verbose:
+                        traceback.print_exc(limit=8)
+                if out_path:
+                    with open(out_path, "w") as f:
+                        json.dump(results, f, indent=1)
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    results = run(archs, shapes, meshes, args.out, verbose=not args.quiet)
+    n_ok = sum(1 for r in results.values() if r.get("status") == "ok")
+    n_skip = sum(1 for r in results.values() if r.get("status") == "skipped")
+    n_err = sum(1 for r in results.values() if r.get("status") == "error")
+    print(f"\ndry-run cells: {n_ok} ok, {n_skip} skipped (documented), "
+          f"{n_err} errors")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,131 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Perf hillclimbing driver (EXPERIMENTS.md section Perf).
+
+Runs a named (arch, shape) cell with a sequence of config overrides,
+re-lowering + re-analyzing after each change, and emits the
+hypothesis -> change -> before/after log as JSON.
+
+  PYTHONPATH=src python -m repro.launch.hillclimb deepseek_train
+"""
+
+import dataclasses
+import json
+import sys
+
+from repro.configs import SHAPES, get_config
+from repro.launch.dryrun import lower_cell
+from repro.launch.mesh import make_production_mesh
+
+
+# Each plan: (cell_name, arch, shape, [(change_name, hypothesis, overrides)])
+# Overrides are CUMULATIVE: each step keeps the previous ones unless
+# explicitly reverted (refuted hypotheses pass revert=True).
+PLANS = {
+    "deepseek_train": (
+        "deepseek-v3-671b", "train_4k", [
+            ("bf16_exchange",
+             "dispatch/combine payloads are f32; bf16 packing halves both "
+             "the all-to-all wire bytes and the route-buffer HBM traffic "
+             "of the dominant memory term (expect ~2x on exchange bytes, "
+             "memory term -15-30%)",
+             {"moe_payload_dtype": "bfloat16"}),
+            ("tight_capacity",
+             "exchange slot slack 1.3 pads every (src,dst) bucket; 1.15 "
+             "cuts route buffers + binned expert batch ~12% with the same "
+             "drop risk profile at init-time routing entropy",
+             {"moe_capacity_slack": 1.15}),
+            ("grad_accum8",
+             "237GiB/dev live is activation-dominated; 8 microbatches cut "
+             "live activations ~8x toward the 16GiB budget; memory TERM "
+             "(traffic) should stay ~flat (weights re-read 8x is only "
+             "~40GB/chip)",
+             {"grad_accum": 8}),
+            ("remat_nothing",
+             "default checkpoint policy saves block inputs; "
+             "nothing_saveable recomputes everything, trading ~17% more "
+             "compute for another big live-bytes cut",
+             {"remat_policy": "nothing"}),
+            ("bf16_attn_probs",
+             "attention probability matrices (B,128H,qb,kb) are the "
+             "largest f32 operands left in the memory term; casting the "
+             "PV matmul to bf16 (f32 accumulate) halves those bytes "
+             "(expect memory term -5-15%, no accuracy loss at f32 "
+             "normalizer)",
+             {"attn_probs_bf16": True}),
+        ]),
+    "deepseek_decode": (
+        "deepseek-v3-671b", "decode_32k", [
+            ("mla_absorb",
+             "naive MLA decode re-expands K/V for all 32k cached "
+             "positions each step: ~2*B*S*r*H*(nope+v) flops and the "
+             "matching HBM traffic; latent-space absorption cuts compute "
+             "~100x and memory term several-fold (useful ratio 0.00 -> "
+             "O(0.01), both terms collapse toward the cache-read floor)",
+             {"mla_absorb": True}),
+            ("bf16_exchange",
+             "after absorption the MoE dispatch buffers are a larger "
+             "share of remaining traffic; bf16 halves them",
+             {"moe_payload_dtype": "bfloat16"}),
+        ]),
+    "arctic_train": (
+        "arctic-480b", "train_4k", [
+            ("bf16_exchange",
+             "the collective term is all-to-all dispatch payloads (f32 "
+             "lanes x top-2 x 35 layers x fwd+bwd); bf16 packing halves "
+             "wire bytes -> collective term ~ -45%",
+             {"moe_payload_dtype": "bfloat16"}),
+            ("tight_capacity",
+             "slack 1.5 -> 1.15: route buffers and expert padding shrink "
+             "~23%; collective AND memory terms drop proportionally",
+             {"moe_capacity_slack": 1.15}),
+            ("grad_accum4",
+             "44.5GiB/dev live -> ~4x cut from microbatching; terms flat",
+             {"grad_accum": 4}),
+        ]),
+}
+
+
+def run_plan(name: str, out_path: str | None = None):
+    arch, shape_name, steps = PLANS[name]
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=False)
+    log = []
+
+    cfg = get_config(arch)
+    print(f"[baseline] {arch} x {shape_name}")
+    base = lower_cell(cfg, shape, mesh, verbose=True)
+    base["change"] = "baseline (paper-faithful)"
+    log.append(base)
+
+    overrides = {}
+    for change, hypothesis, delta in steps:
+        overrides.update(delta)
+        cfg_i = dataclasses.replace(get_config(arch), **overrides)
+        print(f"\n[change] {change}: {delta}")
+        print(f"  hypothesis: {hypothesis}")
+        rec = lower_cell(cfg_i, shape, mesh, verbose=True)
+        rec["change"] = change
+        rec["hypothesis"] = hypothesis
+        rec["overrides"] = dict(overrides)
+        prev = log[-1]["roofline"]
+        cur = rec["roofline"]
+        for term in ("compute_s", "memory_s", "collective_s"):
+            d = (cur[term] - prev[term]) / max(prev[term], 1e-12)
+            print(f"  {term}: {prev[term]:.4f} -> {cur[term]:.4f} "
+                  f"({d:+.1%})")
+        print(f"  live: {log[-1]['per_device_live_bytes']/2**30:.1f} -> "
+              f"{rec['per_device_live_bytes']/2**30:.1f} GiB")
+        log.append(rec)
+
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(log, f, indent=1)
+    return log
+
+
+if __name__ == "__main__":
+    name = sys.argv[1]
+    out = sys.argv[2] if len(sys.argv) > 2 else f"hillclimb_{name}.json"
+    run_plan(name, out)

@@ -1,0 +1,272 @@
+"""Jaxpr-level cost analysis with correct scan trip-count multiplication.
+
+Why this exists: XLA's ``compiled.cost_analysis()`` counts a while-loop
+body exactly ONCE, so any scanned computation (scan-over-layers, the
+blockwise-attention KV scan, SSM time scans, the chunked-vocab xent) is
+undercounted by its trip count — for a 61-layer scanned model that is a
+~60x error in the compute term.  The dry-run therefore derives:
+
+  flops       dot_general/einsum FLOPs (+1 per output element for cheap
+              elementwise ops), multiplied through scan lengths, and
+              multiplied by participant count inside shard_map bodies
+              (global totals).
+  dot_bytes   a fusion-aware HBM-traffic estimate: operand/result bytes
+              of matmuls, gathers, scatters and scan carries — the
+              tensors that must actually round-trip HBM.  Elementwise
+              chains are assumed fused (free), which is what XLA does.
+  coll_bytes  explicit collective payloads (psum / all_gather /
+              all_to_all / ppermute / psum_scatter) with ring-model wire
+              factors and scan multipliers — this captures the BCL
+              exchange traffic inside the layer scan that the HLO text
+              parse sees only once.
+
+The HLO-text parse (roofline.parse_collectives) still runs: it is the
+only view of GSPMD-inserted collectives (gradient sync, resharding).
+EXPERIMENTS.md reports both and explains the reconciliation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import numpy as np
+from jax.extend import core as jcore
+
+
+@dataclasses.dataclass
+class Stats:
+    flops: float = 0.0
+    dot_bytes: float = 0.0
+    coll_wire: dict = dataclasses.field(default_factory=dict)
+    coll_payload: dict = dataclasses.field(default_factory=dict)
+    coll_counts: dict = dataclasses.field(default_factory=dict)
+    count_trips: bool = True   # multiply scan bodies by trip count
+
+    def add_coll(self, kind: str, payload: float, wire: float, n: float):
+        self.coll_wire[kind] = self.coll_wire.get(kind, 0.0) + wire
+        self.coll_payload[kind] = self.coll_payload.get(kind, 0.0) + payload
+        self.coll_counts[kind] = self.coll_counts.get(kind, 0.0) + n
+
+    def total_wire(self) -> float:
+        return sum(self.coll_wire.values())
+
+
+def _aval_bytes(aval) -> float:
+    try:
+        return float(np.prod(aval.shape, dtype=np.float64) *
+                     np.dtype(aval.dtype).itemsize)
+    except Exception:
+        return 0.0
+
+
+def _aval_size(aval) -> float:
+    try:
+        return float(np.prod(aval.shape, dtype=np.float64))
+    except Exception:
+        return 0.0
+
+
+_CHEAP_ELEMENTWISE = {
+    "add", "sub", "mul", "div", "max", "min", "exp", "log", "tanh",
+    "logistic", "rsqrt", "sqrt", "neg", "sign", "floor", "ceil", "round",
+    "erf", "pow", "integer_pow", "select_n", "and", "or", "xor", "not",
+    "cos", "sin",
+}
+
+_REDUCES = {"reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
+            "reduce_and", "reduce_or", "argmax", "argmin",
+            "cumsum", "cummax", "cumlogsumexp"}
+
+
+def _axis_sizes(axis_names, axis_env: dict) -> int:
+    if isinstance(axis_names, (str,)):
+        axis_names = (axis_names,)
+    size = 1
+    for a in axis_names or ():
+        size *= axis_env.get(a, 1)
+    return size
+
+
+def _dot_flops(eqn) -> float:
+    a, b = eqn.invars[0].aval, eqn.invars[1].aval
+    dnums = eqn.params["dimension_numbers"]
+    (lc, rc), (lb, rb) = dnums
+    batch = 1.0
+    for d in lb:
+        batch *= a.shape[d]
+    contract = 1.0
+    for d in lc:
+        contract *= a.shape[d]
+    m = 1.0
+    for d in range(len(a.shape)):
+        if d not in lc and d not in lb:
+            m *= a.shape[d]
+    n = 1.0
+    for d in range(len(b.shape)):
+        if d not in rc and d not in rb:
+            n *= b.shape[d]
+    return 2.0 * batch * m * n * contract
+
+
+def _walk(jaxpr, stats: Stats, mult: float, axis_env: dict):
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+
+        if prim == "dot_general":
+            stats.flops += mult * _dot_flops(eqn)
+            io = sum(_aval_bytes(v.aval) for v in eqn.invars) + \
+                sum(_aval_bytes(v.aval) for v in eqn.outvars)
+            stats.dot_bytes += mult * io
+            continue
+
+        if prim in ("gather", "scatter", "scatter-add", "scatter_add",
+                    "dynamic_slice", "dynamic_update_slice", "sort",
+                    "argsort", "take", "rng_bit_generator", "iota_32x2"):
+            io = sum(_aval_bytes(v.aval) for v in eqn.invars) + \
+                sum(_aval_bytes(v.aval) for v in eqn.outvars)
+            stats.dot_bytes += mult * io
+            # sorts and scatters also do comparison work
+            stats.flops += mult * sum(_aval_size(v.aval)
+                                      for v in eqn.outvars)
+            continue
+
+        if prim in _CHEAP_ELEMENTWISE:
+            stats.flops += mult * sum(_aval_size(v.aval)
+                                      for v in eqn.outvars)
+            continue
+
+        if prim in _REDUCES:
+            stats.flops += mult * sum(_aval_size(v.aval)
+                                      for v in eqn.invars)
+            continue
+
+        # ---- collectives (explicit: BCL exchange, embed psum, ...) ----
+        if prim in ("psum", "psum2", "all_gather", "all_to_all",
+                    "ppermute", "psum_scatter", "pmax", "pmin",
+                    "reduce_scatter"):
+            names = eqn.params.get("axes") or eqn.params.get("axis_name") \
+                or eqn.params.get("axis_index_groups") or ()
+            if isinstance(names, dict):
+                names = tuple(names)
+            g = eqn.params.get("axis_size") or _axis_sizes(names, axis_env)
+            g = max(int(g), 1)
+            frac = (g - 1) / g
+            size = sum(_aval_bytes(v.aval) for v in eqn.outvars)
+            in_size = sum(_aval_bytes(v.aval) for v in eqn.invars)
+            if prim in ("psum", "psum2", "pmax", "pmin"):
+                kind, wire = "all-reduce", 2 * size * frac
+            elif prim == "all_gather":
+                kind, wire = "all-gather", size * frac
+            elif prim in ("psum_scatter", "reduce_scatter"):
+                kind, wire = "reduce-scatter", in_size * frac
+            elif prim == "all_to_all":
+                kind, wire = "all-to-all", size * frac
+            else:
+                kind, wire = "collective-permute", size
+            stats.add_coll(kind, mult * size, mult * wire, mult)
+            continue
+
+        # ---- structured control flow ----
+        if prim == "scan":
+            length = eqn.params.get("length", 1) if stats.count_trips else 1
+            inner = eqn.params["jaxpr"]
+            # carries + xs slices round-trip HBM each iteration
+            carry_bytes = sum(_aval_bytes(v.aval) for v in eqn.outvars)
+            stats.dot_bytes += mult * carry_bytes
+            _walk(inner.jaxpr, stats, mult * length, axis_env)
+            continue
+        if prim == "while":
+            body = eqn.params["body_jaxpr"]
+            _walk(body.jaxpr, stats, mult, axis_env)  # trip count unknown
+            continue
+        if prim == "cond":
+            branches = eqn.params["branches"]
+            subs = [Stats() for _ in branches]
+            for s, br in zip(subs, branches):
+                _walk(br.jaxpr, s, mult, axis_env)
+            # worst case branch
+            best = max(subs, key=lambda s: s.flops)
+            stats.flops += best.flops
+            stats.dot_bytes += best.dot_bytes
+            for k in best.coll_wire:
+                stats.add_coll(k, best.coll_payload[k], best.coll_wire[k],
+                               best.coll_counts[k])
+            continue
+
+        if prim == "shard_map":
+            mesh = eqn.params.get("mesh")
+            env = dict(axis_env)
+            participants = 1
+            if mesh is not None:
+                for name, size in zip(mesh.axis_names, mesh.devices.shape
+                                      if hasattr(mesh, "devices")
+                                      else mesh.shape.values()):
+                    env[name] = int(size)
+                participants = int(np.prod(
+                    [env[n] for n in mesh.axis_names]))
+            inner = eqn.params.get("jaxpr")
+            if inner is not None:
+                sub = Stats()
+                _walk(inner if not hasattr(inner, "jaxpr") else inner.jaxpr,
+                      sub, mult, env)
+                # body runs on every participant: totals scale by count
+                stats.flops += sub.flops * participants
+                stats.dot_bytes += sub.dot_bytes * participants
+                for k in sub.coll_wire:
+                    stats.add_coll(k, sub.coll_payload[k] * participants,
+                                   sub.coll_wire[k] * participants,
+                                   sub.coll_counts[k])
+            continue
+
+        # ---- generic recursion: any param holding a (Closed)Jaxpr ----
+        recursed = False
+        for v in eqn.params.values():
+            for sub in _iter_jaxprs(v):
+                _walk(sub, stats, mult, axis_env)
+                recursed = True
+        if recursed:
+            continue
+
+        # everything else: count outputs as cheap ops
+        stats.flops += mult * sum(_aval_size(v.aval) for v in eqn.outvars)
+
+
+def _iter_jaxprs(v):
+    if isinstance(v, jcore.ClosedJaxpr):
+        yield v.jaxpr
+    elif isinstance(v, jcore.Jaxpr):
+        yield v
+    elif isinstance(v, (tuple, list)):
+        for x in v:
+            yield from _iter_jaxprs(x)
+
+
+def analyze(fn, *args, axis_env: dict | None = None,
+            count_trips: bool = True) -> Stats:
+    """Trace ``fn(*args)`` to a jaxpr and accumulate Stats (global totals:
+    shard_map bodies are multiplied by participant count).
+
+    ``count_trips=False`` reproduces XLA's count-scan-once convention —
+    the difference between the two runs is exactly the correction the
+    HLO-text collective parse needs."""
+    closed = jax.make_jaxpr(fn)(*args)
+    return analyze_jaxpr(closed, axis_env=axis_env, count_trips=count_trips)
+
+
+def analyze_jaxpr(closed, *, axis_env: dict | None = None,
+                  count_trips: bool = True) -> Stats:
+    stats = Stats(count_trips=count_trips)
+    _walk(closed.jaxpr, stats, 1.0, dict(axis_env or {}))
+    # program inputs must be read at least once (params etc.)
+    stats.dot_bytes += sum(_aval_bytes(v.aval) for v in closed.jaxpr.invars)
+    return stats
+
+
+def analyze_pair(fn, *args, axis_env: dict | None = None):
+    """(scan-multiplied, scan-once) stats from a single trace."""
+    closed = jax.make_jaxpr(fn)(*args)
+    return (analyze_jaxpr(closed, axis_env=axis_env, count_trips=True),
+            analyze_jaxpr(closed, axis_env=axis_env, count_trips=False))

@@ -1,0 +1,90 @@
+"""Render dry-run JSON into the EXPERIMENTS.md roofline tables."""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PiB"
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def render(results: dict, mesh_filter: str = "single") -> str:
+    rows = []
+    header = ("| arch | shape | status | live/dev | fits16G | compute | "
+              "memory | collective | dominant | useful(6ND/flops) | "
+              "collectives |")
+    sep = "|" + "---|" * 11
+    rows.append(header)
+    rows.append(sep)
+    for key, rec in sorted(results.items()):
+        arch, shape, mesh = key.split("|")
+        if mesh != mesh_filter:
+            continue
+        if rec.get("status") == "skipped":
+            rows.append(f"| {arch} | {shape} | SKIP ({rec['reason'][:40]}...)"
+                        f" | - | - | - | - | - | - | - | - |")
+            continue
+        if rec.get("status") == "error":
+            rows.append(f"| {arch} | {shape} | ERROR {rec['error'][:60]} "
+                        f"| - | - | - | - | - | - | - | - |")
+            continue
+        r = rec["roofline"]
+        colls = rec["collectives_hlo"]["counts"]
+        coll_str = " ".join(f"{k.split('-')[-1][:3]}:{v}"
+                            for k, v in sorted(colls.items()))
+        rows.append(
+            f"| {arch} | {shape} | ok | "
+            f"{fmt_bytes(rec['per_device_live_bytes'])} | "
+            f"{'Y' if rec['fits_16g'] else 'N'} | "
+            f"{fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} | "
+            f"{fmt_s(r['collective_s'])} | **{r['dominant']}** | "
+            f"{r['useful_ratio']:.2f} | {coll_str} |")
+    return "\n".join(rows)
+
+
+def summarize(results: dict) -> str:
+    lines = []
+    for mesh in ("single", "multi"):
+        ok = [k for k, r in results.items()
+              if k.endswith(mesh) and r.get("status") == "ok"]
+        sk = [k for k, r in results.items()
+              if k.endswith(mesh) and r.get("status") == "skipped"]
+        er = [k for k, r in results.items()
+              if k.endswith(mesh) and r.get("status") == "error"]
+        lines.append(f"{mesh}-pod: {len(ok)} ok / {len(sk)} skipped / "
+                     f"{len(er)} errors")
+        for k in er:
+            lines.append(f"  ERROR {k}: {results[k]['error'][:100]}")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("json", nargs="?", default="dryrun_results.json")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    with open(args.json) as f:
+        results = json.load(f)
+    print(summarize(results))
+    print()
+    print(render(results, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

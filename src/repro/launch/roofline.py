@@ -1,0 +1,160 @@
+"""Roofline term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (EXPERIMENTS.md):
+
+  compute    = HLO_FLOPs / (chips * 197e12)
+  memory     = HLO_bytes / (chips * 819e9)
+  collective = wire_bytes / (chips * 50e9)
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (already per-program
+= whole-mesh totals on the host-platform backend... empirically XLA
+reports per-device-program totals; we treat them as per-device and note
+the convention).  Collective wire bytes are parsed from the compiled
+HLO text: for every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute we take operand/output sizes and apply
+the standard ring-cost factor for the op's group size.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s+(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|all-to-all|reduce-scatter|collective-permute)"
+    r"(-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        # [n_groups, group_size]<=[total]
+        return int(m.group(2))
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    payload_bytes: dict      # raw payload per op kind
+    wire_bytes: dict         # ring-model bytes actually serialized per link-step
+
+    def total_wire(self) -> float:
+        return sum(self.wire_bytes.values())
+
+    def dominant(self) -> str:
+        if not self.wire_bytes:
+            return "none"
+        return max(self.wire_bytes, key=self.wire_bytes.get)
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
+    counts: dict = {}
+    payload: dict = {}
+    wire: dict = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        out_shape, kind, _ = m.groups()
+        size = _shape_bytes(out_shape)
+        g = _group_size(line, n_devices)
+        frac = (g - 1) / max(g, 1)
+        if kind == "all-gather":
+            w = size * frac                       # output-size based
+        elif kind == "reduce-scatter":
+            w = size * (g - 1)                    # out = in/g; wire ~ in*frac
+        elif kind == "all-reduce":
+            w = 2 * size * frac                   # RS + AG ring
+        elif kind == "all-to-all":
+            w = size * frac
+        else:                                     # collective-permute
+            w = size
+        counts[kind] = counts.get(kind, 0) + 1
+        payload[kind] = payload.get(kind, 0) + size
+        wire[kind] = wire.get(kind, 0) + w
+    return CollectiveStats(counts, payload, wire)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    wire_bytes: float
+    n_chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    useful_ratio: float
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def compute_roofline(*, flops: float, hbm_bytes: float, wire_bytes: float,
+                     n_chips: int, model_flops: float,
+                     per_device_costs: bool = True) -> Roofline:
+    from repro.launch.mesh import PEAK_FLOPS_BF16, HBM_BW, ICI_BW
+    # cost_analysis on SPMD programs reports the PER-DEVICE program;
+    # model_flops is the global batch's ideal count.
+    if per_device_costs:
+        total_flops = flops * n_chips
+        total_bytes = hbm_bytes * n_chips
+        total_wire = wire_bytes * n_chips
+    else:
+        total_flops, total_bytes, total_wire = flops, hbm_bytes, wire_bytes
+    compute_s = total_flops / (n_chips * PEAK_FLOPS_BF16)
+    memory_s = total_bytes / (n_chips * HBM_BW)
+    collective_s = total_wire / (n_chips * ICI_BW)
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dom = max(terms, key=terms.get)
+    return Roofline(flops=total_flops, hbm_bytes=total_bytes,
+                    wire_bytes=total_wire, n_chips=n_chips,
+                    compute_s=compute_s, memory_s=memory_s,
+                    collective_s=collective_s, dominant=dom,
+                    model_flops=model_flops,
+                    useful_ratio=(model_flops / total_flops
+                                  if total_flops else 0.0))
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) per step/batch."""
+    from repro.models.lm import active_param_count_exact
+    n_active = active_param_count_exact(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch

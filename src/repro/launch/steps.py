@@ -1,0 +1,181 @@
+"""Jit-able step builders shared by the dry-run and the drivers.
+
+All three entry points close over (cfg, mesh) and are pure:
+
+  train_step(params, opt_state, batch) -> (params, opt_state, metrics)
+  prefill_step(params, batch)          -> (cache, logits)
+  serve_step(params, cache, tokens)    -> (logits, cache)
+
+plus the sharding trees the jit wrapper needs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import lm
+from repro.models.sharding import Axes, param_shardings
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.optim.adamw import opt_shardings
+
+
+def opt_config_for(cfg: ArchConfig) -> AdamWConfig:
+    return AdamWConfig(moment_dtype=cfg.optimizer_dtype,
+                       factored=cfg.factored_second_moment)
+
+
+def make_train_step(cfg: ArchConfig, mesh: Mesh):
+    axes = Axes.from_mesh(mesh)
+    ocfg = opt_config_for(cfg)
+    accum = max(1, cfg.grad_accum)
+
+    def grads_of(params, batch):
+        def lf(p):
+            return lm.loss_fn(p, cfg, batch, mesh=mesh, axes=axes)
+        return jax.value_and_grad(lf, has_aux=True)(params)
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            (loss, metrics), grads = grads_of(params, batch)
+        else:
+            # microbatching: scan over batch splits, accumulate f32 grads
+            # (activation memory / accum — EXPERIMENTS.md section Perf)
+            def split(x):
+                b = x.shape[0]
+                return x.reshape((accum, b // accum) + x.shape[1:])
+            micro = jax.tree_util.tree_map(split, batch)
+
+            def body(acc, mb):
+                (l, m), g = grads_of(params, mb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, gg: a + gg.astype(jnp.float32) / accum,
+                    acc, g)
+                return acc, (l, m)
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, (losses, metricses) = jax.lax.scan(body, zeros, micro)
+            loss = losses.mean()
+            metrics = jax.tree_util.tree_map(lambda x: x.mean(), metricses)
+        new_params, new_opt, om = adamw_update(ocfg, params, grads, opt_state)
+        return new_params, new_opt, {"loss": loss, **metrics, **om}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, mesh: Mesh, cache_len: int):
+    axes = Axes.from_mesh(mesh)
+
+    def prefill_step(params, batch):
+        return lm.prefill(params, cfg, batch, cache_len=cache_len,
+                          mesh=mesh, axes=axes)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, mesh: Mesh):
+    axes = Axes.from_mesh(mesh)
+
+    def serve_step(params, cache, tokens):
+        return lm.decode_step(params, cfg, cache, tokens,
+                              mesh=mesh, axes=axes)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# sharding trees
+# ---------------------------------------------------------------------------
+
+def _n_data(mesh: Mesh, axes: Axes) -> int:
+    n = 1
+    for a in axes.data:
+        n *= mesh.shape[a]
+    return n
+
+
+def batch_shardings(cfg: ArchConfig, mesh: Mesh, batch_shape: dict):
+    axes = Axes.from_mesh(mesh)
+    d = axes.data
+    nd_ = _n_data(mesh, axes)
+
+    def one(kp, leaf):
+        nd = len(leaf.shape)
+        lead = d if leaf.shape[0] % nd_ == 0 else None  # batch=1 replicates
+        return NamedSharding(mesh, P(*((lead,) + (None,) * (nd - 1))))
+
+    return jax.tree_util.tree_map_with_path(one, batch_shape)
+
+
+def cache_shardings(cfg: ArchConfig, mesh: Mesh, cache_shape):
+    axes = Axes.from_mesh(mesh)
+    d, m = axes.data, axes.model
+    nm = mesh.shape[m]
+
+    nd_ = _n_data(mesh, axes)
+
+    def one(kp, leaf):
+        path = jax.tree_util.keystr(kp)
+        nd = len(leaf.shape)
+        stacked = "stack" in path
+        core = nd - (1 if stacked else 0)
+        if "pos" in path or core == 0:
+            return NamedSharding(mesh, P())
+        bdim = leaf.shape[1 if stacked else 0]
+        dims: list = [d if bdim % nd_ == 0 else None]
+        if core == 3 and cfg.mla_cp_decode and \
+                ("c_kv" in path or "k_rope" in path):
+            sdim = leaf.shape[(1 if stacked else 0) + 1]
+            dims += [m if sdim % nm == 0 else None]
+        elif core >= 2:
+            # shard the head-like dim over model when it divides evenly
+            if any(k in path for k in ("'k'", "'v'", "xk", "xv")) and core == 4:
+                hdim = leaf.shape[1 + (1 if stacked else 0)]
+                dims += [m if hdim % nm == 0 else None]
+            elif "ssd" in path and core == 4:
+                hdim = leaf.shape[1 + (1 if stacked else 0)]
+                dims += [m if hdim % nm == 0 else None]
+            elif path.endswith("'s']") and core == 4:
+                hdim = leaf.shape[1 + (1 if stacked else 0)]
+                dims += [m if hdim % nm == 0 else None]
+        while len(dims) < core:
+            dims.append(None)
+        if stacked:
+            dims = [None] + dims
+        return NamedSharding(mesh, P(*dims))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def abstract_state(cfg: ArchConfig):
+    """(params_shape, opt_shape) without allocation."""
+    pshape = lm.abstract_params(cfg)
+    ocfg = opt_config_for(cfg)
+    oshape = jax.eval_shape(lambda: adamw_init(
+        ocfg, jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype), pshape)))
+    return pshape, oshape
+
+
+def train_shardings(cfg: ArchConfig, mesh: Mesh):
+    pshape, oshape = abstract_state(cfg)
+    psh = param_shardings(cfg, mesh, pshape)
+    osh = opt_shardings(psh, oshape, mesh)
+    return pshape, oshape, psh, osh
+
+
+def init_state(cfg: ArchConfig, mesh: Mesh, rng):
+    """Materialize params + opt state WITH shardings applied (real runs)."""
+    pshape, oshape, psh, osh = train_shardings(cfg, mesh)
+    params = jax.jit(lambda r: lm.init_params(cfg, r),
+                     out_shardings=psh)(rng)
+    ocfg = opt_config_for(cfg)
+    opt = jax.jit(lambda p: adamw_init(ocfg, p),
+                  out_shardings=osh)(params)
+    return params, opt, psh, osh

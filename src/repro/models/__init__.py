@@ -1,0 +1,7 @@
+"""The LM framework built on the BCL container substrate.
+
+Integration points with the paper's technique (DESIGN.md section 3):
+  * MoE token dispatch  = core.exchange.route over the model axis
+  * vocab-sharded embedding lookup = owner-computes DArray rget
+  * decode KV cache     = hosted ring semantics (append = queue push)
+"""

@@ -1,0 +1,525 @@
+"""Model assembly: decoder-only / encoder-decoder LMs over the block zoo.
+
+Layer pattern strings drive assembly (configs/base.py):
+  g  global attention block        l  sliding-window attention block
+  m  Mamba2 block                  r  RWKV-6 block (+ channel mix)
+  a  shared attention block (Zamba: one parameter set, used repeatedly)
+
+Structure = [first_k_dense prefix (unrolled)] + [scan over pattern units]
++ [remainder (unrolled)].  Scan-over-layers keeps HLO size O(1) in depth
+(61-layer DeepSeek compiles as one unit body), which is what makes the
+512-device dry-run compile in seconds.
+
+Entry points (all pure functions of (params, batch)):
+  init_params / abstract_params        parameter pytrees (real / eval_shape)
+  forward                              hidden states (+aux, +cache)
+  loss_fn                              LM loss (chunked vocab xent)
+  prefill / decode_step                serving path with typed caches
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_mod
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.sharding import Axes, shard
+
+_F32 = jnp.float32
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _remat_policy(cfg):
+    if cfg.remat_policy == "nothing":
+        return jax.checkpoint_policies.nothing_saveable
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return None
+
+
+def _kind_at(cfg, layer_idx: int) -> str:
+    pat = cfg.layer_pattern
+    return pat[layer_idx % len(pat)]
+
+
+def _layer_is_moe(cfg, layer_idx: int) -> bool:
+    return cfg.moe is not None and layer_idx >= cfg.moe.first_k_dense
+
+
+# ---------------------------------------------------------------------------
+# parameter construction
+# ---------------------------------------------------------------------------
+
+def _block_init(rng, cfg, kind: str, moe_layer: bool, cross: bool, dtype):
+    ks = jax.random.split(rng, 6)
+    d = cfg.d_model
+    p: dict[str, Any] = {"ln1": jnp.ones((d,), dtype)}
+    if kind in ("g", "l"):
+        if cfg.mla:
+            p["attn"] = attn_mod.mla_init(ks[0], cfg, dtype)
+        else:
+            p["attn"] = attn_mod.attn_init(ks[0], cfg, dtype)
+        p["ln2"] = jnp.ones((d,), dtype)
+        if moe_layer:
+            p["moe"] = moe_mod.moe_init(ks[1], cfg, dtype)
+        else:
+            width = cfg.d_ff
+            p["mlp"] = L.mlp_init(ks[1], d, width, cfg.activation, dtype)
+        if cross:
+            p["ln_x"] = jnp.ones((d,), dtype)
+            p["xattn"] = attn_mod.attn_init(ks[2], cfg, dtype)
+    elif kind == "m":
+        p["mamba"] = ssm_mod.mamba_init(ks[0], cfg, dtype)
+    elif kind == "r":
+        p["rwkv"] = ssm_mod.rwkv_init(ks[0], cfg, dtype)
+        p["ln2"] = jnp.ones((d,), dtype)
+        p["cmix"] = ssm_mod.rwkv_channel_mix_init(ks[1], cfg, dtype)
+    elif kind == "a":
+        p["use_shared"] = jnp.zeros((), jnp.float32)  # marker leaf
+    return p
+
+
+def _unit_init(rng, cfg, cross: bool, dtype, start_layer: int):
+    pat = cfg.layer_pattern
+    ks = jax.random.split(rng, len(pat))
+    return {f"p{i}": _block_init(ks[i], cfg, pat[i],
+                                 _layer_is_moe(cfg, start_layer + i),
+                                 cross, dtype)
+            for i in range(len(pat))}
+
+
+def _layer_layout(cfg):
+    """(n_prefix, n_units, n_rem) given first_k_dense and the pattern."""
+    prefix = cfg.moe.first_k_dense if cfg.moe else 0
+    u = len(cfg.layer_pattern)
+    rest = cfg.n_layers - prefix
+    return prefix, rest // u, rest % u
+
+
+def init_params(cfg: ArchConfig, rng) -> dict:
+    dtype = _dtype(cfg)
+    d, v = cfg.d_model, cfg.padded_vocab
+    prefix, n_units, n_rem = _layer_layout(cfg)
+    cross = cfg.encoder_layers > 0
+    keys = iter(jax.random.split(rng, 16 + prefix + n_rem))
+
+    params: dict[str, Any] = {
+        "embed": (jax.random.normal(next(keys), (v, d)) * d ** -0.5
+                  ).astype(dtype),
+        "final_norm": jnp.ones((d,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(next(keys), (v, d))
+                             * d ** -0.5).astype(dtype)
+
+    for i in range(prefix):
+        params[f"prefix_{i}"] = _block_init(
+            next(keys), cfg, _kind_at(cfg, i), False, cross, dtype)
+
+    if n_units:
+        unit_rngs = jax.random.split(next(keys), n_units)
+        params["stack"] = jax.vmap(
+            lambda r: _unit_init(r, cfg, cross, dtype, prefix))(unit_rngs)
+
+    for i in range(n_rem):
+        li = prefix + n_units * len(cfg.layer_pattern) + i
+        params[f"rem_{i}"] = _block_init(
+            next(keys), cfg, _kind_at(cfg, li - prefix),
+            _layer_is_moe(cfg, li), cross, dtype)
+
+    if "a" in cfg.layer_pattern:
+        shared = {"ln1": jnp.ones((d,), dtype),
+                  "attn": attn_mod.attn_init(next(keys), cfg, dtype),
+                  "ln2": jnp.ones((d,), dtype),
+                  "mlp": L.mlp_init(next(keys), d, cfg.d_ff,
+                                    cfg.activation, dtype)}
+        params["shared_attn"] = shared
+
+    if cfg.encoder_layers:
+        enc_rngs = jax.random.split(next(keys), cfg.encoder_layers)
+        params["enc_stack"] = jax.vmap(
+            lambda r: _block_init(r, cfg, "g", False, False, dtype)
+        )(enc_rngs)
+        params["enc_norm"] = jnp.ones((d,), dtype)
+
+    if cfg.mtp:
+        params["mtp_block"] = _block_init(next(keys), cfg, "g", False,
+                                          False, dtype)
+        params["mtp_norm"] = jnp.ones((d,), dtype)
+        params["mtp_proj"] = (jax.random.normal(next(keys), (2 * d, d))
+                              * (2 * d) ** -0.5).astype(dtype)
+    return params
+
+
+def abstract_params(cfg: ArchConfig):
+    """Parameter shapes without allocation (dry-run path)."""
+    return jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def param_count_exact(cfg: ArchConfig) -> int:
+    shapes = abstract_params(cfg)
+    n = 0
+    for leaf in jax.tree_util.tree_leaves(shapes):
+        n += int(functools.reduce(lambda a, b: a * b, leaf.shape, 1))
+    return n
+
+
+def active_param_count_exact(cfg: ArchConfig) -> int:
+    """Active per-token params: non-expert params + top_k+shared experts."""
+    total = param_count_exact(cfg)
+    if not cfg.moe:
+        return total
+    shapes = abstract_params(cfg)
+    expert_total = 0
+    for kp, leaf in jax.tree_util.tree_leaves_with_path(shapes):
+        path = jax.tree_util.keystr(kp)
+        if "experts" in path:
+            expert_total += int(functools.reduce(
+                lambda a, b: a * b, leaf.shape, 1))
+    mo = cfg.moe
+    active_frac = mo.top_k / mo.n_experts
+    return int(total - expert_total * (1 - active_frac))
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def _block_cache_init(cfg, kind: str, batch: int, cache_len: int,
+                      cross_len: int, dtype):
+    hd, nkv = cfg.head_dim, cfg.n_kv_heads
+    c: dict[str, Any] = {}
+    if kind in ("g", "l", "a"):
+        if cfg.mla and kind != "a":
+            m = cfg.mla
+            c["c_kv"] = jnp.zeros((batch, cache_len, m.kv_lora_rank), dtype)
+            c["k_rope"] = jnp.zeros((batch, cache_len, m.qk_rope_head_dim),
+                                    dtype)
+        else:
+            # cfg.window_cache caps 'l'-layer caches at the window size
+            # (ring append) — the decode-memory optimization measured in
+            # EXPERIMENTS.md section Perf; baseline keeps full length.
+            s_len = cache_len
+            if (cfg.window_cache and kind == "l" and cfg.sliding_window
+                    and cfg.sliding_window < cache_len):
+                s_len = cfg.sliding_window
+            c["k"] = jnp.zeros((batch, nkv, s_len, hd), dtype)
+            c["v"] = jnp.zeros((batch, nkv, s_len, hd), dtype)
+        if cfg.encoder_layers and kind != "a":
+            c["xk"] = jnp.zeros((batch, nkv, cross_len, hd), dtype)
+            c["xv"] = jnp.zeros((batch, nkv, cross_len, hd), dtype)
+    elif kind == "m":
+        c = ssm_mod.mamba_state_init(cfg, batch)
+    elif kind == "r":
+        c = ssm_mod.rwkv_state_init(cfg, batch)
+        c["cm_prev"] = jnp.zeros((batch, cfg.d_model), dtype)
+    return c
+
+
+def cache_init(cfg: ArchConfig, batch: int, cache_len: int,
+               cross_len: int = 0):
+    dtype = _dtype(cfg)
+    prefix, n_units, n_rem = _layer_layout(cfg)
+    pat = cfg.layer_pattern
+    cache: dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    for i in range(prefix):
+        cache[f"prefix_{i}"] = _block_cache_init(
+            cfg, _kind_at(cfg, i), batch, cache_len, cross_len, dtype)
+    if n_units:
+        unit = {f"p{i}": _block_cache_init(cfg, pat[i], batch, cache_len,
+                                           cross_len, dtype)
+                for i in range(len(pat))}
+        cache["stack"] = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (n_units,) + x.shape), unit)
+    for i in range(n_rem):
+        cache[f"rem_{i}"] = _block_cache_init(
+            cfg, pat[i % len(pat)], batch, cache_len, cross_len, dtype)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+def _apply_block(bp, x, cfg, kind: str, *, positions, mesh, axes,
+                 shared_params=None, enc_out=None, cache=None,
+                 cache_len=None):
+    """Pre-norm block. Returns (x, new_cache, aux)."""
+    aux = jnp.float32(0.0)
+    new_cache: dict[str, Any] = {}
+    if kind == "a":
+        bp = shared_params
+    if kind in ("g", "l", "a"):
+        window = cfg.sliding_window if kind == "l" else 0
+        h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+        sub_cache = None
+        if cache is not None and ("k" in cache or "c_kv" in cache):
+            sub_cache = {k: v for k, v in cache.items()
+                         if k in ("k", "v", "c_kv", "k_rope")}
+        if cfg.mla and kind != "a":
+            o, nc = attn_mod.mla_attention(bp["attn"], h, cfg,
+                                           positions=positions,
+                                           cache=sub_cache,
+                                           cache_len=cache_len,
+                                           mesh=mesh, axes=axes)
+        else:
+            o, nc = attn_mod.attention(bp["attn"], h, cfg,
+                                       positions=positions, causal=True,
+                                       window=window, cache=sub_cache,
+                                       cache_len=cache_len)
+        if nc:
+            new_cache.update(nc)
+        x = x + o
+        # cross attention (encoder-decoder)
+        if "xattn" in bp and enc_out is not None:
+            h = L.rms_norm(x, bp["ln_x"], cfg.norm_eps)
+            xo, _ = attn_mod.attention(bp["xattn"], h, cfg,
+                                       positions=positions, causal=False,
+                                       kv_source=enc_out)
+            x = x + xo
+        elif "xattn" in bp and cache is not None and "xk" in cache:
+            # decode: attend cached cross K/V
+            h = L.rms_norm(x, bp["ln_x"], cfg.norm_eps)
+            b = h.shape[0]
+            q = (h @ bp["xattn"]["wq"]).reshape(
+                b, 1, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+            xo = attn_mod.decode_attention(q, cache["xk"], cache["xv"],
+                                           cache["xk"].shape[2])
+            xo = xo.transpose(0, 2, 1, 3).reshape(b, 1, -1) @ bp["xattn"]["wo"]
+            x = x + xo
+            new_cache["xk"], new_cache["xv"] = cache["xk"], cache["xv"]
+        h = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+        if "moe" in bp:
+            y, aux = moe_mod.moe_apply(bp["moe"], h, cfg, mesh, axes)
+        else:
+            y = L.mlp(bp["mlp"], h, cfg.activation)
+        x = x + y
+    elif kind == "m":
+        h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+        st = cache if cache else None
+        o, ns = ssm_mod.mamba_apply(bp["mamba"], h, cfg, st)
+        new_cache = ns
+        x = x + o
+    elif kind == "r":
+        h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+        st = {k: cache[k] for k in ("s", "prev")} if cache else None
+        o, ns = ssm_mod.rwkv_apply(bp["rwkv"], h, cfg, st)
+        new_cache.update(ns)
+        x = x + o
+        h = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+        o, cm_prev = ssm_mod.rwkv_channel_mix(
+            bp["cmix"], h, cache["cm_prev"] if cache else None)
+        new_cache["cm_prev"] = cm_prev
+        x = x + o
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def encode(params, cfg, src_embeds, mesh, axes):
+    """Bidirectional encoder over precomputed frontend embeddings."""
+    x = src_embeds.astype(_dtype(cfg))
+
+    def enc_block(x, bp):
+        h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+        o, _ = attn_mod.attention(
+            bp["attn"], h, cfg,
+            positions=jnp.broadcast_to(jnp.arange(x.shape[1])[None],
+                                       x.shape[:2]),
+            causal=False)
+        x = x + o
+        h = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+        return x + L.mlp(bp["mlp"], h, cfg.activation), None
+
+    fn = enc_block
+    if cfg.remat == "block":
+        fn = jax.checkpoint(enc_block)
+    x, _ = jax.lax.scan(fn, x, params["enc_stack"])
+    return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def forward(params, cfg: ArchConfig, tokens, *, mesh: Mesh, axes: Axes,
+            patch_embeds=None, src_embeds=None, cache=None,
+            decode: bool = False):
+    """Returns (hidden (B,T,D), aux_loss, new_cache, n_skip).
+
+    n_skip: leading positions (image patches) to exclude from loss.
+    """
+    b, t = tokens.shape
+    dtype = _dtype(cfg)
+
+    if mesh is not None and mesh.size > 1:
+        x = L.embed_lookup(params["embed"], tokens, mesh, axes)
+    else:
+        x = L.embed_lookup_dense(params["embed"], tokens)
+    x = (x * jnp.asarray(cfg.d_model ** 0.5, dtype)).astype(dtype)
+
+    n_skip = 0
+    if patch_embeds is not None:
+        x = jnp.concatenate([patch_embeds.astype(dtype), x], axis=1)
+        n_skip = patch_embeds.shape[1]
+        t = x.shape[1]
+
+    enc_out = None
+    if cfg.encoder_layers and src_embeds is not None:
+        enc_out = encode(params, cfg, src_embeds, mesh, axes)
+
+    if decode:
+        pos0 = cache["pos"]
+        positions = jnp.broadcast_to(pos0[None, None], (b, 1))
+    else:
+        positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    cache_len = cache["pos"] if cache is not None else None
+
+    if mesh is not None:
+        x = shard(x, mesh, P(axes.data, None, None))
+
+    prefix, n_units, n_rem = _layer_layout(cfg)
+    pat = cfg.layer_pattern
+    aux_total = jnp.float32(0.0)
+    new_cache = {"pos": (cache["pos"] + (1 if decode else t))
+                 if cache is not None else None}
+    shared_params = params.get("shared_attn")
+
+    def run_block(bp, x, kind, bc):
+        return _apply_block(bp, x, cfg, kind, positions=positions,
+                            mesh=mesh, axes=axes,
+                            shared_params=shared_params, enc_out=enc_out,
+                            cache=bc, cache_len=cache_len)
+
+    for i in range(prefix):
+        bc = cache.get(f"prefix_{i}") if cache is not None else None
+        x, nc, aux = run_block(params[f"prefix_{i}"], x, _kind_at(cfg, i), bc)
+        aux_total += aux
+        if cache is not None:
+            new_cache[f"prefix_{i}"] = nc
+
+    if n_units:
+        def unit_fn(carry, xs):
+            x, aux_acc = carry
+            if cache is not None:
+                uparams, ucache = xs
+            else:
+                uparams, ucache = xs, None
+            ncache = {}
+            for i, kind in enumerate(pat):
+                bc = ucache[f"p{i}"] if ucache is not None else None
+                x, nc, aux = run_block(uparams[f"p{i}"], x, kind, bc)
+                aux_acc = aux_acc + aux
+                ncache[f"p{i}"] = nc if nc else {
+                    "_": jnp.zeros((), jnp.int32)}
+            return (x, aux_acc), (ncache if cache is not None else None)
+
+        fn = unit_fn
+        if cfg.remat == "block":
+            fn = jax.checkpoint(unit_fn, policy=_remat_policy(cfg))
+        xs = (params["stack"], cache["stack"]) if cache is not None \
+            else params["stack"]
+        (x, aux_total), stack_cache = jax.lax.scan(fn, (x, aux_total), xs)
+        if cache is not None:
+            new_cache["stack"] = stack_cache
+
+    for i in range(n_rem):
+        li = prefix + n_units * len(pat) + i
+        bc = cache.get(f"rem_{i}") if cache is not None else None
+        x, nc, aux = run_block(params[f"rem_{i}"], x,
+                               _kind_at(cfg, li - prefix), bc)
+        aux_total += aux
+        if cache is not None:
+            new_cache[f"rem_{i}"] = nc
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux_total, (new_cache if cache is not None else None), n_skip
+
+
+# ---------------------------------------------------------------------------
+# loss / serving
+# ---------------------------------------------------------------------------
+
+def head_table(params, cfg):
+    return params["embed"] if cfg.tie_embeddings else params["lm_head"]
+
+
+def _mask_pad_vocab(logits, cfg):
+    return jnp.where(jnp.arange(logits.shape[-1]) < cfg.vocab, logits, -1e30)
+
+
+def loss_fn(params, cfg: ArchConfig, batch, *, mesh, axes):
+    """batch: tokens (B, T+1) [+ patch_embeds/src_embeds (+ loss_mask)]."""
+    tokens = batch["tokens"]
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    h, aux, _, n_skip = forward(
+        params, cfg, inputs, mesh=mesh, axes=axes,
+        patch_embeds=batch.get("patch_embeds"),
+        src_embeds=batch.get("src_embeds"))
+    if n_skip:
+        h = h[:, n_skip:]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones_like(targets, _F32)
+    table = head_table(params, cfg)
+    nll = L.chunked_softmax_xent(h, table, targets, mask, mesh, axes,
+                                 chunk=cfg.xent_chunk,
+                                 vocab_real=cfg.vocab)
+    loss = nll + aux
+
+    if cfg.mtp and h.shape[1] > 2:
+        # multi-token prediction: predict t+2 from [h_t ; emb(x_{t+1})]
+        if mesh is not None and mesh.size > 1:
+            emb_next = L.embed_lookup(params["embed"], targets, mesh, axes)
+        else:
+            emb_next = L.embed_lookup_dense(params["embed"], targets)
+        cat = jnp.concatenate([h, emb_next.astype(h.dtype)], axis=-1)
+        h2 = cat @ params["mtp_proj"]
+        h2, _, _ = _apply_block(
+            params["mtp_block"], h2, cfg, "g",
+            positions=jnp.broadcast_to(
+                jnp.arange(h2.shape[1])[None], h2.shape[:2]),
+            mesh=mesh, axes=axes)[0:3]
+        h2 = L.rms_norm(h2, params["mtp_norm"], cfg.norm_eps)
+        t2 = jnp.concatenate([targets[:, 1:], targets[:, -1:]], axis=1)
+        m2 = jnp.concatenate([mask[:, 1:], jnp.zeros_like(mask[:, -1:])],
+                             axis=1)
+        nll2 = L.chunked_softmax_xent(h2, table, t2, m2, mesh, axes,
+                                      vocab_real=cfg.vocab)
+        loss = loss + 0.3 * nll2
+    return loss, {"nll": nll, "aux": aux}
+
+
+def prefill(params, cfg: ArchConfig, batch, cache_len: int, *, mesh, axes):
+    """Run the prompt, build the cache, return (cache, last_logits)."""
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+    cross_len = batch["src_embeds"].shape[1] if "src_embeds" in batch else 0
+    cache = cache_init(cfg, b, cache_len, cross_len)
+    h, _, new_cache, _ = forward(
+        params, cfg, tokens, mesh=mesh, axes=axes,
+        patch_embeds=batch.get("patch_embeds"),
+        src_embeds=batch.get("src_embeds"),
+        cache=cache, decode=False)
+    logits = jnp.einsum("bd,vd->bv", h[:, -1], head_table(params, cfg))
+    logits = _mask_pad_vocab(logits, cfg)
+    return new_cache, logits
+
+
+def decode_step(params, cfg: ArchConfig, cache, tokens, *, mesh, axes):
+    """One token in, one logits row out; cache advances by one."""
+    h, _, new_cache, _ = forward(params, cfg, tokens, mesh=mesh, axes=axes,
+                                 cache=cache, decode=True)
+    logits = jnp.einsum("bd,vd->bv", h[:, -1], head_table(params, cfg))
+    return _mask_pad_vocab(logits, cfg), new_cache

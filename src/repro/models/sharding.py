@@ -1,0 +1,136 @@
+"""Sharding rules: logical parameter/activation layouts -> PartitionSpecs.
+
+One place defines the whole parallelism scheme:
+
+  data axes   ('pod','data') on the multi-pod mesh, ('data',) single-pod.
+              Batch dim of activations; FSDP (ZeRO-3) dim of params when
+              cfg.fsdp.
+  model axis  'model'. Tensor parallelism (heads / ffn hidden / vocab) and
+              expert parallelism for MoE dispatch.
+
+Param rules are path-based: the pytree path of each parameter determines
+its PartitionSpec.  Scanned layer stacks have a leading (n_units,) dim
+mapped to None.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Axes:
+    data: tuple[str, ...]      # ('pod','data') or ('data',)
+    model: str                 # 'model'
+
+    @staticmethod
+    def from_mesh(mesh: Mesh) -> "Axes":
+        names = tuple(mesh.axis_names)
+        model = "model" if "model" in names else names[-1]
+        data = tuple(n for n in names if n != model)
+        return Axes(data=data, model=model)
+
+    @property
+    def dp(self):
+        return self.data if len(self.data) > 1 else self.data[0] if self.data else None
+
+
+def _fsdp_axis(cfg) -> Any:
+    return None if not cfg.fsdp else None  # placeholder; resolved in rules
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+
+def param_spec(cfg, axes: Axes, path: str, ndim: int,
+               scanned: bool) -> P:
+    """PartitionSpec for a parameter identified by its flattened path."""
+    m = axes.model
+    f = axes.data if cfg.fsdp else None   # FSDP shard dim (tuple of axes)
+
+    core = ndim - (1 if scanned else 0)
+
+    def pad(spec_dims):
+        dims = list(spec_dims)[:core]          # never exceed the rank
+        while len(dims) < core:
+            dims.append(None)
+        if scanned:
+            dims = [None] + dims
+        return P(*dims)
+
+    # match on the leaf parameter NAME (last path key); substrings of
+    # container keys like 'rwkv' must not trigger projection rules
+    parts = [s for s in path.replace("]", "").replace("'", "").split("[")
+             if s]
+    name = parts[-1] if parts else path
+    in_experts = "experts" in parts
+
+    if name in ("embed", "lm_head"):
+        return pad((m, f))
+    if name in ("router", "moe_bias"):
+        return pad((None,))
+    if in_experts and name in ("w_in", "w_gate"):
+        return pad((m, f, None))
+    if in_experts and name == "w_out":
+        return pad((m, None, f))
+    # attention / ssm in-projections: columns over model
+    if name in ("wq", "wk", "wv", "w_uq", "w_ukv", "in_proj",
+                "wr", "wg"):
+        return pad((f, m))
+    if name in ("wo", "out_proj"):
+        return pad((m, f))
+    # MLA down-projections + rwkv decay proj: small, FSDP only
+    if name in ("w_dq", "w_dkv", "w_kr", "ww"):
+        return pad((f, None))
+    # MLP: hidden over model
+    if name in ("w_in", "w_gate"):
+        return pad((f, m))
+    if name == "w_out":
+        return pad((m, f))
+    if name == "mtp_proj":
+        return pad((f, None))
+    # conv / norms / scalars / rwkv mixing vectors: replicate (tiny)
+    return pad((None,))
+
+
+def param_shardings(cfg, mesh: Mesh, params_shape) -> Any:
+    """Tree of NamedShardings matching a params shape-tree."""
+    axes = Axes.from_mesh(mesh)
+
+    def one(kp, leaf):
+        path = jax.tree_util.keystr(kp)
+        scanned = "stack" in path
+        spec = param_spec(cfg, axes, path, len(leaf.shape), scanned)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+# ---------------------------------------------------------------------------
+# activation rules
+# ---------------------------------------------------------------------------
+
+def act_spec(axes: Axes, kind: str) -> P:
+    d = axes.data
+    m = axes.model
+    table = {
+        "tokens": P(d, None),                  # (B, T)
+        "btd": P(d, None, None),               # (B, T, D)
+        "btd_seq": P(d, m, None),              # sequence-parallel segments
+        "logits": P(d, None, m),               # (B, T, V)
+        "kv_cache": P(d, m, None, None),       # (B, H_kv, S, hd)
+        "kv_cache_rep": P(d, None, None, None),  # kv heads < model size
+        "mla_cache": P(d, None, None),         # (B, S, r)
+        "ssm_state": P(d, m, None, None),      # (B, H, hd, d_state)
+        "scalar": P(),
+    }
+    return table[kind]
+
+
+def shard(x, mesh: Mesh, spec: P):
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

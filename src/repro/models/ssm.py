@@ -1,0 +1,223 @@
+"""State-space / linear-recurrence mixers: Mamba2 (SSD) and RWKV-6.
+
+Both are expressed as ``lax.scan`` over time with an explicit recurrent
+state, which (a) keeps the HLO O(1) in sequence length, (b) gives decode
+a natural single-step form (the state is the "cache"), and (c) makes the
+500k-token long-context shape lowerable: state size is independent of
+context.  Chunked/parallel-scan formulations are a recorded perf
+candidate (EXPERIMENTS.md section Perf), not the baseline.
+
+Shapes follow the configs: Mamba2 state (B, H, d_state, head) per layer;
+RWKV6 state (B, H, hd, hd) with data-dependent per-channel decay (the
+"Finch" form).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD recurrence, ngroups=1)
+# ---------------------------------------------------------------------------
+
+def mamba_dims(cfg):
+    inner = cfg.ssm.expand * cfg.d_model
+    nheads = cfg.ssm.n_heads or max(1, inner // 64)
+    head = inner // nheads
+    return inner, nheads, head
+
+
+def mamba_init(rng, cfg, dtype):
+    d = cfg.d_model
+    ds = cfg.ssm.d_state
+    dc = cfg.ssm.d_conv
+    inner, nh, _ = mamba_dims(cfg)
+    ks = jax.random.split(rng, 5)
+    s = d ** -0.5
+    proj_out = 2 * inner + 2 * ds + nh
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, proj_out)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (dc, inner + 2 * ds)) * 0.1
+                   ).astype(dtype),
+        "a_log": jnp.zeros((nh,), _F32),
+        "dt_bias": jnp.zeros((nh,), _F32),
+        "d_skip": jnp.ones((nh,), _F32),
+        "norm": jnp.ones((inner,), dtype),
+        "out_proj": (jax.random.normal(ks[2], (inner, d)) * inner ** -0.5
+                     ).astype(dtype),
+    }
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv. x (B,T,C), w (K,C). state (B,K-1,C) for decode.
+
+    Returns (y, new_state)."""
+    kw = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], kw - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(kw))
+    new_state = xp[:, -(kw - 1):] if kw > 1 else pad
+    return y, new_state
+
+
+def mamba_apply(params, x, cfg, state=None):
+    """x (B,T,D) -> (y, new_state).
+
+    state: dict(conv (B,K-1,C), ssd (B,H,ds,hd)); None => zeros (training).
+    """
+    from repro.models.layers import rms_norm
+    b, t, d = x.shape
+    ds = cfg.ssm.d_state
+    inner, nh, head = mamba_dims(cfg)
+
+    proj = x @ params["in_proj"]
+    z, xin, bc, dt = jnp.split(
+        proj, [inner, 2 * inner, 2 * inner + 2 * ds], axis=-1)
+    conv_in = jnp.concatenate([xin, bc], axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    conv_out, new_conv = _causal_conv(conv_in, params["conv_w"], conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xin = conv_out[..., :inner]
+    b_in = conv_out[..., inner:inner + ds]
+    c_in = conv_out[..., inner + ds:]
+
+    a = -jnp.exp(params["a_log"])                        # (H,)
+    dt = jax.nn.softplus(dt.astype(_F32) + params["dt_bias"])   # (B,T,H)
+    xh = xin.reshape(b, t, nh, head)
+
+    h0 = state["ssd"] if state is not None else \
+        jnp.zeros((b, nh, ds, head), _F32)
+
+    def step(h, inputs):
+        xt, bt, ct, dtt = inputs      # (B,H,hd) (B,ds) (B,ds) (B,H)
+        decay = jnp.exp(a[None] * dtt)                    # (B,H)
+        upd = jnp.einsum("bs,bhp->bhsp", bt.astype(_F32),
+                         (xt.astype(_F32) * dtt[..., None]))
+        h = h * decay[..., None, None] + upd
+        y = jnp.einsum("bs,bhsp->bhp", ct.astype(_F32), h)
+        return h, y
+
+    xs = (xh.swapaxes(0, 1), b_in.swapaxes(0, 1), c_in.swapaxes(0, 1),
+          dt.swapaxes(0, 1))
+    h_fin, ys = jax.lax.scan(step, h0, xs)
+    y = ys.swapaxes(0, 1)                                 # (B,T,H,hd)
+    y = y + params["d_skip"][None, None, :, None] * xh.astype(_F32)
+    y = y.reshape(b, t, inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    new_state = {"conv": new_conv, "ssd": h_fin}
+    return out, new_state
+
+
+def mamba_state_init(cfg, batch, dtype=_F32):
+    ds = cfg.ssm.d_state
+    dc = cfg.ssm.d_conv
+    inner, nh, head = mamba_dims(cfg)
+    return {"conv": jnp.zeros((batch, dc - 1, inner + 2 * ds), dtype),
+            "ssd": jnp.zeros((batch, nh, ds, head), _F32)}
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 ("Finch": data-dependent decay)
+# ---------------------------------------------------------------------------
+
+def rwkv_dims(cfg):
+    hd = cfg.ssm.d_state if cfg.ssm else 64
+    nh = cfg.d_model // hd
+    return nh, hd
+
+
+def rwkv_init(rng, cfg, dtype):
+    d = cfg.d_model
+    nh, hd = rwkv_dims(cfg)
+    ks = jax.random.split(rng, 8)
+    s = d ** -0.5
+    return {
+        "mu": (jax.random.uniform(ks[0], (5, d)) * 0.1 + 0.45).astype(dtype),
+        "wr": (jax.random.normal(ks[1], (d, d)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[2], (d, d)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[3], (d, d)) * s).astype(dtype),
+        "wg": (jax.random.normal(ks[4], (d, d)) * s).astype(dtype),
+        "ww": (jax.random.normal(ks[5], (d, d)) * s * 0.1).astype(dtype),
+        "w0": jnp.full((d,), -5.0, _F32),
+        "u": (jax.random.normal(ks[6], (nh, hd)) * 0.1).astype(_F32),
+        "wo": (jax.random.normal(ks[7], (d, d)) * s).astype(dtype),
+        "ln_x": jnp.ones((d,), dtype),
+    }
+
+
+def rwkv_apply(params, x, cfg, state=None):
+    """RWKV-6 time mixing. x (B,T,D) -> (y, new_state).
+
+    state: dict(s (B,H,hd,hd) f32, prev (B,D)); None => zeros.
+    """
+    from repro.models.layers import rms_norm
+    b, t, d = x.shape
+    nh, hd = rwkv_dims(cfg)
+
+    prev = state["prev"][:, None] if state is not None else \
+        jnp.zeros((b, 1, d), x.dtype)
+    xshift = jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+    def mix(i):
+        return x + (xshift - x) * params["mu"][i]
+
+    r = (mix(0) @ params["wr"]).reshape(b, t, nh, hd)
+    kk = (mix(1) @ params["wk"]).reshape(b, t, nh, hd)
+    v = (mix(2) @ params["wv"]).reshape(b, t, nh, hd)
+    g = jax.nn.silu(mix(3) @ params["wg"])
+    w = jnp.exp(-jnp.exp(
+        params["w0"] + (mix(4) @ params["ww"]).astype(_F32)))  # (B,T,D)
+    w = w.reshape(b, t, nh, hd)
+
+    s0 = state["s"] if state is not None else jnp.zeros((b, nh, hd, hd), _F32)
+    u = params["u"]
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp    # each (B,H,hd)
+        kv = jnp.einsum("bhk,bhv->bhkv", kt.astype(_F32), vt.astype(_F32))
+        out = jnp.einsum("bhk,bhkv->bhv", rt.astype(_F32),
+                         s + u[None, :, :, None] * kv)
+        s = wt.astype(_F32)[..., None] * s + kv
+        return s, out
+
+    xs = (r.swapaxes(0, 1), kk.swapaxes(0, 1), v.swapaxes(0, 1),
+          w.swapaxes(0, 1))
+    s_fin, ys = jax.lax.scan(step, s0, xs)
+    y = ys.swapaxes(0, 1).reshape(b, t, d).astype(x.dtype)
+    y = rms_norm(y, params["ln_x"], cfg.norm_eps) * g
+    out = y @ params["wo"]
+    return out, {"s": s_fin, "prev": x[:, -1]}
+
+
+def rwkv_state_init(cfg, batch, dtype=_F32):
+    nh, hd = rwkv_dims(cfg)
+    return {"s": jnp.zeros((batch, nh, hd, hd), _F32),
+            "prev": jnp.zeros((batch, cfg.d_model), jnp.dtype(cfg.dtype))}
+
+
+def rwkv_channel_mix_init(rng, cfg, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    return {
+        "mu": (jax.random.uniform(ks[0], (2, d)) * 0.1 + 0.45).astype(dtype),
+        "w_in": (jax.random.normal(ks[1], (d, f)) * d ** -0.5).astype(dtype),
+        "w_out": (jax.random.normal(ks[2], (f, d)) * f ** -0.5).astype(dtype),
+    }
+
+
+def rwkv_channel_mix(params, x, prev=None):
+    """RWKV channel mixing (token-shifted squared-ReLU MLP)."""
+    b, t, d = x.shape
+    pv = prev[:, None] if prev is not None else jnp.zeros((b, 1, d), x.dtype)
+    xshift = jnp.concatenate([pv, x[:, :-1]], axis=1)
+    xk = x + (xshift - x) * params["mu"][0]
+    h = jnp.square(jax.nn.relu(xk @ params["w_in"]))
+    return h @ params["w_out"], x[:, -1]

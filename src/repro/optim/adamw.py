@@ -1,0 +1,128 @@
+"""AdamW with large-model memory policies.
+
+Features used by the big configs (DESIGN.md section 5):
+  * moment dtype policy (f32 default; bf16 for 480B/671B)
+  * adafactor-style factored second moment for matrices (cuts v from
+    O(nm) to O(n+m) — what makes 671B optimizer state fit 512 chips)
+  * global-norm clipping, decoupled weight decay
+  * optimizer state inherits each parameter's sharding (ZeRO by
+    construction: sharded params => sharded moments)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+_F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"
+    factored: bool = False           # factored v for >=2-D params
+    factored_min_size: int = 128
+
+
+def _is_factored(cfg: AdamWConfig, shape) -> bool:
+    return (cfg.factored and len(shape) >= 2 and
+            shape[-1] >= cfg.factored_min_size and
+            shape[-2] >= cfg.factored_min_size)
+
+
+def adamw_init(cfg: AdamWConfig, params):
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def one(p):
+        st = {"m": jnp.zeros(p.shape, mdt)}
+        if _is_factored(cfg, p.shape):
+            st["vr"] = jnp.zeros(p.shape[:-1], _F32)        # row stats
+            st["vc"] = jnp.zeros(p.shape[:-2] + p.shape[-1:], _F32)
+        else:
+            st["v"] = jnp.zeros(p.shape, mdt)
+        return st
+
+    return {"step": jnp.zeros((), jnp.int32),
+            "per_param": jax.tree_util.tree_map(one, params)}
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state, lr_scale=1.0):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    sf = step.astype(_F32)
+
+    # global-norm clip
+    gsq = sum(jnp.sum(jnp.square(g.astype(_F32)))
+              for g in jax.tree_util.tree_leaves(grads))
+    gnorm = jnp.sqrt(gsq)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+    bc1 = 1 - cfg.b1 ** sf
+    bc2 = 1 - cfg.b2 ** sf
+    lr = cfg.lr * lr_scale
+
+    def one(p, g, st):
+        g = g.astype(_F32) * scale
+        m = cfg.b1 * st["m"].astype(_F32) + (1 - cfg.b1) * g
+        if "vr" in st:
+            g2 = jnp.square(g) + 1e-30
+            vr = cfg.b2 * st["vr"] + (1 - cfg.b2) * g2.mean(axis=-1)
+            vc = cfg.b2 * st["vc"] + (1 - cfg.b2) * g2.mean(axis=-2)
+            # rank-1 reconstruction (Adafactor)
+            denom = vr[..., None] * vc[..., None, :] / jnp.maximum(
+                vr.mean(axis=-1)[..., None, None], 1e-30)
+            v_hat = denom / bc2
+            new_st = {"m": m.astype(st["m"].dtype), "vr": vr, "vc": vc}
+        else:
+            v = cfg.b2 * st["v"].astype(_F32) + (1 - cfg.b2) * jnp.square(g)
+            v_hat = v / bc2
+            new_st = {"m": m.astype(st["m"].dtype),
+                      "v": v.astype(st["v"].dtype)}
+        m_hat = m / bc1
+        upd = m_hat / (jnp.sqrt(v_hat) + cfg.eps)
+        decay = cfg.weight_decay if p.ndim >= 2 else 0.0
+        new_p = p.astype(_F32) - lr * (upd + decay * p.astype(_F32))
+        return new_p.astype(p.dtype), new_st
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_s = tdef.flatten_up_to(state["per_param"])
+    out = [one(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+    new_params = tdef.unflatten([o[0] for o in out])
+    new_per = tdef.unflatten([o[1] for o in out])
+    return new_params, {"step": step, "per_param": new_per}, \
+        {"grad_norm": gnorm}
+
+
+def opt_shardings(param_shardings, opt_state_shape, mesh):
+    """Optimizer state shardings derived from parameter shardings."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    flat_ps, _ = jax.tree_util.tree_flatten(param_shardings)
+
+    def per_param(psh, st):
+        out = {}
+        for k, leaf in st.items():
+            spec = psh.spec
+            if k == "vr":
+                out[k] = NamedSharding(mesh, P(*spec[:-1]))
+            elif k == "vc":
+                out[k] = NamedSharding(mesh, P(*(spec[:-2] + spec[-1:])))
+            else:
+                out[k] = psh
+        return out
+
+    flat_st = jax.tree_util.tree_structure(param_shardings)
+    per = jax.tree_util.tree_map(
+        per_param, param_shardings, opt_state_shape["per_param"],
+        is_leaf=lambda x: isinstance(x, NamedSharding))
+    return {"step": NamedSharding(mesh, P()), "per_param": per}

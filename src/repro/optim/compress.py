@@ -1,0 +1,54 @@
+"""Int8 error-feedback gradient compression for the cross-pod hop.
+
+Distributed-optimization trick (DESIGN.md section 5): intra-pod
+gradients reduce at full precision over fast ICI; the slow cross-pod
+all-reduce runs on int8 with per-row scales.  Quantization error is fed
+back into the next step's gradient (error-feedback / EF-SGD), which
+keeps convergence intact (1-bit Adam / PowerSGD lineage).
+
+The train driver enables this when the mesh has a 'pod' axis; tests
+check the EF invariant (sum of quantized + residual == original).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_F32 = jnp.float32
+
+
+def int8_compress(g, residual=None):
+    """g (...) f32 -> (q int8, scale f32 rowwise, new_residual)."""
+    if residual is not None:
+        g = g.astype(_F32) + residual
+    else:
+        g = g.astype(_F32)
+    flat = g.reshape(-1, g.shape[-1]) if g.ndim > 1 else g.reshape(1, -1)
+    scale = jnp.max(jnp.abs(flat), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(_F32) * scale
+    new_residual = (flat - deq).reshape(g.shape)
+    return q.reshape(g.shape), scale.reshape(
+        g.shape[:-1] + (1,) if g.ndim > 1 else (1, 1)), new_residual
+
+
+def int8_decompress(q, scale, shape=None):
+    out = q.astype(_F32) * scale
+    return out if shape is None else out.reshape(shape)
+
+
+def compressed_psum(x, axis_name: str, residual=None):
+    """All-reduce x over ``axis_name`` in int8 with error feedback.
+
+    Implemented as an int8 all-gather + local dequantized sum so the
+    bytes on the wire (and in the dry-run HLO) really are 1/4 of an f32
+    all-reduce; per-rank scales ride along (one f32 per row).
+    Returns (summed f32, new_residual).
+    """
+    q, scale, new_res = int8_compress(x, residual)
+    qs = jax.lax.all_gather(q, axis_name)       # s8 on the wire
+    ss = jax.lax.all_gather(scale, axis_name)
+    summed = (qs.astype(_F32) * ss).sum(axis=0)
+    return summed, new_res

@@ -1,0 +1,5 @@
+from repro.runtime.ft import FaultToleranceManager, NodeState, StragglerDetector
+from repro.runtime.elastic import ElasticPlan, plan_remesh
+
+__all__ = ["FaultToleranceManager", "NodeState", "StragglerDetector",
+           "ElasticPlan", "plan_remesh"]

@@ -1,0 +1,18 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests see 1 real device;
+multi-device coverage runs in subprocesses (test_multidevice.py)."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture
+def mesh11():
+    import jax
+    from jax.sharding import AxisType
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)

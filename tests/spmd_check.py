@@ -1,0 +1,231 @@
+"""Multi-device correctness battery; run under 8 fake CPU devices.
+
+Invoked by test_multidevice.py as a subprocess (the parent test process
+keeps its 1-device world).  Exits non-zero on any failure.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import ShapeDtypeStruct as SDS
+from jax.sharding import AxisType, PartitionSpec as P
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import ConProm, get_backend, route
+from repro.containers import bloom as bl
+from repro.containers import hashmap as hm
+from repro.containers import queue as q
+
+
+def check(name, ok):
+    print(f"{'PASS' if ok else 'FAIL'} {name}")
+    if not ok:
+        sys.exit(1)
+
+
+def main():
+    assert len(jax.devices()) == 8
+    mesh = jax.make_mesh((8,), ("bcl",), axis_types=(AxisType.Auto,))
+    np.random.seed(0)
+    PROCS, NLOC = 8, 64
+
+    # ---- hashmap across devices vs dict oracle ----
+    def build_and_query(keys, vals, queries):
+        bk = get_backend("bcl")
+        spec, st = hm.hashmap_create(bk, 8192, SDS((), jnp.uint32),
+                                     SDS((), jnp.uint32), block_size=16)
+        st, ok = hm.insert(bk, spec, st, keys, vals, capacity=NLOC)
+        st, v, found = hm.find(bk, spec, st, queries, capacity=NLOC)
+        return ok, v, found
+
+    keys = jnp.asarray(np.random.permutation(1 << 20)[:PROCS * NLOC],
+                       jnp.uint32)
+    vals = keys * 7 + 1
+    queries = jnp.concatenate([keys[:PROCS * NLOC // 2],
+                               keys[:PROCS * NLOC // 2] + (1 << 21)])
+    f = jax.jit(jax.shard_map(build_and_query, mesh=mesh,
+                              in_specs=(P("bcl"),) * 3,
+                              out_specs=(P("bcl"),) * 3))
+    ok, v, found = f(keys, vals, queries)
+    nf, nv, nq = map(np.asarray, (found, v, queries))
+    present = nq < (1 << 21)
+    check("hashmap.insert_all", bool(np.asarray(ok).all()))
+    check("hashmap.find_present", bool(nf[present].all()))
+    check("hashmap.find_absent", not bool(nf[~present].any()))
+    check("hashmap.values", bool((nv[present] == nq[present] * 7 + 1).all()))
+
+    # ---- ISx-style queue exchange preserves the multiset ----
+    def isx(values, dest):
+        bk = get_backend("bcl")
+        spec, st = q.queue_create(bk, 512, SDS((), jnp.uint32))
+        st, _, dropped = q.push(bk, spec, st, values, dest, capacity=128)
+        rows, got = q.local_drain(spec, st)
+        return rows, got, dropped[None]
+
+    vals2 = jnp.asarray(np.random.randint(0, 1 << 20, PROCS * 100),
+                        jnp.uint32)
+    dest2 = (vals2 // ((1 << 20) // 8)).astype(jnp.int32).clip(0, 7)
+    g = jax.jit(jax.shard_map(isx, mesh=mesh, in_specs=(P("bcl"),) * 2,
+                              out_specs=(P("bcl"),) * 3))
+    rows, got, dropped = g(vals2, dest2)
+    rec = np.asarray(rows)[np.asarray(got)]
+    check("queue.multiset",
+          sorted(rec.tolist()) == sorted(np.asarray(vals2).tolist()))
+    check("queue.nodrop", int(np.asarray(dropped).sum()) == 0)
+    # destination correctness: each received value belongs to its rank
+    rows2 = np.asarray(rows).reshape(8, -1)
+    got2 = np.asarray(got).reshape(8, -1)
+    ok_dest = all(
+        (rows2[r][got2[r]] // ((1 << 20) // 8)).clip(0, 7).astype(int)
+        .tolist() == [r] * got2[r].sum() for r in range(8))
+    check("queue.destinations", ok_dest)
+
+    # ---- bloom: distributed atomicity of duplicate insertion ----
+    def bloomdup(items):
+        bk = get_backend("bcl")
+        spec, st = bl.bloom_create(bk, 1 << 16, SDS((), jnp.uint32), k=4)
+        st, already = bl.insert(bk, spec, st, items, capacity=64)
+        return already
+
+    dup = jnp.full((PROCS * 16,), 777, jnp.uint32)
+    fb = jax.jit(jax.shard_map(bloomdup, mesh=mesh, in_specs=(P("bcl"),),
+                               out_specs=P("bcl")))
+    already = np.asarray(fb(dup))
+    check("bloom.dup_atomicity", int((~already).sum()) == 1)
+
+    # ---- SPMD == serial semantics (portability across backends) ----
+    def serial_hashmap(keys, vals, queries):
+        bk = get_backend(None)
+        spec, st = hm.hashmap_create(bk, 8192, SDS((), jnp.uint32),
+                                     SDS((), jnp.uint32), block_size=16)
+        st, _ = hm.insert(bk, spec, st, keys, vals, capacity=len(keys))
+        st, v, found = hm.find(bk, spec, st, queries, capacity=len(queries))
+        return v, found
+
+    vs, fs = serial_hashmap(keys, vals, queries)
+    check("portability.same_found",
+          np.array_equal(np.asarray(fs), nf))
+    check("portability.same_values",
+          np.array_equal(np.asarray(vs)[np.asarray(fs)], nv[nf]))
+
+    # ---- mini production-style dry-run on a (2,4) mesh ----
+    from repro.configs import get_config, reduced
+    from repro.configs.shapes import ShapeSpec, input_specs
+    from repro.launch.steps import (batch_shardings, make_train_step,
+                                    train_shardings)
+    mesh2 = jax.make_mesh((2, 4), ("data", "model"),
+                          axis_types=(AxisType.Auto,) * 2)
+    for arch in ("qwen3-4b", "arctic-480b"):
+        cfg = reduced(get_config(arch), n_heads=4, n_kv_heads=4,
+                      d_model=64, vocab=512)
+        shape = ShapeSpec("t", 64, 4, "train")
+        specs = input_specs(cfg, shape)
+        pshape, oshape, psh, osh = train_shardings(cfg, mesh2)
+        bsh = batch_shardings(cfg, mesh2, specs)
+        step = make_train_step(cfg, mesh2)
+        compiled = jax.jit(step, in_shardings=(psh, osh, bsh),
+                           out_shardings=(psh, osh, None)).lower(
+            pshape, oshape, specs).compile()
+        check(f"mini_dryrun.{arch}",
+              compiled.memory_analysis() is not None)
+
+    # ---- MoE exchange dispatch == dense-expert reference ----
+    def moe_equiv():
+        import dataclasses
+        from repro.models import moe as moe_mod
+        from repro.models.sharding import Axes
+        cfg = reduced(get_config("arctic-480b"), d_model=32, vocab=256)
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, n_experts=8, top_k=2,
+                                         expert_d_ff=16),
+            moe_capacity_slack=8.0)
+        rng = jax.random.PRNGKey(0)
+        params = moe_mod.moe_init(rng, cfg, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 32))
+        axes8 = Axes.from_mesh(mesh2)
+        y_spmd, _ = moe_mod.moe_apply(params, x, cfg, mesh2, axes8)
+
+        mesh1 = jax.make_mesh((1, 1), ("data", "model"),
+                              axis_types=(AxisType.Auto,) * 2)
+        axes1 = Axes.from_mesh(mesh1)
+        y_ser, _ = moe_mod.moe_apply(params, x, cfg, mesh1, axes1)
+        cfg_dd = dataclasses.replace(cfg, moe_dedup_dispatch=True)
+        y_dd, _ = moe_mod.moe_apply(params, x, cfg_dd, mesh2, axes8)
+        return (np.allclose(np.asarray(y_spmd), np.asarray(y_ser),
+                            atol=1e-4),
+                np.allclose(np.asarray(y_dd), np.asarray(y_ser),
+                            atol=1e-4))
+
+    eq_std, eq_dd = moe_equiv()
+    check("moe.spmd_equals_serial", eq_std)
+    check("moe.dedup_dispatch_parity", eq_dd)
+
+    # ---- GPipe pipeline: 4 stages over a 'stage' axis == sequential ----
+    from repro.parallel import gpipe
+    smesh = jax.make_mesh((4,), ("stage",), axis_types=(AxisType.Auto,))
+    ws = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 8)) * 0.4
+    xmb = jax.random.normal(jax.random.PRNGKey(1), (6, 2, 8))
+
+    def stage(params, xx):
+        return jnp.tanh(xx @ params)
+
+    out = gpipe(stage, ws, xmb, smesh, axis="stage")
+    expect = xmb
+    for i in range(4):
+        expect = jnp.tanh(expect @ ws[i])
+    check("gpipe.4stage_sequential_parity",
+          bool(np.allclose(np.asarray(out), np.asarray(expect),
+                           atol=1e-5)))
+
+    # ---- ISx weak scaling shape: per-rank keys constant, 8 ranks ----
+    def isx_weak(values):
+        bk = get_backend("bcl")
+        spec, st = q.queue_create(bk, 2048, SDS((), jnp.uint32))
+        dest = (values // ((1 << 20) // 8)).astype(jnp.int32).clip(0, 7)
+        st, _, dropped = q.push(bk, spec, st, values, dest, capacity=512)
+        rows, got = q.local_drain(spec, st)
+        return jnp.sort(jnp.where(got, rows, jnp.uint32(0xFFFFFFFF))), \
+            got.sum()[None]
+
+    keys8 = jnp.asarray(np.random.randint(0, 1 << 20, 8 * 1024), jnp.uint32)
+    fw = jax.jit(jax.shard_map(isx_weak, mesh=mesh, in_specs=(P("bcl"),),
+                               out_specs=(P("bcl"), P("bcl"))))
+    srted, counts = fw(keys8)
+    merged = np.asarray(srted).reshape(8, -1)
+    cnts = np.asarray(counts)
+    glob = np.concatenate([merged[r][: cnts[r]] for r in range(8)])
+    check("isx.weak_scaling_sorted",
+          np.array_equal(np.sort(np.asarray(keys8)), np.sort(glob)) and
+          all(np.all(np.diff(merged[r][: cnts[r]]) >= 0) for r in range(8)))
+
+    # ---- elastic checkpoint: save on (2,4), restore onto (4,2) ----
+    import tempfile
+    from repro.checkpoint import restore_checkpoint, save_checkpoint
+    from jax.sharding import NamedSharding
+    mesh_a = jax.make_mesh((2, 4), ("data", "model"),
+                           axis_types=(AxisType.Auto,) * 2)
+    mesh_b = jax.make_mesh((4, 2), ("data", "model"),
+                           axis_types=(AxisType.Auto,) * 2)
+    w = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
+    w_a = jax.device_put(w, NamedSharding(mesh_a, P("data", "model")))
+    with tempfile.TemporaryDirectory() as td:
+        save_checkpoint(td, 3, {"w": w_a})
+        got, step = restore_checkpoint(
+            td, None, {"w": jnp.zeros((8, 8))},
+            shardings={"w": NamedSharding(mesh_b, P("data", "model"))})
+    ok_val = np.array_equal(np.asarray(got["w"]), np.asarray(w))
+    ok_shard = got["w"].sharding.mesh.shape["data"] == 4
+    check("elastic.reshard_on_restore", ok_val and ok_shard and step == 3)
+
+    print("ALL SPMD CHECKS PASSED")
+
+
+if __name__ == "__main__":
+    main()

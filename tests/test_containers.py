@@ -1,0 +1,279 @@
+"""Container semantics vs python-dict/list oracles (serial backend)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import ShapeDtypeStruct as SDS
+
+from repro.core import ConProm, costs, get_backend
+from repro.containers import bloom as bl
+from repro.containers import darray as da
+from repro.containers import hashmap as hm
+from repro.containers import hashmap_buffer as hb
+from repro.containers import queue as q
+
+
+@pytest.fixture
+def bk():
+    return get_backend(None)
+
+
+class TestHashMap:
+    def test_insert_find_roundtrip(self, bk, rng):
+        spec, st = hm.hashmap_create(bk, 2048, SDS((), jnp.uint32),
+                                     SDS((), jnp.uint32), block_size=16)
+        keys = jnp.asarray(rng.permutation(10000)[:500], jnp.uint32)
+        vals = keys * 13 + 1
+        st, ok = hm.insert(bk, spec, st, keys, vals, capacity=500)
+        assert bool(ok.all())
+        st, v, found = hm.find(bk, spec, st, keys, capacity=500)
+        assert bool(found.all())
+        assert np.array_equal(np.asarray(v), np.asarray(vals))
+
+    def test_missing_keys_not_found(self, bk, rng):
+        spec, st = hm.hashmap_create(bk, 1024, SDS((), jnp.uint32),
+                                     SDS((), jnp.uint32), block_size=16)
+        keys = jnp.arange(100, dtype=jnp.uint32)
+        st, _ = hm.insert(bk, spec, st, keys, keys, capacity=128)
+        st, _, found = hm.find(
+            bk, spec, st, jnp.arange(1000, 1100, dtype=jnp.uint32),
+            capacity=128, promise=ConProm.HashMap.find)
+        assert not bool(found.any())
+
+    def test_overwrite_semantics(self, bk):
+        spec, st = hm.hashmap_create(bk, 512, SDS((), jnp.uint32),
+                                     SDS((), jnp.uint32), block_size=16)
+        keys = jnp.asarray([7, 7, 7], jnp.uint32)
+        vals = jnp.asarray([1, 2, 3], jnp.uint32)
+        st, _ = hm.insert(bk, spec, st, keys, vals, capacity=8)
+        st, v, found = hm.find(bk, spec, st, keys[:1], capacity=8)
+        assert int(v[0]) == 3  # sequential last-wins
+
+    def test_vs_dict_oracle(self, bk, rng):
+        spec, st = hm.hashmap_create(bk, 4096, SDS((), jnp.uint32),
+                                     SDS((), jnp.uint32), block_size=16)
+        oracle = {}
+        for _ in range(4):
+            keys = rng.integers(0, 400, 200).astype(np.uint32)
+            vals = rng.integers(0, 1 << 30, 200).astype(np.uint32)
+            for k_, v_ in zip(keys, vals):
+                oracle[int(k_)] = int(v_)
+            st, ok = hm.insert(bk, spec, st, jnp.asarray(keys),
+                               jnp.asarray(vals), capacity=256)
+            assert bool(ok.all())
+        probe = jnp.asarray(sorted(oracle), jnp.uint32)
+        st, v, found = hm.find(bk, spec, st, probe, capacity=512)
+        assert bool(found.all())
+        assert np.array_equal(np.asarray(v),
+                              np.asarray([oracle[int(k_)] for k_ in probe]))
+
+    def test_accumulate_mode(self, bk):
+        from repro.kernels.ops import MODE_ADD
+        spec, st = hm.hashmap_create(bk, 512, SDS((), jnp.uint32),
+                                     SDS((), jnp.uint32), block_size=16)
+        keys = jnp.asarray([1, 2, 1, 1, 2], jnp.uint32)
+        ones = jnp.ones(5, jnp.uint32)
+        st, _ = hm.insert(bk, spec, st, keys, ones, capacity=8,
+                          mode=MODE_ADD)
+        st, _ = hm.insert(bk, spec, st, keys, ones, capacity=8,
+                          mode=MODE_ADD)
+        st, v, found = hm.find(bk, spec, st, jnp.asarray([1, 2], jnp.uint32),
+                               capacity=8)
+        assert v.tolist() == [6, 4]
+
+    def test_count_and_entries(self, bk):
+        spec, st = hm.hashmap_create(bk, 512, SDS((), jnp.uint32),
+                                     SDS((), jnp.uint32), block_size=16)
+        keys = jnp.arange(40, dtype=jnp.uint32)
+        st, _ = hm.insert(bk, spec, st, keys, keys, capacity=64)
+        assert int(hm.count_ready(bk, st)) == 40
+        k, v, occ = hm.local_entries(spec, st)
+        assert int(occ.sum()) == 40
+
+    def test_resize(self, bk):
+        spec, st = hm.hashmap_create(bk, 256, SDS((), jnp.uint32),
+                                     SDS((), jnp.uint32), block_size=16)
+        keys = jnp.arange(100, dtype=jnp.uint32)
+        st, _ = hm.insert(bk, spec, st, keys, keys * 2, capacity=128)
+        spec2, st2 = hm.resize(bk, spec, st, 1024, capacity_per_pair=256)
+        st2, v, found = hm.find(bk, spec2, st2, keys, capacity=128)
+        assert bool(found.all())
+        assert np.array_equal(np.asarray(v), np.asarray(keys * 2))
+
+    def test_full_table_fails_gracefully(self, bk):
+        spec, st = hm.hashmap_create(bk, 16, SDS((), jnp.uint32),
+                                     SDS((), jnp.uint32), block_size=16)
+        keys = jnp.arange(100, dtype=jnp.uint32) + 1
+        st, ok = hm.insert(bk, spec, st, keys, keys, capacity=128,
+                           attempts=1)
+        assert int(ok.sum()) <= 16
+        assert not bool(ok.all())
+
+
+class TestQueues:
+    def test_fifo_order(self, bk):
+        spec, st = q.queue_create(bk, 64, SDS((), jnp.uint32))
+        vals = jnp.arange(10, dtype=jnp.uint32) + 1
+        st, pushed, dropped = q.push(bk, spec, st, vals,
+                                     jnp.zeros(10, jnp.int32), capacity=16)
+        assert int(pushed) == 10 and int(dropped) == 0
+        st, out, got = q.local_nonatomic_pop(spec, st, 10)
+        assert np.array_equal(np.asarray(out)[np.asarray(got)],
+                              np.asarray(vals))
+
+    def test_ring_wraparound(self, bk):
+        spec, st = q.queue_create(bk, 8, SDS((), jnp.uint32))
+        for wave in range(5):
+            vals = jnp.arange(4, dtype=jnp.uint32) + wave * 10
+            st, _, dropped = q.push(bk, spec, st, vals,
+                                    jnp.zeros(4, jnp.int32), capacity=8)
+            assert int(dropped) == 0
+            st, out, got = q.local_nonatomic_pop(spec, st, 4)
+            assert np.array_equal(np.asarray(out)[np.asarray(got)],
+                                  np.asarray(vals))
+
+    def test_full_ring_drops(self, bk):
+        spec, st = q.queue_create(bk, 8, SDS((), jnp.uint32))
+        vals = jnp.arange(20, dtype=jnp.uint32)
+        st, pushed, dropped = q.push(bk, spec, st, vals,
+                                     jnp.zeros(20, jnp.int32), capacity=32)
+        assert int(pushed) == 8 and int(dropped) == 12
+
+    def test_remote_pop(self, bk):
+        spec, st = q.queue_create(bk, 64, SDS((), jnp.uint32))
+        vals = jnp.arange(20, dtype=jnp.uint32) + 1
+        st, _, _ = q.push(bk, spec, st, vals, jnp.zeros(20, jnp.int32),
+                          capacity=32)
+        st, out, got = q.pop(bk, spec, st, 5, 0)
+        assert int(got.sum()) == 5
+        assert np.array_equal(np.asarray(out)[np.asarray(got)],
+                              np.asarray(vals[:5]))
+        assert int(q.size(st)) == 15
+
+    def test_resize_preserves(self, bk):
+        spec, st = q.queue_create(bk, 16, SDS((), jnp.uint32))
+        vals = jnp.arange(10, dtype=jnp.uint32) + 1
+        st, _, _ = q.push(bk, spec, st, vals, jnp.zeros(10, jnp.int32),
+                          capacity=16)
+        spec2, st2 = q.resize(bk, spec, st, 64)
+        st2, out, got = q.local_nonatomic_pop(spec2, st2, 10)
+        assert np.array_equal(np.asarray(out)[np.asarray(got)],
+                              np.asarray(vals))
+
+    def test_circular_cost_extra_amo(self, bk):
+        specF, stF = q.queue_create(bk, 32, SDS((), jnp.uint32))
+        specC, stC = q.queue_create(bk, 32, SDS((), jnp.uint32),
+                                    circular=True)
+        vals = jnp.arange(4, dtype=jnp.uint32)
+        with costs.recording() as lf:
+            q.push(bk, specF, stF, vals, jnp.zeros(4, jnp.int32), capacity=8)
+        with costs.recording() as lc:
+            q.push(bk, specC, stC, vals, jnp.zeros(4, jnp.int32), capacity=8)
+        assert lf.by_op("queue.push").A == 1      # Table 2: A + nW
+        assert lc.by_op("queue.push").A == 2      # Table 2: 2A + nW
+
+
+class TestBloom:
+    def test_no_false_negatives(self, bk, rng):
+        spec, st = bl.bloom_create(bk, 1 << 15, SDS((), jnp.uint32), k=4)
+        items = jnp.asarray(rng.permutation(1 << 20)[:512], jnp.uint32)
+        st, _ = bl.insert(bk, spec, st, items, capacity=512)
+        present = bl.find(bk, spec, st, items, capacity=512)
+        assert bool(present.all())
+
+    def test_false_positive_rate_bounded(self, bk, rng):
+        spec, st = bl.bloom_create(bk, 1 << 16, SDS((), jnp.uint32), k=4)
+        items = jnp.asarray(rng.permutation(1 << 20)[:1000], jnp.uint32)
+        st, _ = bl.insert(bk, spec, st, items, capacity=1024)
+        absent = jnp.asarray(rng.permutation(1 << 20)[:1000] + (1 << 21),
+                             jnp.uint32)
+        fp = bl.find(bk, spec, st, absent, capacity=1024)
+        assert float(fp.mean()) < 0.05
+
+    def test_atomic_first_inserter(self, bk):
+        """Paper 5.4.2: duplicate batch insertions — exactly one 'new'."""
+        spec, st = bl.bloom_create(bk, 1 << 12, SDS((), jnp.uint32), k=4)
+        dup = jnp.full((32,), 12345, jnp.uint32)
+        st, already = bl.insert(bk, spec, st, dup, capacity=64)
+        assert int((~already).sum()) == 1
+
+    def test_second_insert_present(self, bk):
+        spec, st = bl.bloom_create(bk, 1 << 12, SDS((), jnp.uint32), k=4)
+        items = jnp.arange(64, dtype=jnp.uint32)
+        st, _ = bl.insert(bk, spec, st, items, capacity=64)
+        st, already = bl.insert(bk, spec, st, items, capacity=64)
+        assert bool(already.all())
+
+    def test_insert_cost_single_amo(self, bk):
+        spec, st = bl.bloom_create(bk, 1 << 12, SDS((), jnp.uint32), k=4)
+        with costs.recording() as log:
+            bl.insert(bk, spec, st, jnp.arange(8, dtype=jnp.uint32),
+                      capacity=8)
+        assert log.by_op("bloom.insert").A == 1   # Table 2: A
+
+
+class TestDArray:
+    def test_rput_rget(self, bk, rng):
+        spec, st = da.darray_create(bk, 256, SDS((), jnp.float32))
+        idx = jnp.asarray(rng.permutation(256)[:64], jnp.int32)
+        vals = jnp.asarray(rng.standard_normal(64), jnp.float32)
+        st = da.rput(bk, spec, st, idx, vals, capacity=64)
+        out, found = da.rget(bk, spec, st, idx, capacity=64)
+        assert bool(found.all())
+        assert np.allclose(np.asarray(out), np.asarray(vals))
+
+    def test_rput_add_mode(self, bk):
+        spec, st = da.darray_create(bk, 64, SDS((), jnp.uint32))
+        idx = jnp.asarray([3, 3, 3, 5], jnp.int32)
+        vals = jnp.asarray([1, 2, 3, 9], jnp.uint32)
+        st = da.rput(bk, spec, st, idx, vals, capacity=8, mode="add")
+        out, _ = da.rget(bk, spec, st, jnp.asarray([3, 5], jnp.int32),
+                         capacity=8)
+        assert out.tolist() == [6, 9]
+
+    def test_to_global(self, bk):
+        spec, st = da.darray_create(bk, 32, SDS((), jnp.uint32))
+        st = da.local_write(spec, st, jnp.arange(32),
+                            jnp.arange(32, dtype=jnp.uint32) * 2)
+        full = da.to_global(bk, spec, st)
+        assert np.array_equal(np.asarray(full),
+                              np.arange(32, dtype=np.uint32) * 2)
+
+
+class TestHashMapBuffer:
+    def test_figure4_workflow(self, bk, rng):
+        """Paper Fig. 4: insert into the buffer, flush, then find."""
+        mspec, mstate = hm.hashmap_create(bk, 2048, SDS((), jnp.uint32),
+                                          SDS((), jnp.uint32), block_size=16)
+        bspec, bstate = hb.create(bk, mspec, mstate, queue_capacity=1024,
+                                  buffer_cap=512)
+        keys = jnp.asarray(rng.permutation(5000)[:300], jnp.uint32)
+        vals = keys + 7
+        bstate, ovf = hb.insert(bspec, bstate, keys, vals)
+        assert int(ovf) == 0
+        bstate, dropped = hb.flush(bk, bspec, bstate, capacity=512)
+        assert int(dropped) == 0
+        _, v, found = hm.find(bk, mspec, bstate.map, keys, capacity=512,
+                              promise=ConProm.HashMap.find)
+        assert bool(found.all())
+        assert np.array_equal(np.asarray(v), np.asarray(vals))
+
+    def test_buffer_overflow_reported(self, bk):
+        mspec, mstate = hm.hashmap_create(bk, 512, SDS((), jnp.uint32),
+                                          SDS((), jnp.uint32), block_size=16)
+        bspec, bstate = hb.create(bk, mspec, mstate, queue_capacity=64,
+                                  buffer_cap=16)
+        keys = jnp.arange(40, dtype=jnp.uint32)
+        bstate, ovf = hb.insert(bspec, bstate, keys, keys)
+        assert int(ovf) == 24
+
+    def test_insert_is_local(self, bk):
+        mspec, mstate = hm.hashmap_create(bk, 512, SDS((), jnp.uint32),
+                                          SDS((), jnp.uint32), block_size=16)
+        bspec, bstate = hb.create(bk, mspec, mstate, queue_capacity=64,
+                                  buffer_cap=64)
+        with costs.recording() as log:
+            hb.insert(bspec, bstate, jnp.arange(8, dtype=jnp.uint32),
+                      jnp.arange(8, dtype=jnp.uint32))
+        c = log.by_op("hashmap_buffer.insert")
+        assert c.collectives == 0 and c.local == 8

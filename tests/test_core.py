@@ -1,0 +1,137 @@
+"""BCL core unit tests: pointers, hashing, object containers, promises,
+cost accounting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import ShapeDtypeStruct as SDS
+
+from repro.core import costs
+from repro.core.hashing import double_hash, fmix32, hash_lanes
+from repro.core.object_container import (IdentityPacker, StructPacker,
+                                         packer_for)
+from repro.core.pointers import GlobalPointer, from_global_index, global_index
+from repro.core.promises import (ConProm, Promise, find_only,
+                                 fully_atomic_hashmap, local_only)
+
+
+class TestPointers:
+    def test_arithmetic(self):
+        p = GlobalPointer(jnp.int32(2), jnp.int32(10))
+        q = p + 5
+        assert int(q.offset) == 15 and int(q.rank) == 2
+        r = q - 3
+        assert int(r.offset) == 12
+
+    def test_global_index_roundtrip(self):
+        idx = jnp.arange(100, dtype=jnp.int32)
+        ptr = from_global_index(idx, local_n=16)
+        back = global_index(ptr, local_n=16)
+        assert np.array_equal(np.asarray(back), np.asarray(idx))
+
+    def test_null(self):
+        p = GlobalPointer.null((4,))
+        assert bool(p.is_null().all())
+
+    def test_is_pytree(self):
+        p = GlobalPointer(jnp.zeros(3, jnp.int32), jnp.ones(3, jnp.int32))
+        leaves = jax.tree_util.tree_leaves(p)
+        assert len(leaves) == 2
+
+
+class TestHashing:
+    def test_avalanche(self):
+        x = jnp.arange(1 << 12, dtype=jnp.uint32)
+        h = fmix32(x)
+        # bit balance: every output bit set 40-60% of the time
+        bits = ((np.asarray(h)[:, None] >> np.arange(32)[None]) & 1)
+        frac = bits.mean(axis=0)
+        assert (frac > 0.4).all() and (frac < 0.6).all()
+
+    def test_lane_hash_distinct_seeds(self):
+        lanes = jnp.arange(256, dtype=jnp.uint32)[:, None]
+        h1 = hash_lanes(lanes, seed=1)
+        h2 = hash_lanes(lanes, seed=2)
+        assert not np.array_equal(np.asarray(h1), np.asarray(h2))
+
+    def test_double_hash_range(self):
+        lanes = jnp.arange(64, dtype=jnp.uint32)[:, None]
+        hk = double_hash(lanes, k=4, modulo=64)
+        assert hk.shape == (64, 4)
+        assert int(hk.max()) < 64
+
+
+class TestObjectContainers:
+    def test_identity_f32_roundtrip(self):
+        p = packer_for(SDS((), jnp.float32))
+        assert isinstance(p, IdentityPacker) and p.lanes == 1
+        x = jnp.linspace(-5, 5, 17)
+        assert np.allclose(np.asarray(p.unpack(p.pack(x))), np.asarray(x))
+
+    def test_identity_is_bitcast_only(self):
+        """Copy elision: packing 32-bit data lowers to a bitcast, no math."""
+        p = packer_for(SDS((), jnp.float32))
+        jaxpr = jax.make_jaxpr(p.pack)(jnp.zeros(8))
+        prims = {e.primitive.name for e in jaxpr.eqns}
+        assert prims <= {"bitcast_convert_type", "reshape", "broadcast_in_dim"}
+
+    def test_struct_roundtrip(self):
+        p = packer_for({"hi": SDS((), jnp.uint32), "lo": SDS((), jnp.uint32),
+                        "val": SDS((), jnp.float32),
+                        "vec": SDS((3,), jnp.int32)})
+        assert isinstance(p, StructPacker)
+        rec = {"hi": jnp.arange(5, dtype=jnp.uint32),
+               "lo": jnp.arange(5, dtype=jnp.uint32) * 3,
+               "val": jnp.linspace(0, 1, 5),
+               "vec": jnp.arange(15, dtype=jnp.int32).reshape(5, 3)}
+        out = p.unpack(p.pack(rec))
+        for k in rec:
+            assert np.array_equal(np.asarray(out[k]), np.asarray(rec[k])), k
+
+    def test_small_dtypes(self):
+        p = packer_for({"b": SDS((), jnp.uint8), "h": SDS((), jnp.bfloat16)})
+        rec = {"b": jnp.arange(4, dtype=jnp.uint8),
+               "h": jnp.asarray([1.0, -2.0, 0.5, 3.25], jnp.bfloat16)}
+        out = p.unpack(p.pack(rec))
+        assert np.array_equal(np.asarray(out["b"]), np.asarray(rec["b"]))
+        assert np.array_equal(np.asarray(out["h"], dtype=np.float32),
+                              np.asarray(rec["h"], dtype=np.float32))
+
+    def test_64bit_rejected(self):
+        with pytest.raises(TypeError):
+            packer_for({"x": SDS((), jnp.int64)})
+
+    def test_lane_count_passthrough(self):
+        p = packer_for(4)
+        assert p.lanes == 4
+
+
+class TestPromises:
+    def test_paper_spelling(self):
+        pr = ConProm.HashMap.find | ConProm.HashMap.insert
+        assert fully_atomic_hashmap(pr)
+        assert not find_only(pr)
+        assert find_only(ConProm.HashMap.find)
+        assert local_only(ConProm.HashMap.local)
+
+    def test_queue_promises(self):
+        pr = ConProm.CircularQueue.push_pop
+        assert pr & Promise.PUSH and pr & Promise.POP
+
+
+class TestCosts:
+    def test_formula_rendering(self):
+        c = costs.Cost(A=2, W=1)
+        assert c.formula() == "2A + W"
+        c = costs.Cost(A=1, R=5)
+        assert c.formula() == "A + 5R"
+
+    def test_recording_scopes(self):
+        with costs.recording() as log:
+            costs.record("op", costs.Cost(A=1))
+            with costs.recording() as inner:
+                costs.record("op", costs.Cost(R=2))
+            costs.record("op", costs.Cost(W=3))
+        assert inner.total().R == 2 and inner.total().A == 0
+        assert log.total().A == 1 and log.total().W == 3

@@ -1,0 +1,94 @@
+"""Paper Tables 2/3/4: exact best-case cost formulas per operation."""
+
+import jax.numpy as jnp
+from jax import ShapeDtypeStruct as SDS
+
+from repro.core import ConProm, costs, get_backend
+from repro.containers import bloom as bl
+from repro.containers import hashmap as hm
+from repro.containers import queue as q
+
+
+def _one_op(fn):
+    with costs.recording() as log:
+        fn()
+    return log
+
+
+def test_hashmap_insert_fully_atomic_2A_W():
+    bk = get_backend(None)
+    spec, st = hm.hashmap_create(bk, 512, SDS((), jnp.uint32),
+                                 SDS((), jnp.uint32), block_size=16)
+    log = _one_op(lambda: hm.insert(
+        bk, spec, st, jnp.arange(4, dtype=jnp.uint32),
+        jnp.arange(4, dtype=jnp.uint32), capacity=8,
+        promise=ConProm.HashMap.find_insert))
+    c = log.by_op("hashmap.insert")
+    assert c.A == 2 and c.W == 4          # Table 3a: 2A + W per element
+
+
+def test_hashmap_insert_local_is_ell():
+    bk = get_backend(None)
+    spec, st = hm.hashmap_create(bk, 512, SDS((), jnp.uint32),
+                                 SDS((), jnp.uint32), block_size=16)
+    log = _one_op(lambda: hm.insert(
+        bk, spec, st, jnp.arange(4, dtype=jnp.uint32),
+        jnp.arange(4, dtype=jnp.uint32), capacity=8,
+        promise=ConProm.HashMap.local))
+    c = log.by_op("hashmap.insert")
+    assert c.A == 0 and c.W == 0 and c.local == 4   # Table 3b: l
+
+
+def test_hashmap_find_atomic_vs_relaxed():
+    bk = get_backend(None)
+    spec, st = hm.hashmap_create(bk, 512, SDS((), jnp.uint32),
+                                 SDS((), jnp.uint32), block_size=16)
+    keys = jnp.arange(4, dtype=jnp.uint32)
+    st, _ = hm.insert(bk, spec, st, keys, keys, capacity=8)
+    atomic = _one_op(lambda: hm.find(
+        bk, spec, st, keys, capacity=8,
+        promise=ConProm.HashMap.find_insert)).by_op("hashmap.find")
+    relaxed = _one_op(lambda: hm.find(
+        bk, spec, st, keys, capacity=8,
+        promise=ConProm.HashMap.find)).by_op("hashmap.find")
+    assert atomic.A == 2 and atomic.R == 4      # Table 3c: 2A + R
+    assert relaxed.A == 0 and relaxed.R == 4    # Table 3d: R
+
+
+def test_queue_costs_table2():
+    bk = get_backend(None)
+    vals = jnp.arange(6, dtype=jnp.uint32)
+    dest = jnp.zeros(6, jnp.int32)
+
+    fspec, fst = q.queue_create(bk, 64, SDS((), jnp.uint32))
+    cspec, cst = q.queue_create(bk, 64, SDS((), jnp.uint32), circular=True)
+
+    fpush = _one_op(lambda: q.push(bk, fspec, fst, vals, dest,
+                                   capacity=8)).by_op("queue.push")
+    cpush = _one_op(lambda: q.push(bk, cspec, cst, vals, dest,
+                                   capacity=8)).by_op("queue.push")
+    assert fpush.A == 1 and fpush.W == 6        # FastQueue: A + nW
+    assert cpush.A == 2 and cpush.W == 6        # CircularQueue: 2A + nW
+
+    fst, _, _ = q.push(bk, fspec, fst, vals, dest, capacity=8)
+    fpop = _one_op(lambda: q.pop(bk, fspec, fst, 3, 0)).by_op("queue.pop")
+    assert fpop.A == 1 and fpop.R == 3          # FastQueue: A + nR
+
+    lpop = _one_op(lambda: q.local_nonatomic_pop(fspec, fst, 3)
+                   ).by_op("queue.local_nonatomic_pop")
+    assert lpop.A == 0 and lpop.local == 3      # l
+
+    res = _one_op(lambda: q.resize(bk, fspec, fst, 128)).by_op("queue.resize")
+    assert res.B == 1                            # B + l
+
+
+def test_bloom_costs_table2():
+    bk = get_backend(None)
+    spec, st = bl.bloom_create(bk, 1 << 12, SDS((), jnp.uint32), k=4)
+    items = jnp.arange(5, dtype=jnp.uint32)
+    ins = _one_op(lambda: bl.insert(bk, spec, st, items,
+                                    capacity=8)).by_op("bloom.insert")
+    fnd = _one_op(lambda: bl.find(bk, spec, st, items,
+                                  capacity=8)).by_op("bloom.find")
+    assert ins.A == 1                            # Table 2: A (single AMO!)
+    assert fnd.A == 0 and fnd.R == 5             # Table 2: R

@@ -1,0 +1,72 @@
+"""Exchange engine tests (serial backend; SPMD runs in test_multidevice)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import costs, get_backend, route
+from repro.core.exchange import exchange_capacity, reply
+
+
+def test_route_serial_identity():
+    bk = get_backend(None)
+    pay = jnp.arange(10, dtype=jnp.uint32)
+    res = route(bk, pay, jnp.zeros(10, jnp.int32), capacity=10)
+    got = np.sort(np.asarray(res.payload[res.valid][:, 0]))
+    assert np.array_equal(got, np.arange(10))
+    assert int(res.dropped) == 0
+
+
+def test_route_overflow_counted():
+    bk = get_backend(None)
+    pay = jnp.arange(10, dtype=jnp.uint32)
+    res = route(bk, pay, jnp.zeros(10, jnp.int32), capacity=4)
+    assert int(res.dropped) == 6
+    assert int(res.valid.sum()) == 4
+
+
+def test_route_respects_valid_mask():
+    bk = get_backend(None)
+    pay = jnp.arange(10, dtype=jnp.uint32)
+    valid = jnp.asarray([True, False] * 5)
+    res = route(bk, pay, jnp.zeros(10, jnp.int32), capacity=10, valid=valid)
+    assert int(res.valid.sum()) == 5
+    got = set(np.asarray(res.payload[res.valid][:, 0]).tolist())
+    assert got == {0, 2, 4, 6, 8}
+
+
+def test_reply_roundtrip():
+    bk = get_backend(None)
+    pay = jnp.arange(16, dtype=jnp.uint32)
+    res = route(bk, pay, jnp.zeros(16, jnp.int32), capacity=16)
+    out, answered = reply(bk, res, res.payload[:, 0] * 3, orig_n=16)
+    assert bool(answered.all())
+    assert np.array_equal(np.asarray(out[:, 0]), np.arange(16) * 3)
+
+
+def test_cost_recording():
+    bk = get_backend(None)
+    with costs.recording() as log:
+        route(bk, jnp.zeros(8, jnp.uint32), jnp.zeros(8, jnp.int32),
+              capacity=8, op_name="myop")
+    c = log.by_op("myop")
+    assert c.collectives == 1 and c.bytes_moved > 0
+
+
+def test_capacity_heuristic():
+    assert exchange_capacity(1024, 1) == 1024
+    c = exchange_capacity(1024, 16)
+    assert c >= 64 and c <= 1024
+
+
+@given(st.lists(st.integers(0, 3), min_size=1, max_size=64),
+       st.integers(1, 4))
+@settings(max_examples=25, deadline=None)
+def test_route_multiset_preserved(dests, ncopies):
+    """Property: with enough capacity, routing preserves the multiset."""
+    bk = get_backend(None)
+    n = len(dests)
+    pay = jnp.arange(n, dtype=jnp.uint32) * ncopies
+    res = route(bk, pay, jnp.zeros(n, jnp.int32), capacity=n)
+    got = sorted(np.asarray(res.payload[res.valid][:, 0]).tolist())
+    assert got == sorted(np.asarray(pay).tolist())

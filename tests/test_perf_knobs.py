@@ -1,0 +1,195 @@
+"""The EXPERIMENTS.md section-Perf knobs must preserve semantics."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.launch.mesh import make_test_mesh
+from repro.launch.steps import init_state, make_train_step
+from repro.models import lm
+from repro.models.sharding import Axes
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_test_mesh(1, 1)
+
+
+def test_grad_accum_matches_full_batch(mesh):
+    cfg1 = reduced(get_config("qwen3-4b"))
+    cfg2 = dataclasses.replace(cfg1, grad_accum=2)
+    rng = jax.random.PRNGKey(0)
+    params, opt, _, _ = init_state(cfg1, mesh, rng)
+    batch = {"tokens": jax.random.randint(rng, (4, 33), 0, cfg1.vocab),
+             "loss_mask": jnp.ones((4, 32), jnp.float32)}
+    p1, _, m1 = jax.jit(make_train_step(cfg1, mesh))(params, opt, batch)
+    p2, _, m2 = jax.jit(make_train_step(cfg2, mesh))(params, opt, batch)
+    d = max(float(jnp.abs(a - b).max())
+            for a, b in zip(jax.tree_util.tree_leaves(p1),
+                            jax.tree_util.tree_leaves(p2)))
+    assert d < 1e-5
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-4
+
+
+def test_mla_absorb_exact(mesh):
+    cfg = reduced(get_config("deepseek-v3-671b"))
+    cfga = dataclasses.replace(cfg, mla_absorb=True)
+    axes = Axes.from_mesh(mesh)
+    rng = jax.random.PRNGKey(0)
+    p = lm.init_params(cfg, rng)
+    T = 20
+    toks = jax.random.randint(rng, (2, T), 0, cfg.vocab)
+    outs = []
+    for c in (cfg, cfga):
+        cache, _ = lm.prefill(p, c, {"tokens": toks[:, :T - 1]},
+                              cache_len=T + 4, mesh=mesh, axes=axes)
+        lg, cache = lm.decode_step(p, c, cache, toks[:, T - 1:],
+                                   mesh=mesh, axes=axes)
+        tok = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
+        for _ in range(2):
+            lg, cache = lm.decode_step(p, c, cache, tok, mesh=mesh,
+                                       axes=axes)
+            tok = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
+        outs.append(np.asarray(lg))
+    np.testing.assert_allclose(outs[0], outs[1], atol=1e-4, rtol=1e-4)
+
+
+def test_window_cache_ring_exact(mesh):
+    cfg = reduced(get_config("gemma3-4b"))
+    cfgw = dataclasses.replace(cfg, window_cache=True)
+    axes = Axes.from_mesh(mesh)
+    rng = jax.random.PRNGKey(1)
+    p = lm.init_params(cfg, rng)
+    T = 40
+    toks = jax.random.randint(rng, (1, T), 0, cfg.vocab)
+    outs = []
+    for c in (cfg, cfgw):
+        cache, _ = lm.prefill(p, c, {"tokens": toks[:, :T - 1]},
+                              cache_len=T + 4, mesh=mesh, axes=axes)
+        lg, cache = lm.decode_step(p, c, cache, toks[:, T - 1:],
+                                   mesh=mesh, axes=axes)
+        tok = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
+        for _ in range(3):
+            lg, cache = lm.decode_step(p, c, cache, tok, mesh=mesh,
+                                       axes=axes)
+            tok = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
+        outs.append(np.asarray(lg))
+    np.testing.assert_allclose(outs[0], outs[1], atol=1e-4, rtol=1e-4)
+    # and the ring caches really are window-sized
+    cache, _ = lm.prefill(p, cfgw, {"tokens": toks[:, :T - 1]},
+                          cache_len=T + 4, mesh=mesh, axes=axes)
+    k_shapes = [v.shape for kpath, v in
+                jax.tree_util.tree_leaves_with_path(cache)
+                if "'k'" in jax.tree_util.keystr(kpath)]
+    assert any(s[-2] == cfgw.sliding_window for s in k_shapes)
+
+
+def test_window_decode_masks_like_forward(mesh):
+    """Full-cache decode with sliding mask == teacher-forced forward."""
+    cfg = reduced(get_config("gemma3-4b"))
+    axes = Axes.from_mesh(mesh)
+    rng = jax.random.PRNGKey(2)
+    p = lm.init_params(cfg, rng)
+    T = 36
+    toks = jax.random.randint(rng, (1, T), 0, cfg.vocab)
+    h, _, _, _ = lm.forward(p, cfg, toks, mesh=mesh, axes=axes)
+    fl = jnp.einsum("bd,vd->bv", h[:, -1], lm.head_table(p, cfg))
+    cache, _ = lm.prefill(p, cfg, {"tokens": toks[:, :T - 1]},
+                          cache_len=T + 4, mesh=mesh, axes=axes)
+    lg, _ = lm.decode_step(p, cfg, cache, toks[:, T - 1:],
+                           mesh=mesh, axes=axes)
+    np.testing.assert_allclose(np.asarray(fl[:, :cfg.vocab]),
+                               np.asarray(lg[:, :cfg.vocab]),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_bf16_exchange_close(mesh):
+    cfg = reduced(get_config("arctic-480b"))
+    cfgb = dataclasses.replace(cfg, moe_payload_dtype="bfloat16")
+    axes = Axes.from_mesh(mesh)
+    rng = jax.random.PRNGKey(3)
+    p = lm.init_params(cfg, rng)
+    batch = {"tokens": jax.random.randint(rng, (2, 17), 0, cfg.vocab),
+             "loss_mask": jnp.ones((2, 16), jnp.float32)}
+    l1, _ = lm.loss_fn(p, cfg, batch, mesh=mesh, axes=axes)
+    l2, _ = lm.loss_fn(p, cfgb, batch, mesh=mesh, axes=axes)
+    assert abs(float(l1) - float(l2)) < 0.02
+
+
+def test_bf16_probs_close(mesh):
+    cfg = reduced(get_config("qwen3-4b"))
+    cfgb = dataclasses.replace(cfg, attn_probs_bf16=True)
+    axes = Axes.from_mesh(mesh)
+    rng = jax.random.PRNGKey(4)
+    p = lm.init_params(cfg, rng)
+    batch = {"tokens": jax.random.randint(rng, (2, 33), 0, cfg.vocab),
+             "loss_mask": jnp.ones((2, 32), jnp.float32)}
+    l1, _ = lm.loss_fn(p, cfg, batch, mesh=mesh, axes=axes)
+    l2, _ = lm.loss_fn(p, cfgb, batch, mesh=mesh, axes=axes)
+    assert abs(float(l1) - float(l2)) < 0.02
+
+
+def test_moe_dedup_dispatch_exact(mesh):
+    import repro.models.moe as moe_mod
+    cfg = reduced(get_config("deepseek-v3-671b"))
+    cfgd = dataclasses.replace(cfg, moe_dedup_dispatch=True)
+    rng = jax.random.PRNGKey(0)
+    p = moe_mod.moe_init(rng, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
+    axes = Axes.from_mesh(mesh)
+    y1, _ = moe_mod.moe_apply(p, x, cfg, mesh, axes)
+    y2, _ = moe_mod.moe_apply(p, x, cfgd, mesh, axes)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_mla_cp_decode_exact_multirank():
+    """Context-parallel MLA decode == serial decode, model axis = 4.
+
+    Runs in a subprocess world of 8 devices via spmd battery as well;
+    here we check the nm=1 degenerate form composes with absorb."""
+    import subprocess, sys, os
+    code = """
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
+import sys; sys.path.insert(0, 'src')
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import AxisType
+from repro.configs import get_config, reduced
+from repro.models import lm
+from repro.models.sharding import Axes
+rng = jax.random.PRNGKey(0)
+cfg = reduced(get_config('deepseek-v3-671b'))
+cfg = dataclasses.replace(cfg, moe_capacity_slack=8.0)
+p = lm.init_params(cfg, rng)
+T = 24
+toks = jax.random.randint(rng, (2, T), 0, cfg.vocab)
+def run(c, mesh):
+    axes = Axes.from_mesh(mesh)
+    cache, _ = lm.prefill(p, c, {'tokens': toks[:, :T-1]}, cache_len=T+8, mesh=mesh, axes=axes)
+    lg, cache = lm.decode_step(p, c, cache, toks[:, T-1:], mesh=mesh, axes=axes)
+    for _ in range(2):
+        tok = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
+        lg, cache = lm.decode_step(p, c, cache, tok, mesh=mesh, axes=axes)
+    return np.asarray(lg)
+mesh1 = jax.make_mesh((1,1), ('data','model'), axis_types=(AxisType.Auto,)*2)
+mesh24 = jax.make_mesh((2,4), ('data','model'), axis_types=(AxisType.Auto,)*2)
+base = run(cfg, mesh1)
+cfgc = dataclasses.replace(cfg, mla_absorb=True, mla_cp_decode=True)
+cp4 = run(cfgc, mesh24)
+err = float(np.abs(base - cp4).max())
+assert err < 1e-4, err
+print('OK', err)
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=600,
+                          cwd=os.path.join(os.path.dirname(__file__), ".."))
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "OK" in proc.stdout

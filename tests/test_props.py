@@ -1,0 +1,105 @@
+"""Hypothesis property tests on the system's invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from jax import ShapeDtypeStruct as SDS
+
+from repro.core import get_backend
+from repro.containers import bloom as bl
+from repro.containers import hashmap as hm
+from repro.containers import queue as q
+from repro.kernels import ops, ref
+
+_keys = st.lists(st.integers(0, 200), min_size=1, max_size=80)
+
+
+@given(_keys)
+@settings(max_examples=20, deadline=None)
+def test_hashmap_insert_then_find_total(keys):
+    """forall K: find(insert(table, K), K) succeeds with the last value."""
+    bk = get_backend(None)
+    spec, state = hm.hashmap_create(bk, 2048, SDS((), jnp.uint32),
+                                    SDS((), jnp.uint32), block_size=16)
+    ks = jnp.asarray(keys, jnp.uint32)
+    vs = jnp.arange(len(keys), dtype=jnp.uint32) + 1
+    state, ok = hm.insert(bk, spec, state, ks, vs, capacity=len(keys))
+    assert bool(ok.all())
+    state, v, found = hm.find(bk, spec, state, ks, capacity=len(keys))
+    assert bool(found.all())
+    oracle = {}
+    for k_, v_ in zip(keys, range(1, len(keys) + 1)):
+        oracle[k_] = v_
+    for k_, got in zip(keys, np.asarray(v)):
+        assert got == oracle[k_]
+
+
+@given(_keys)
+@settings(max_examples=20, deadline=None)
+def test_bloom_no_false_negatives(keys):
+    bk = get_backend(None)
+    spec, state = bl.bloom_create(bk, 1 << 14, SDS((), jnp.uint32), k=4)
+    ks = jnp.asarray(keys, jnp.uint32)
+    state, _ = bl.insert(bk, spec, state, ks, capacity=len(keys))
+    present = bl.find(bk, spec, state, ks, capacity=len(keys))
+    assert bool(present.all())
+
+
+@given(st.lists(st.integers(0, 1 << 20), min_size=1, max_size=60))
+@settings(max_examples=20, deadline=None)
+def test_queue_preserves_multiset(vals):
+    bk = get_backend(None)
+    spec, state = q.queue_create(bk, 128, SDS((), jnp.uint32))
+    v = jnp.asarray(vals, jnp.uint32)
+    state, pushed, dropped = q.push(bk, spec, state, v,
+                                    jnp.zeros(len(vals), jnp.int32),
+                                    capacity=len(vals))
+    assert int(dropped) == 0
+    state, out, got = q.local_nonatomic_pop(spec, state, len(vals))
+    assert sorted(np.asarray(out)[np.asarray(got)].tolist()) == sorted(vals)
+
+
+@given(st.lists(st.tuples(st.integers(0, 30), st.integers(1, 100)),
+                min_size=1, max_size=60),
+       st.sampled_from([ref.MODE_SET, ref.MODE_ADD, ref.MODE_KEEP]))
+@settings(max_examples=20, deadline=None)
+def test_bulk_insert_impls_agree(pairs, mode):
+    """jnp and pallas implementations match the sequential oracle on
+    arbitrary (dup-heavy) batches."""
+    nb, B = 4, 8
+    tk = jnp.zeros((nb, B, 1), jnp.uint32)
+    tv = jnp.zeros((nb, B, 1), jnp.uint32)
+    stt = jnp.zeros((nb, B), jnp.uint32)
+    qk = jnp.asarray([[k] for k, _ in pairs], jnp.uint32)
+    qv = jnp.asarray([[v] for _, v in pairs], jnp.uint32)
+    qb = qk[:, 0] % nb
+    valid = jnp.ones(len(pairs), bool)
+    o = ref.hash_probe_insert_ref(tk, tv, stt, qb, qk, qv, valid, mode)
+    for impl in ("jnp", "pallas"):
+        j = ops.bulk_insert(tk, tv, stt, qb, qk, qv, valid, mode, impl=impl)
+        for a, b_ in zip(o, j):
+            assert np.array_equal(np.asarray(a), np.asarray(b_)), impl
+
+
+@given(st.integers(1, 1 << 30), st.integers(1, 64))
+@settings(max_examples=30, deadline=None)
+def test_bloom_dup_atomicity(value, n_dups):
+    """Exactly one inserter of n duplicates observes 'not present'."""
+    bk = get_backend(None)
+    spec, state = bl.bloom_create(bk, 1 << 12, SDS((), jnp.uint32), k=4)
+    dup = jnp.full((n_dups,), value, jnp.uint32)
+    state, already = bl.insert(bk, spec, state, dup, capacity=n_dups)
+    assert int((~already).sum()) == 1
+
+
+@given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=2,
+                max_size=64))
+@settings(max_examples=20, deadline=None)
+def test_int8_error_feedback_invariant(vals):
+    """dequantized + residual == original (EF preserves information)."""
+    from repro.optim.compress import int8_compress, int8_decompress
+    g = jnp.asarray(vals, jnp.float32)
+    q, scale, res = int8_compress(g)
+    recon = int8_decompress(q, scale).reshape(g.shape) + res
+    np.testing.assert_allclose(np.asarray(recon), np.asarray(g),
+                               rtol=1e-5, atol=1e-5)

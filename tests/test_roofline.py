@@ -1,0 +1,118 @@
+"""Roofline machinery unit tests: HLO collective parser + jaxpr stats."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import jaxpr_stats
+from repro.launch.roofline import (compute_roofline, parse_collectives,
+                                   _shape_bytes)
+
+
+SAMPLE_HLO = """
+HloModule test
+%x = f32[16,128]{1,0} parameter(0)
+%ar = f32[16,128]{1,0} all-reduce(%x), channel_id=1, replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%sum
+%ag = f32[64,128]{1,0} all-gather(%x), replica_groups={{0,1,2,3}}, dimensions={0}
+%a2a = (f32[4,128]{1,0}, f32[4,128]{1,0}) all-to-all(%s0, %s1), replica_groups={{0,1}}
+%cp = bf16[8,8]{1,0} collective-permute(%y), source_target_pairs={{0,1},{1,0}}
+%rs = f32[4,128]{1,0} reduce-scatter(%x), replica_groups={{0,1,2,3}}, dimensions={0}
+"""
+
+
+class TestHLOParse:
+    def test_shape_bytes(self):
+        assert _shape_bytes("f32[16,128]{1,0}") == 16 * 128 * 4
+        assert _shape_bytes("(f32[4,128]{1,0}, f32[4,128]{1,0})") == \
+            2 * 4 * 128 * 4
+        assert _shape_bytes("bf16[8,8]") == 128
+
+    def test_parse_counts(self):
+        st = parse_collectives(SAMPLE_HLO, n_devices=8)
+        assert st.counts == {"all-reduce": 1, "all-gather": 1,
+                             "all-to-all": 1, "collective-permute": 1,
+                             "reduce-scatter": 1}
+
+    def test_wire_model(self):
+        st = parse_collectives(SAMPLE_HLO, n_devices=8)
+        ar = 16 * 128 * 4
+        assert abs(st.wire_bytes["all-reduce"] - 2 * ar * 3 / 4) < 1
+        ag = 64 * 128 * 4
+        assert abs(st.wire_bytes["all-gather"] - ag * 3 / 4) < 1
+        cp = 128
+        assert st.wire_bytes["collective-permute"] == cp
+
+    def test_dominant(self):
+        st = parse_collectives(SAMPLE_HLO, n_devices=8)
+        assert st.dominant() == "all-gather"
+
+
+class TestJaxprStats:
+    def test_dot_flops_exact(self):
+        f = lambda a, b: a @ b
+        st = jaxpr_stats.analyze(f, jnp.zeros((64, 32)), jnp.zeros((32, 16)))
+        assert st.flops >= 2 * 64 * 32 * 16
+        assert st.flops < 2 * 64 * 32 * 16 * 1.1
+
+    def test_scan_multiplication(self):
+        w = jnp.zeros((32, 32))
+
+        def f(x):
+            return jax.lax.scan(lambda c, _: (c @ w, None), x, None,
+                                length=10)[0]
+
+        st = jaxpr_stats.analyze(f, jnp.zeros((32, 32)))
+        st1 = jaxpr_stats.analyze(f, jnp.zeros((32, 32)),
+                                  count_trips=False)
+        one = 2 * 32 ** 3
+        assert st.flops >= 10 * one and st.flops < 10.5 * one
+        assert st1.flops < 1.5 * one
+
+    def test_nested_scan(self):
+        w = jnp.zeros((16, 16))
+
+        def inner(x):
+            return jax.lax.scan(lambda c, _: (c @ w, None), x, None,
+                                length=3)[0]
+
+        def f(x):
+            return jax.lax.scan(lambda c, _: (inner(c), None), x, None,
+                                length=5)[0]
+
+        st = jaxpr_stats.analyze(f, jnp.zeros((16, 16)))
+        assert st.flops >= 15 * 2 * 16 ** 3
+
+    def test_remat_counted(self):
+        w = jnp.zeros((32, 32))
+        f = jax.grad(lambda x: jax.checkpoint(
+            lambda y: jnp.sum(jnp.sin(y @ w) @ w))(x))
+        st = jaxpr_stats.analyze(f, jnp.zeros((32, 32)))
+        # remat-fwd 2 + bwd 2-3 matmuls (primal value is DCE'd by grad)
+        assert st.flops >= 4.5 * 2 * 32 ** 3
+        no_remat = jaxpr_stats.analyze(
+            jax.grad(lambda x: jnp.sum(jnp.sin(x @ w) @ w)),
+            jnp.zeros((32, 32)))
+        assert st.flops > no_remat.flops   # recompute is visible
+
+    def test_grad_doubles(self):
+        w = jnp.zeros((64, 64))
+        fwd = jaxpr_stats.analyze(lambda x: jnp.sum(x @ w),
+                                  jnp.zeros((64, 64)))
+        bwd = jaxpr_stats.analyze(
+            jax.grad(lambda x: jnp.sum(x @ w)), jnp.zeros((64, 64)))
+        assert bwd.flops >= 1.9 * fwd.flops
+
+
+class TestRooflineTerms:
+    def test_dominant_selection(self):
+        r = compute_roofline(flops=1e15, hbm_bytes=1e9, wire_bytes=1e6,
+                             n_chips=256, model_flops=2e17)
+        assert r.dominant == "compute"
+        r = compute_roofline(flops=1e9, hbm_bytes=1e13, wire_bytes=1e6,
+                             n_chips=256, model_flops=1e12)
+        assert r.dominant == "memory"
+
+    def test_useful_ratio(self):
+        r = compute_roofline(flops=4e12, hbm_bytes=1, wire_bytes=1,
+                             n_chips=1, model_flops=3e12)
+        assert abs(r.useful_ratio - 0.75) < 1e-6

@@ -1,0 +1,247 @@
+"""Optimizer, schedules, compression, data, checkpoint, runtime tests."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.data.genomics import (GenomeSim, extract_kmers, kmer_neighbors,
+                                 pack_kmers, unpack_kmers)
+from repro.data.tokens import TokenStream
+from repro.optim import AdamWConfig, adamw_init, adamw_update, warmup_cosine
+from repro.optim.compress import compressed_psum, int8_compress
+from repro.runtime.elastic import plan_remesh
+from repro.runtime.ft import (FaultToleranceManager, NodeHealth,
+                              StragglerDetector)
+
+
+class TestAdamW:
+    def test_converges_quadratic(self):
+        cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+        params = {"w": jnp.asarray([5.0, -3.0, 2.0])}
+        state = adamw_init(cfg, params)
+        loss_fn = lambda p: jnp.sum(jnp.square(p["w"]))
+        for _ in range(200):
+            g = jax.grad(loss_fn)(params)
+            params, state, _ = adamw_update(cfg, params, g, state)
+        assert float(loss_fn(params)) < 1e-3
+
+    def test_factored_second_moment_shapes(self):
+        cfg = AdamWConfig(factored=True, factored_min_size=4)
+        params = {"w": jnp.zeros((8, 16)), "b": jnp.zeros((8,))}
+        state = adamw_init(cfg, params)
+        st_w = state["per_param"]["w"]
+        assert "vr" in st_w and st_w["vr"].shape == (8,)
+        assert st_w["vc"].shape == (16,)
+        assert "v" in state["per_param"]["b"]     # vectors stay unfactored
+
+    def test_factored_converges(self):
+        cfg = AdamWConfig(lr=0.05, weight_decay=0.0, factored=True,
+                          factored_min_size=2)
+        params = {"w": jnp.ones((4, 4)) * 3}
+        state = adamw_init(cfg, params)
+        loss_fn = lambda p: jnp.sum(jnp.square(p["w"]))
+        for _ in range(300):
+            g = jax.grad(loss_fn)(params)
+            params, state, _ = adamw_update(cfg, params, g, state)
+        assert float(loss_fn(params)) < 1e-2
+
+    def test_grad_clipping(self):
+        cfg = AdamWConfig(lr=1e-3, clip_norm=1.0)
+        params = {"w": jnp.zeros((4,))}
+        state = adamw_init(cfg, params)
+        g = {"w": jnp.full((4,), 1e6)}
+        _, _, m = adamw_update(cfg, params, g, state)
+        assert float(m["grad_norm"]) > 1e5    # reported unclipped
+
+    def test_moment_dtype_policy(self):
+        cfg = AdamWConfig(moment_dtype="bfloat16")
+        state = adamw_init(cfg, {"w": jnp.zeros((4, 4))})
+        assert state["per_param"]["w"]["m"].dtype == jnp.bfloat16
+
+
+def test_warmup_cosine_shape():
+    assert float(warmup_cosine(0, warmup=10, total=100)) == 0.0
+    assert abs(float(warmup_cosine(10, warmup=10, total=100)) - 1.0) < 1e-6
+    assert float(warmup_cosine(100, warmup=10, total=100)) <= \
+        float(warmup_cosine(50, warmup=10, total=100))
+
+
+def test_int8_compress_accuracy(rng):
+    g = jnp.asarray(rng.standard_normal((32, 64)), jnp.float32)
+    q, scale, res = int8_compress(g)
+    err = np.abs(np.asarray(res))
+    assert err.max() <= float(scale.max()) * 0.5 + 1e-6
+
+
+class TestTokenStream:
+    def test_deterministic_restart(self):
+        a = TokenStream(vocab=100, seq_len=32, global_batch=4, seed=7)
+        b1 = a.next_batch()
+        b2 = a.next_batch()
+        b = TokenStream(vocab=100, seq_len=32, global_batch=4, seed=7)
+        b.load_state_dict({"step": 1, "seed": 7})
+        b2_replay = b.next_batch()
+        assert np.array_equal(b2["tokens"], b2_replay["tokens"])
+
+    def test_shard_partition(self):
+        full = TokenStream(vocab=100, seq_len=16, global_batch=8, seed=3)
+        fb = full.next_batch()
+        s0 = TokenStream(vocab=100, seq_len=16, global_batch=8, seed=3)
+        s1 = TokenStream(vocab=100, seq_len=16, global_batch=8, seed=3)
+        b0 = s0.next_batch(n_shards=2, shard=0)
+        b1 = s1.next_batch(n_shards=2, shard=1)
+        assert np.array_equal(fb["tokens"],
+                              np.concatenate([b0["tokens"], b1["tokens"]]))
+
+    def test_elastic_rescale_same_data(self):
+        """4-shard and 2-shard runs see the same global batch."""
+        shards4 = [TokenStream(vocab=50, seq_len=8, global_batch=8, seed=1)
+                   for _ in range(4)]
+        got4 = np.concatenate([s.next_batch(4, i)["tokens"]
+                               for i, s in enumerate(shards4)])
+        shards2 = [TokenStream(vocab=50, seq_len=8, global_batch=8, seed=1)
+                   for _ in range(2)]
+        got2 = np.concatenate([s.next_batch(2, i)["tokens"]
+                               for i, s in enumerate(shards2)])
+        assert np.array_equal(got4, got2)
+
+
+class TestGenomics:
+    def test_kmer_pack_roundtrip(self, rng):
+        seqs = rng.integers(0, 4, (10, 50)).astype(np.uint8)
+        kmers = extract_kmers(seqs, k=21)
+        lanes = pack_kmers(kmers)
+        back = unpack_kmers(lanes, 21)
+        assert np.array_equal(kmers, back)
+
+    def test_neighbors(self):
+        km = np.array([[0, 1, 2, 3]], np.uint8)      # ACGT
+        lanes = pack_kmers(km)
+        nbrs = kmer_neighbors(lanes, 4)
+        for b, nb in enumerate(nbrs):
+            assert np.array_equal(unpack_kmers(nb, 4),
+                                  np.array([[1, 2, 3, b]], np.uint8))
+
+    def test_reads_cover_genome(self):
+        sim = GenomeSim(genome_len=1 << 10, coverage=4, error_rate=0.0)
+        reads = sim.reads()
+        assert reads.shape[1] == sim.read_len
+        g = sim.genome()
+        # error-free reads are exact substrings
+        row = reads[0]
+        found = False
+        for s in range(len(g) - len(row)):
+            if np.array_equal(g[s:s + len(row)], row):
+                found = True
+                break
+        assert found
+
+
+class TestCheckpoint:
+    def test_save_restore_roundtrip(self, tmp_path):
+        tree = {"a": jnp.arange(10), "b": {"c": jnp.ones((3, 3))},
+                "step": jnp.int32(5)}
+        save_checkpoint(str(tmp_path), 5, tree)
+        like = jax.tree_util.tree_map(jnp.zeros_like, tree)
+        got, step = restore_checkpoint(str(tmp_path), None, like)
+        assert step == 5
+        assert np.array_equal(np.asarray(got["a"]), np.arange(10))
+
+    def test_retention(self, tmp_path):
+        tree = {"x": jnp.zeros(4)}
+        for s in range(6):
+            save_checkpoint(str(tmp_path), s, tree, keep=2)
+        steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path))
+        assert steps == [4, 5]
+
+    def test_atomic_no_tmp_visible(self, tmp_path):
+        save_checkpoint(str(tmp_path), 1, {"x": jnp.zeros(4)})
+        assert not any(d.endswith(".tmp") for d in os.listdir(tmp_path))
+        assert latest_step(str(tmp_path)) == 1
+
+    def test_structure_mismatch_rejected(self, tmp_path):
+        save_checkpoint(str(tmp_path), 1, {"x": jnp.zeros(4)})
+        with pytest.raises(ValueError):
+            restore_checkpoint(str(tmp_path), 1,
+                               {"x": jnp.zeros(4), "y": jnp.zeros(2)})
+
+
+class TestFaultTolerance:
+    def test_failure_declared_after_timeout(self):
+        ft = FaultToleranceManager(n_nodes=4, heartbeat_interval=1.0,
+                                   timeout_beats=3)
+        for n in range(4):
+            ft.heartbeat(n, now=0.0)
+        ft.heartbeat(0, now=5.0)
+        ft.heartbeat(1, now=5.0)
+        ft.heartbeat(2, now=5.0)          # node 3 silent
+        dec = ft.tick(now=5.0, last_ckpt_step=42)
+        assert dec.action == "restart"
+        assert dec.failed_nodes == [3]
+        assert dec.restart_step == 42
+        assert ft.nodes[3].health == NodeHealth.FAILED
+
+    def test_spare_promotion(self):
+        ft = FaultToleranceManager(n_nodes=4, n_spares=1,
+                                   heartbeat_interval=1.0, timeout_beats=2)
+        for n in range(3):
+            ft.heartbeat(n, now=0.0)
+        ft.heartbeat(0, now=3.0)
+        ft.heartbeat(1, now=3.0)
+        dec = ft.tick(now=3.0, last_ckpt_step=7)
+        assert dec.failed_nodes == [2]
+        assert dec.promoted_spares == [3]
+        assert ft.nodes[3].health == NodeHealth.HEALTHY
+
+    def test_suspect_recovers(self):
+        ft = FaultToleranceManager(n_nodes=2, heartbeat_interval=1.0,
+                                   timeout_beats=3)
+        ft.heartbeat(0, 0.0)
+        ft.heartbeat(1, 0.0)
+        ft.tick(1.5, 0)
+        assert ft.nodes[1].health == NodeHealth.SUSPECT
+        ft.heartbeat(1, 1.6)
+        ft.tick(1.7, 0)
+        assert ft.nodes[1].health == NodeHealth.HEALTHY
+
+
+class TestStraggler:
+    def test_detects_slow_node(self):
+        sd = StragglerDetector(n_nodes=8, threshold=2.0)
+        for step in range(20):
+            for n in range(8):
+                sd.observe(n, 1.0 if n != 5 else 2.5)
+        assert sd.stragglers() == [5]
+        assert sd.mitigation(5) == "swap_at_checkpoint"
+
+    def test_no_false_positives_uniform(self):
+        sd = StragglerDetector(n_nodes=8)
+        rng = np.random.default_rng(0)
+        for _ in range(50):
+            for n in range(8):
+                sd.observe(n, 1.0 + rng.random() * 0.01)
+        assert sd.stragglers() == []
+
+
+class TestElastic:
+    def test_plan_preserves_model_axis(self):
+        plan = plan_remesh(("data", "model"), (16, 16),
+                           available_devices=192)
+        assert plan.new_shape[1] == 16
+        assert plan.new_shape[0] * 16 <= 192
+        assert plan.batch_per_shard_scale >= 1.0
+
+    def test_plan_multipod(self):
+        plan = plan_remesh(("pod", "data", "model"), (2, 16, 16),
+                           available_devices=384)
+        assert plan.new_shape[-1] == 16
+        total = np.prod(plan.new_shape)
+        assert total <= 384
+
+    def test_insufficient_devices_raises(self):
+        with pytest.raises(ValueError):
+            plan_remesh(("data", "model"), (16, 16), available_devices=8)
