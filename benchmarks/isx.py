@@ -41,19 +41,22 @@ def bucket_sort(message_size: int, n_keys: int = N_KEYS):
     return sort_fn, st0
 
 
-def run():
+def run(smoke: bool = False):
+    n_keys = 1 << 10 if smoke else N_KEYS
+    sweep = (256,) if smoke else (256, 1024, 4096, 16384)
+    check_msg = 256 if smoke else 4096
     rng = np.random.default_rng(2)
-    keys = jnp.asarray(rng.integers(0, 1 << 28, N_KEYS), jnp.uint32)
+    keys = jnp.asarray(rng.integers(0, 1 << 28, n_keys), jnp.uint32)
     results = {}
-    for msg in (256, 1024, 4096, 16384):
-        fn, st0 = bucket_sort(msg)
+    for msg in sweep:
+        fn, st0 = bucket_sort(msg, n_keys)
         t = time_fn(fn, st0, keys, warmup=1, iters=3)
-        keys_per_s = N_KEYS / t
+        keys_per_s = n_keys / t
         results[f"isx_msg{msg}"] = t * 1e6
         emit(f"isx_msg{msg}", t * 1e6, f"{keys_per_s/1e6:.2f}Mkeys/s")
     # correctness spot check
-    fn, st0 = bucket_sort(4096)
-    out = np.asarray(fn(st0, keys))[:N_KEYS]
+    fn, st0 = bucket_sort(check_msg, n_keys)
+    out = np.asarray(fn(st0, keys))[:n_keys]
     assert np.array_equal(out, np.sort(np.asarray(keys))), "sort wrong!"
     return results
 

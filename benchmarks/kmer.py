@@ -18,9 +18,12 @@ from repro.kernels.ops import MODE_ADD
 K = 21
 
 
-def run():
+def run(smoke: bool = False):
     bk = get_backend(None)
-    sim = GenomeSim(genome_len=1 << 13, coverage=8, error_rate=0.01, seed=3)
+    glen = 1 << 10 if smoke else 1 << 13
+    table_bits = 14 if smoke else 18
+    bloom_bits = 17 if smoke else 21
+    sim = GenomeSim(genome_len=glen, coverage=8, error_rate=0.01, seed=3)
     kmers = pack_kmers(extract_kmers(sim.reads(), K))
     n = kmers.shape[0]
     items = {"hi": jnp.asarray(kmers[:, 0]), "lo": jnp.asarray(kmers[:, 1])}
@@ -30,7 +33,7 @@ def run():
 
     @jax.jit
     def count_plain(items):
-        spec, st = hm.hashmap_create(bk, 1 << 18, kspec,
+        spec, st = hm.hashmap_create(bk, 1 << table_bits, kspec,
                                      SDS((), jnp.uint32), block_size=64)
         st, ok = hm.insert(bk, spec, st, items, ones, capacity=n,
                            mode=MODE_ADD, attempts=2)
@@ -38,9 +41,9 @@ def run():
 
     @jax.jit
     def count_bloom(items):
-        bspec, bst = bl.bloom_create(bk, 1 << 21, kspec, k=4)
+        bspec, bst = bl.bloom_create(bk, 1 << bloom_bits, kspec, k=4)
         bst, seen = bl.insert(bk, bspec, bst, items, capacity=n)
-        spec, st = hm.hashmap_create(bk, 1 << 18, kspec,
+        spec, st = hm.hashmap_create(bk, 1 << table_bits, kspec,
                                      SDS((), jnp.uint32), block_size=64)
         st, ok = hm.insert(bk, spec, st, items, ones, capacity=n,
                            valid=seen, mode=MODE_ADD, attempts=2)

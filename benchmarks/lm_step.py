@@ -15,15 +15,17 @@ from repro.models import lm
 from repro.models.sharding import Axes
 
 
-def run():
+def run(smoke: bool = False):
     mesh = make_test_mesh(1, 1)
     axes = Axes.from_mesh(mesh)
     rng = jax.random.PRNGKey(0)
     results = {}
-    for arch in ("stablelm-1.6b", "arctic-480b", "rwkv6-1.6b"):
+    archs = ("stablelm-1.6b",) if smoke else \
+        ("stablelm-1.6b", "arctic-480b", "rwkv6-1.6b")
+    for arch in archs:
         cfg = reduced(get_config(arch))
         params, opt, _, _ = init_state(cfg, mesh, rng)
-        b, t = 4, 128
+        b, t = (2, 32) if smoke else (4, 128)
         batch = {"tokens": jax.random.randint(rng, (b, t + 1), 0, cfg.vocab),
                  "loss_mask": jnp.ones((b, t), jnp.float32)}
         step = jax.jit(make_train_step(cfg, mesh))

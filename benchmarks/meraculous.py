@@ -27,20 +27,21 @@ from repro.data.genomics import extract_kmers, pack_kmers
 K = 15
 
 
-def run():
+def run(smoke: bool = False):
     bk = get_backend(None)
     rng = np.random.default_rng(4)
-    genome = rng.integers(0, 4, 1 << 13).astype(np.uint8)
+    genome = rng.integers(0, 4, 1 << 10 if smoke else 1 << 13).astype(np.uint8)
     kmers = pack_kmers(extract_kmers(genome[None], K))[:-1]
     next_base = jnp.asarray(genome[K:].astype(np.uint32))
     n = kmers.shape[0]
     kspec = {"hi": SDS((), jnp.uint32), "lo": SDS((), jnp.uint32)}
     keys = {"hi": jnp.asarray(kmers[:, 0]), "lo": jnp.asarray(kmers[:, 1])}
+    n_walks, steps = (64, 8) if smoke else (256, 64)
 
     # ---- build phase: buffered vs direct ----
     def fresh():
-        return hm.hashmap_create(bk, 1 << 15, kspec, SDS((), jnp.uint32),
-                                 block_size=64)
+        return hm.hashmap_create(bk, 1 << (12 if smoke else 15), kspec,
+                                 SDS((), jnp.uint32), block_size=64)
 
     @jax.jit
     def build_direct(keys, vals):
@@ -65,8 +66,7 @@ def run():
     state, ok = build_direct(keys, next_base)
     assert bool(np.asarray(ok).all())
 
-    starts = kmers[rng.integers(0, n, 256)]
-    steps = 64
+    starts = kmers[rng.integers(0, n, n_walks)]
 
     @jax.jit
     def traverse(state, start_hi, start_lo):
@@ -98,7 +98,7 @@ def run():
          f"{n/t_direct/1e6:.2f}Mkmer/s")
     emit("meraculous_build_buffered", t_buf / n * 1e6,
          f"speedup={t_direct/t_buf:.2f}x")
-    emit("meraculous_traverse", t_walk / (256 * steps) * 1e6,
+    emit("meraculous_traverse", t_walk / (n_walks * steps) * 1e6,
          f"extended={walked}")
     return {"build_direct": t_direct, "build_buffered": t_buf,
             "traverse": t_walk}

@@ -5,10 +5,12 @@ Variants (paper naming):
   insert_buffer   HashMapBuffer staged insert + flush (the 10x mechanism)
   find_atomic     fully-atomic find (Table 3c: 2A + R)
   find            phase-local find (Table 3d: R)
+  find_2attempt   speculative dual-attempt find (2 collectives, not 4)
 
 Reported as microseconds per operation (amortized over the batch) plus
-the collective/bytes observables, so the paper's relative claims
-(buffer >> insert; find 2-3x over find_atomic) are directly checkable.
+the collective/bytes/rounds observables, so the paper's relative claims
+(buffer >> insert; find 2-3x over find_atomic) and the fused wire
+format's round reduction are directly checkable from the CSV.
 """
 
 from __future__ import annotations
@@ -18,8 +20,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax import ShapeDtypeStruct as SDS
 
-from benchmarks.util import emit, time_fn
-from repro.core import ConProm, costs, get_backend
+from benchmarks.util import emit, time_fn, trace_costs
+from repro.core import ConProm, get_backend
 from repro.containers import hashmap as hm
 from repro.containers import hashmap_buffer as hb
 
@@ -28,20 +30,27 @@ TABLE = 1 << 17
 WAVES = 8                      # fine-grained ops issue per-wave
 
 
-def run():
+def run(smoke: bool = False):
+    n_ops = 1 << 8 if smoke else N_OPS
+    table = 1 << 11 if smoke else TABLE
     bk = get_backend(None)
     rng = np.random.default_rng(0)
-    keys = jnp.asarray(rng.permutation(1 << 22)[:N_OPS], jnp.uint32)
+    keys = jnp.asarray(rng.permutation(1 << 22)[:n_ops], jnp.uint32)
     vals = keys * 3 + 1
     results = {}
+    obs = {}
 
     def fresh():
-        return hm.hashmap_create(bk, TABLE, SDS((), jnp.uint32),
+        return hm.hashmap_create(bk, table, SDS((), jnp.uint32),
                                  SDS((), jnp.uint32), block_size=64)
+
+    def bench(tag, fn, *args):
+        obs[tag] = trace_costs(fn, *args)
+        results[tag] = time_fn(fn, *args) / n_ops * 1e6
 
     # --- insert (fully atomic), issued in WAVES batches ---
     spec, st0 = fresh()
-    wave = N_OPS // WAVES
+    wave = n_ops // WAVES
 
     @jax.jit
     def insert_waves(st, keys, vals):
@@ -52,28 +61,26 @@ def run():
                               attempts=1)
         return st
 
-    t = time_fn(insert_waves, st0, keys, vals)
-    results["hashmap_insert"] = t / N_OPS * 1e6
+    bench("hashmap_insert", insert_waves, st0, keys, vals)
 
     # --- insert through the HashMapBuffer ---
     spec, st0 = fresh()
-    bspec, bst0 = hb.create(bk, spec, st0, queue_capacity=N_OPS,
-                            buffer_cap=N_OPS)
+    bspec, bst0 = hb.create(bk, spec, st0, queue_capacity=n_ops,
+                            buffer_cap=n_ops)
 
     @jax.jit
     def insert_buffered(bst, keys, vals):
         for i in range(WAVES):
             bst, _ = hb.insert(bspec, bst, keys[i * wave:(i + 1) * wave],
                                vals[i * wave:(i + 1) * wave])
-        bst, _ = hb.flush(bk, bspec, bst, capacity=N_OPS)
+        bst, _ = hb.flush(bk, bspec, bst, capacity=n_ops)
         return bst
 
-    t = time_fn(insert_buffered, bst0, keys, vals)
-    results["hashmap_insert_buffer"] = t / N_OPS * 1e6
+    bench("hashmap_insert_buffer", insert_buffered, bst0, keys, vals)
 
     # --- finds against a populated table ---
     spec, st = fresh()
-    st, _ = hm.insert(bk, spec, st, keys, vals, capacity=N_OPS)
+    st, _ = hm.insert(bk, spec, st, keys, vals, capacity=n_ops)
 
     @jax.jit
     def find_atomic(st, keys):
@@ -92,16 +99,30 @@ def run():
                               attempts=1)
         return v, f
 
-    results["hashmap_find_atomic"] = time_fn(find_atomic, st, keys) \
-        / N_OPS * 1e6
-    results["hashmap_find"] = time_fn(find_relaxed, st, keys) / N_OPS * 1e6
+    @jax.jit
+    def find_2attempt(st, keys):
+        for i in range(WAVES):
+            _, v, f = hm.find(bk, spec, st, keys[i * wave:(i + 1) * wave],
+                              capacity=wave, promise=ConProm.HashMap.find,
+                              attempts=2)
+        return v, f
 
-    emit("hashmap_insert", results["hashmap_insert"], "2A+W")
+    bench("hashmap_find_atomic", find_atomic, st, keys)
+    bench("hashmap_find", find_relaxed, st, keys)
+    bench("hashmap_find_2attempt", find_2attempt, st, keys)
+
+    emit("hashmap_insert", results["hashmap_insert"], "2A+W",
+         cost=obs["hashmap_insert"])
     emit("hashmap_insert_buffer", results["hashmap_insert_buffer"],
-         f"speedup={results['hashmap_insert'] / results['hashmap_insert_buffer']:.2f}x")
-    emit("hashmap_find_atomic", results["hashmap_find_atomic"], "2A+R")
+         f"speedup={results['hashmap_insert'] / results['hashmap_insert_buffer']:.2f}x",
+         cost=obs["hashmap_insert_buffer"])
+    emit("hashmap_find_atomic", results["hashmap_find_atomic"], "2A+R",
+         cost=obs["hashmap_find_atomic"])
     emit("hashmap_find", results["hashmap_find"],
-         f"speedup={results['hashmap_find_atomic'] / results['hashmap_find']:.2f}x")
+         f"speedup={results['hashmap_find_atomic'] / results['hashmap_find']:.2f}x",
+         cost=obs["hashmap_find"])
+    emit("hashmap_find_2attempt", results["hashmap_find_2attempt"],
+         "2 rounds/wave", cost=obs["hashmap_find_2attempt"])
     return results
 
 

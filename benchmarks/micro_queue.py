@@ -5,6 +5,9 @@ Variants (paper naming):
   push_push / pop_pop           CircularQueue phase-relaxed
   fq_push / fq_pop              FastQueue (A + nW/nR)
   *_many                        one queue per rank, all ranks pushing
+
+Each row carries the collective/bytes/rounds observables of one jitted
+call so exchange-layer regressions show up next to wall time.
 """
 
 from __future__ import annotations
@@ -14,7 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import ShapeDtypeStruct as SDS
 
-from benchmarks.util import emit, time_fn
+from benchmarks.util import emit, time_fn, trace_costs
 from repro.core import ConProm, get_backend
 from repro.containers import queue as q
 
@@ -22,16 +25,18 @@ N_OPS = 1 << 14
 WAVES = 8
 
 
-def run():
+def run(smoke: bool = False):
+    n_ops = 1 << 8 if smoke else N_OPS
     bk = get_backend(None)
     rng = np.random.default_rng(1)
-    vals = jnp.asarray(rng.integers(0, 1 << 30, N_OPS), jnp.uint32)
-    dest = jnp.zeros(N_OPS, jnp.int32)
-    wave = N_OPS // WAVES
+    vals = jnp.asarray(rng.integers(0, 1 << 30, n_ops), jnp.uint32)
+    dest = jnp.zeros(n_ops, jnp.int32)
+    wave = n_ops // WAVES
     results = {}
+    obs = {}
 
     def bench_push(circular, promise, tag):
-        spec, st0 = q.queue_create(bk, N_OPS * 2, SDS((), jnp.uint32),
+        spec, st0 = q.queue_create(bk, n_ops * 2, SDS((), jnp.uint32),
                                    circular=circular)
 
         @jax.jit
@@ -43,8 +48,9 @@ def run():
                                   capacity=wave, promise=promise)
             return st
 
+        obs[tag] = trace_costs(pushes, st0, vals, dest)
         t = time_fn(pushes, st0, vals, dest)
-        results[tag] = t / N_OPS * 1e6
+        results[tag] = t / n_ops * 1e6
         return spec, pushes
 
     bench_push(True, ConProm.CircularQueue.push_pop, "cq_push_pushpop")
@@ -52,9 +58,9 @@ def run():
     bench_push(False, ConProm.FastQueue.push, "fq_push")
 
     def bench_pop(circular, promise, tag):
-        spec, st0 = q.queue_create(bk, N_OPS * 2, SDS((), jnp.uint32),
+        spec, st0 = q.queue_create(bk, n_ops * 2, SDS((), jnp.uint32),
                                    circular=circular)
-        st0, _, _ = q.push(bk, spec, st0, vals, dest, capacity=N_OPS)
+        st0, _, _ = q.push(bk, spec, st0, vals, dest, capacity=n_ops)
 
         @jax.jit
         def pops(st):
@@ -64,16 +70,17 @@ def run():
                 outs.append(out)
             return st, outs
 
+        obs[tag] = trace_costs(pops, st0)
         t = time_fn(pops, st0)
-        results[tag] = t / N_OPS * 1e6
+        results[tag] = t / n_ops * 1e6
 
     bench_pop(True, ConProm.CircularQueue.push_pop, "cq_pop_pushpop")
     bench_pop(True, ConProm.CircularQueue.pop, "cq_pop_pop")
     bench_pop(False, ConProm.FastQueue.pop, "fq_pop")
 
     # local nonatomic pop (Table 2: l)
-    spec, st0 = q.queue_create(bk, N_OPS * 2, SDS((), jnp.uint32))
-    st0, _, _ = q.push(bk, spec, st0, vals, dest, capacity=N_OPS)
+    spec, st0 = q.queue_create(bk, n_ops * 2, SDS((), jnp.uint32))
+    st0, _, _ = q.push(bk, spec, st0, vals, dest, capacity=n_ops)
 
     @jax.jit
     def local_pops(st):
@@ -81,12 +88,14 @@ def run():
             st, out, got = q.local_nonatomic_pop(spec, st, wave)
         return st, out
 
-    results["fq_local_pop"] = time_fn(local_pops, st0) / N_OPS * 1e6
+    obs["fq_local_pop"] = trace_costs(local_pops, st0)
+    results["fq_local_pop"] = time_fn(local_pops, st0) / n_ops * 1e6
 
     for k in ("cq_push_pushpop", "cq_push_push", "fq_push",
               "cq_pop_pushpop", "cq_pop_pop", "fq_pop", "fq_local_pop"):
         emit(k, results[k],
-             "2A" if "pushpop" in k else ("A" if k.startswith("fq") else "2A"))
+             "2A" if "pushpop" in k else ("A" if k.startswith("fq") else "2A"),
+             cost=obs[k])
     return results
 
 

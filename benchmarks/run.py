@@ -1,6 +1,8 @@
 """Benchmark harness: one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows (benchmarks/util.emit).
+Prints ``name,us_per_call,collectives,bytes_moved,rounds,derived`` CSV
+rows (benchmarks/util.emit); modules that predate the cost columns leave
+them empty.
 
   micro_hashmap   paper Fig. 9   (insert / insert_buffer / find variants)
   micro_queue     paper Fig. 10/11 (CircularQueue vs FastQueue, promises)
@@ -8,10 +10,15 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/util.emit).
   meraculous      paper Fig. 6/7 (contig-generation build + traversal)
   kmer            paper Fig. 8   (k-mer counting +/- Bloom filter)
   lm_step         framework-side step throughput (reduced configs)
+
+``--smoke`` runs each benchmark at tiny sizes (seconds, not minutes) so
+the tier-1 suite can exercise the full benchmark path and its cost
+accounting; timings from a smoke run are not meaningful.
 """
 
 from __future__ import annotations
 
+import inspect
 import sys
 
 
@@ -26,15 +33,23 @@ def main() -> None:
         "kmer": kmer,
         "lm_step": lm_step,
     }
-    only = sys.argv[1] if len(sys.argv) > 1 else None
-    print("name,us_per_call,derived")
+    args = [a for a in sys.argv[1:]]
+    smoke = "--smoke" in args
+    args = [a for a in args if a != "--smoke"]
+    only = args[0] if args else None
+    print("name,us_per_call,collectives,bytes_moved,rounds,derived")
     for name, mod in mods.items():
         if only and name != only:
             continue
         try:
-            mod.run()
+            if smoke and "smoke" in inspect.signature(mod.run).parameters:
+                mod.run(smoke=True)
+            elif smoke:
+                print(f"{name},SKIPPED,,,,no smoke mode yet")
+            else:
+                mod.run()
         except Exception as e:  # keep the harness going; report the row
-            print(f"{name},ERROR,{type(e).__name__}: {e}")
+            print(f"{name},ERROR,,,,{type(e).__name__}: {e}")
 
 
 if __name__ == "__main__":

@@ -6,6 +6,8 @@ import time
 
 import jax
 
+from repro.core import costs
+
 
 def time_fn(fn, *args, warmup: int = 2, iters: int = 5, **kw):
     """Median wall time per call (seconds) of a jit-compatible fn."""
@@ -22,5 +24,24 @@ def time_fn(fn, *args, warmup: int = 2, iters: int = 5, **kw):
     return times[len(times) // 2]
 
 
-def emit(name: str, us_per_call: float, derived: str = ""):
-    print(f"{name},{us_per_call:.2f},{derived}")
+def trace_costs(fn, *args, **kw):
+    """Cost observables of one call of ``fn`` (collectives, bytes, rounds).
+
+    Costs are recorded at trace time, so this must run on a FRESH jit
+    wrapper (an already-compiled fn records nothing).  Call it before
+    ``time_fn``; the traced call doubles as warmup.
+    """
+    with costs.recording() as log:
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    return log.total()
+
+
+def emit(name: str, us_per_call: float, derived: str = "",
+         cost=None):
+    """CSV row: name,us_per_call,collectives,bytes_moved,rounds,derived."""
+    if cost is None:
+        print(f"{name},{us_per_call:.2f},,,,{derived}")
+    else:
+        print(f"{name},{us_per_call:.2f},{cost.collectives},"
+              f"{cost.bytes_moved},{cost.rounds},{derived}")

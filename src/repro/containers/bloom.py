@@ -67,7 +67,8 @@ def _route_words(backend: Backend, spec: BloomSpec, items, valid, capacity,
     lblock = gblock % spec.nblocks_local
     words = bloom_words_ref(double_hash(lanes, spec.k, 64), spec.k)
     body = jnp.concatenate([lblock.astype(_U32)[:, None], words], axis=1)
-    res = route(backend, body, owner, capacity, valid=valid, op_name=op_name)
+    res = route(backend, body, owner, capacity, valid=valid, op_name=op_name,
+                impl=spec.impl)
     rb = jnp.where(res.valid, res.payload[:, 0].astype(_I32), 0)
     rw = res.payload[:, 1:3]
     return n, res, rb, rw

@@ -135,7 +135,7 @@ def insert(backend: Backend, spec: HashMapSpec, state: HashMapState,
         body = jnp.concatenate(
             [lblock.astype(_U32)[:, None], klanes, vlanes], axis=1)
         res = route(backend, body, owner, capacity, valid=pending,
-                    op_name="hashmap.insert")
+                    op_name="hashmap.insert", impl=spec.impl)
         rb = jnp.where(res.valid, res.payload[:, 0].astype(_I32), 0)
         rk = res.payload[:, 1:1 + spec.key_packer.lanes]
         rv = res.payload[:, 1 + spec.key_packer.lanes:]
@@ -165,16 +165,76 @@ def insert(backend: Backend, spec: HashMapSpec, state: HashMapState,
     return new_state, (success if (return_success or attempts > 1) else None)
 
 
+def _find_speculative(backend: Backend, spec: HashMapSpec,
+                      state: HashMapState, klanes, capacity: int,
+                      valid, atomic: bool):
+    """Dual-attempt find in ONE round trip (2 collectives, not 4).
+
+    Each key is routed to its attempt-0 AND attempt-1 owners in the same
+    batch; the requester prefers the attempt-0 answer, which makes the
+    result bit-identical to the sequential attempt loop whenever the
+    route capacity admits every request (zero drops — the operating
+    regime callers are expected to size for).  Under capacity overflow
+    both schedules degrade to best-effort on *different* probe subsets:
+    this path drops among 2N speculative requests at capacity 2C, the
+    sequential loop drops per attempt at capacity C.  Halves the
+    collective rounds of the default 2-attempt find at the price of one
+    speculative lookup per key — the paper's aggregation trade (latency
+    for bandwidth, section 4.2) applied to the probe path itself.
+    """
+    n = klanes.shape[0]
+    owner0, lb0 = _owner_local(spec, _block_of(spec, klanes, 0))
+    owner1, lb1 = _owner_local(spec, _block_of(spec, klanes, 1))
+    owner = jnp.concatenate([owner0, owner1])
+    lblock = jnp.concatenate([lb0, lb1])
+    k2 = jnp.concatenate([klanes, klanes], axis=0)
+    valid2 = jnp.concatenate([valid, valid])
+    body = jnp.concatenate([lblock.astype(_U32)[:, None], k2], axis=1)
+    res = route(backend, body, owner, 2 * capacity, valid=valid2,
+                op_name="hashmap.find", impl=spec.impl)
+    rb = jnp.where(res.valid, res.payload[:, 0].astype(_I32), 0)
+    rk = res.payload[:, 1:]
+    tk, tv, st = state
+    if atomic:
+        st = st.at[rb].add(_READ_BIT, mode="drop")
+    found_here, vlanes = kops.bulk_find(tk, tv, st, rb, rk, res.valid,
+                                        impl=spec.impl)
+    if atomic:
+        st = st.at[rb].add(_U32(0) - _READ_BIT, mode="drop")
+        state = HashMapState(tk, tv, st)
+    body_back = jnp.concatenate(
+        [vlanes, found_here.astype(_U32)[:, None]], axis=1)
+    back, _ = reply(backend, res, body_back, 2 * n, op_name="hashmap.find")
+    got = back[:, -1] == 1
+    got0 = got[:n] & valid
+    got1 = got[n:] & valid
+    found = got0 | got1
+    vals = jnp.where(got0[:, None], back[:n, :-1], back[n:, :-1])
+    vals = jnp.where(found[:, None], vals, 0)
+    costs.record("hashmap.find",
+                 costs.Cost(A=2 if atomic else 0, R=n))
+    return state, spec.val_packer.unpack(vals), found
+
+
 def find(backend: Backend, spec: HashMapSpec, state: HashMapState,
          keys, capacity: int,
          promise: Promise = Promise.FIND | Promise.INSERT,
          valid: jax.Array | None = None,
-         attempts: int = 2):
+         attempts: int = 2,
+         speculative: bool = True):
     """Find a batch of keys. Returns (state, values, found(N,)).
 
     State is returned because the fully-atomic path's read-bit dance
     writes (net-zero) to the status array, exactly like the paper's
     fetch-and-or / fetch-and-and pair.
+
+    With ``speculative`` (the default) a 2-attempt find issues both
+    probe attempts in one batched round trip — 2 collectives instead of
+    4 — with identical results to the sequential attempt loop
+    (``speculative=False``, the oracle schedule) as long as ``capacity``
+    admits every request.  When requests overflow capacity (drops are
+    counted, never silent) the two schedules probe different best-effort
+    subsets; found keys always carry correct values either way.
     """
     klanes = spec.key_packer.pack(keys)
     n = klanes.shape[0]
@@ -190,6 +250,9 @@ def find(backend: Backend, spec: HashMapSpec, state: HashMapState,
         return state, spec.val_packer.unpack(vlanes), found
 
     atomic = not find_only(promise)
+    if speculative and attempts == 2:
+        return _find_speculative(backend, spec, state, klanes, capacity,
+                                 valid, atomic)
     pending = valid
     found_all = jnp.zeros((n,), bool)
     vals_all = jnp.zeros((n, spec.val_packer.lanes), _U32)
@@ -198,7 +261,7 @@ def find(backend: Backend, spec: HashMapSpec, state: HashMapState,
         owner, lblock = _owner_local(spec, gblock)
         body = jnp.concatenate([lblock.astype(_U32)[:, None], klanes], axis=1)
         res = route(backend, body, owner, capacity, valid=pending,
-                    op_name="hashmap.find")
+                    op_name="hashmap.find", impl=spec.impl)
         rb = jnp.where(res.valid, res.payload[:, 0].astype(_I32), 0)
         rk = res.payload[:, 1:]
         tk, tv, st = state

@@ -149,9 +149,8 @@ class SpmdBackend(Backend):
         self.axis = axis
         # axis size must be static; read it from the ambient mesh if not given.
         if axis_size is None:
-            env = jax.core.get_axis_env() if hasattr(jax.core, "get_axis_env") else None
-            del env  # jax>=0.5 exposes sizes via lax.axis_size
-            axis_size = jax.lax.axis_size(axis)
+            from repro.compat import axis_size as _axis_size
+            axis_size = _axis_size(axis)
         self._nprocs = int(axis_size)
 
     def nprocs(self) -> int:

@@ -36,6 +36,11 @@ class Cost:
     local: int = 0      # local ops (elements)
     collectives: int = 0  # TPU observable: collectives launched
     bytes_moved: int = 0  # TPU observable: bytes through collectives
+    rounds: int = 0       # TPU observable: all-to-all round trips on the
+    #                       critical path (the latency term of the paper's
+    #                       aggregation argument, section 4.2)
+    bytes_out: int = 0    # bytes in the request direction (requester->owner)
+    bytes_in: int = 0     # bytes in the reply direction (owner->requester)
 
     def __add__(self, other: "Cost") -> "Cost":
         return Cost(
@@ -46,6 +51,9 @@ class Cost:
             self.local + other.local,
             self.collectives + other.collectives,
             self.bytes_moved + other.bytes_moved,
+            self.rounds + other.rounds,
+            self.bytes_out + other.bytes_out,
+            self.bytes_in + other.bytes_in,
         )
 
     def formula(self) -> str:

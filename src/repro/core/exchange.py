@@ -7,7 +7,9 @@ per destination -> fetch-and-add reserves remote slots -> RDMA put.
 
 On TPU the same pattern is one fused collective program:
 
-  1. bin items by destination rank          (histogram + stable sort)
+  1. bin items by destination rank          (histogram + per-tile prefix +
+                                             slot scatter — a Pallas
+                                             kernel, no argsort)
   2. reserve slots                          (exclusive prefix sums — the
                                              associative, contention-free
                                              analogue of fetch-and-add)
@@ -22,10 +24,22 @@ On TPU the same pattern is one fused collective program:
 compiles down to one or two ``route`` calls, mirroring the paper's claim
 that each data-structure op is "a small number of one-sided operations".
 
-All payloads are u32 lane matrices (see object_container.py).  Shapes and
-capacities are static; overflow beyond C is dropped and *counted* (the
-analogue of a failed/retried insertion), so callers can assert zero drops
-or size capacities adaptively.
+Wire format (DESIGN.md section 1): payloads are u32 lane matrices (see
+object_container.py); ``route`` appends exactly ONE metadata lane —
+bit 31 is the valid flag and the low 31 bits are the item's position in
+the sender's batch — so an L-lane payload costs L+1 u32 lanes on the
+wire.  Replies cost L lanes and zero metadata: the owner's receive
+layout is the exact image of the requester's send layout under the
+all-to-all, so writing replies into the rows they arrived in and running
+one more all-to-all is an *inverse permutation* that lands every reply
+back in the requester's original send slot.  The requester resolves
+slots to batch positions from purely local state (``send_item``); no
+binning, no argsort, no scatter, and no src_pos lane in the reply
+direction.
+
+Shapes and capacities are static; overflow beyond C is dropped and
+*counted* (the analogue of a failed/retried insertion), so callers can
+assert zero drops or size capacities adaptively.
 """
 
 from __future__ import annotations
@@ -37,13 +51,18 @@ import jax.numpy as jnp
 
 from repro.core import costs
 from repro.core.backend import Backend
+from repro.kernels import ops as kops
 
 _U32 = jnp.uint32
 _I32 = jnp.int32
 
+# metadata lane: bit 31 = valid, bits 0..30 = src_pos
+_VALID_BIT = jnp.uint32(1 << 31)
+_POS_MASK = jnp.uint32((1 << 31) - 1)
+
 
 class RouteResult(NamedTuple):
-    """Owner-side view of a routed batch.
+    """Owner-side view of a routed batch (+ requester-local slot map).
 
     payload   (P*C, L) u32 — rows [s*C:(s+1)*C] arrived from rank s
     valid     (P*C,) bool  — which rows hold real items
@@ -51,6 +70,12 @@ class RouteResult(NamedTuple):
     src_pos   (P*C,) i32   — item's index in the sender's original batch
     dropped   () i32       — items dropped for capacity overflow (global)
     capacity  int          — static per-(src,dst) capacity C
+    send_item (P*C,) i32   — requester-local: original batch index this
+                             rank placed in each of its own send slots
+                             (sentinel N when the slot was empty)
+    send_occ  (P*C,) bool  — requester-local send-slot occupancy; the
+                             reply path's ``answered`` comes from here,
+                             not from the wire
     """
 
     payload: jax.Array
@@ -59,19 +84,8 @@ class RouteResult(NamedTuple):
     src_pos: jax.Array
     dropped: jax.Array
     capacity: int
-
-
-def _bin_by_dest(dest: jax.Array, valid: jax.Array, nprocs: int):
-    """Stable binning: per-dest counts, sort order, position-within-dest."""
-    n = dest.shape[0]
-    dest_ = jnp.where(valid, dest.astype(_I32), nprocs)  # invalid -> bucket P
-    counts_full = jnp.zeros((nprocs + 1,), _I32).at[dest_].add(1)
-    start = jnp.concatenate([jnp.zeros((1,), _I32),
-                             jnp.cumsum(counts_full)[:-1].astype(_I32)])
-    order = jnp.argsort(dest_, stable=True)
-    sorted_dest = dest_[order]
-    pos = jnp.arange(n, dtype=_I32) - start[sorted_dest]
-    return counts_full[:nprocs], order, sorted_dest, pos
+    send_item: jax.Array
+    send_occ: jax.Array
 
 
 def route(backend: Backend,
@@ -79,13 +93,15 @@ def route(backend: Backend,
           dest: jax.Array,
           capacity: int,
           valid: jax.Array | None = None,
-          op_name: str = "route") -> RouteResult:
+          op_name: str = "route",
+          impl: str = "auto") -> RouteResult:
     """Send each row of ``payload`` to rank ``dest[i]``; return owner view.
 
     payload: (N, L) u32 (or (N,) — treated as one lane)
     dest:    (N,) i32 destination ranks in [0, nprocs)
     capacity: static per-(src,dst) slot count C
     valid:   (N,) bool mask (default all valid)
+    impl:    kernel dispatch for send-buffer construction (kops.bin_offsets)
     """
     if payload.ndim == 1:
         payload = payload[:, None]
@@ -96,40 +112,47 @@ def route(backend: Backend,
 
     if valid is None:
         valid = jnp.ones((n,), bool)
+    dest = dest.astype(_I32)
 
-    counts, order, sorted_dest, pos = _bin_by_dest(dest, valid, nprocs)
+    # send-buffer construction: no argsort — each item computes its slot
+    # directly from (histogram -> per-tile prefix -> within-tile rank)
+    counts, offsets = kops.bin_offsets(dest, nprocs, valid, impl=impl)
+    in_cap = offsets < cap
+    slot = jnp.where(valid & in_cap, dest * cap + offsets,
+                     nprocs * cap).astype(_I32)   # drop sentinel
 
-    # drop sentinel: one past the end of the send buffer
-    in_cap = pos < cap
-    slot = jnp.where((sorted_dest < nprocs) & in_cap,
-                     sorted_dest * cap + pos,
-                     nprocs * cap).astype(_I32)
-
-    # lanes layout: [payload | src_pos | valid]
-    src_pos_lane = order.astype(_U32)[:, None]
-    valid_lane = jnp.ones((n, 1), _U32)
-    body = jnp.concatenate([payload[order], src_pos_lane, valid_lane], axis=1)
-
-    send = jnp.zeros((nprocs * cap, lanes + 2), _U32)
+    # lanes layout: [payload | meta] with meta = VALID_BIT | src_pos
+    meta = jnp.where(valid, _VALID_BIT | jnp.arange(n, dtype=_U32), 0)
+    body = jnp.concatenate([payload, meta[:, None]], axis=1)
+    send = jnp.zeros((nprocs * cap, lanes + 1), _U32)
     send = send.at[slot].set(body, mode="drop")
 
     recv = backend.all_to_all(send)
 
     out_payload = recv[:, :lanes]
-    out_src_pos = recv[:, lanes].astype(_I32)
-    out_valid = recv[:, lanes + 1] == 1
+    meta_r = recv[:, lanes]
+    out_valid = (meta_r & _VALID_BIT) != 0
+    out_src_pos = (meta_r & _POS_MASK).astype(_I32)
     src_rank = jnp.repeat(jnp.arange(nprocs, dtype=_I32), cap)
+
+    # requester-local inverse slot map: which item sits in each send slot
+    send_item = jnp.full((nprocs * cap,), n, _I32).at[slot].set(
+        jnp.arange(n, dtype=_I32), mode="drop")
+    send_occ = jnp.zeros((nprocs * cap,), bool).at[slot].set(
+        jnp.ones((n,), bool), mode="drop")
 
     over = jnp.maximum(counts - cap, 0).sum()
     dropped = backend.psum(over).astype(_I32)
 
     # route records only the TPU observables; the paper-units cost (R/W/A)
     # is accounted by the calling container op.
+    wire_bytes = nprocs * cap * (lanes + 1) * 4
     costs.record(op_name, costs.Cost(
-        collectives=1, bytes_moved=nprocs * cap * (lanes + 2) * 4))
+        collectives=1, rounds=1, bytes_moved=wire_bytes,
+        bytes_out=wire_bytes))
 
     return RouteResult(out_payload, out_valid, src_rank, out_src_pos,
-                       dropped, cap)
+                       dropped, cap, send_item, send_occ)
 
 
 def reply(backend: Backend,
@@ -143,21 +166,32 @@ def reply(backend: Backend,
     Returns ``(replies, answered)`` where ``replies`` is (orig_n, L)
     aligned with the *original* request batch and ``answered`` marks rows
     that received a reply.
+
+    This is a single inverse all-to-all: the owner's row s*C+j arrived
+    from rank s's send slot d*C+j, and the tiled all-to-all maps row
+    s*C+j straight back there — so replies written in arrival order need
+    no binning, no metadata lanes, and no second slot reservation.  The
+    requester resolves slots to batch positions with its local
+    ``send_item`` map and knows ``answered`` from its own ``send_occ``.
     """
     if reply_payload.ndim == 1:
         reply_payload = reply_payload[:, None]
     lanes = reply_payload.shape[1]
 
-    body = jnp.concatenate(
-        [reply_payload.astype(_U32), req.src_pos.astype(_U32)[:, None]], axis=1)
-    back = route(backend, body, dest=req.src_rank, capacity=req.capacity,
-                 valid=req.valid, op_name=op_name)
+    send = jnp.where(req.valid[:, None], reply_payload.astype(_U32), 0)
+    back = backend.all_to_all(send)
 
-    out = jnp.zeros((orig_n, lanes), _U32)
-    answered = jnp.zeros((orig_n,), bool)
-    pos = jnp.where(back.valid, back.payload[:, lanes].astype(_I32), orig_n)
-    out = out.at[pos].set(back.payload[:, :lanes], mode="drop")
-    answered = answered.at[pos].set(back.valid, mode="drop")
+    # back[k] answers the item this rank placed in send slot k of the
+    # original route call
+    item = jnp.where(req.send_occ, req.send_item, orig_n)  # drop sentinel
+    out = jnp.zeros((orig_n, lanes), _U32).at[item].set(back, mode="drop")
+    answered = jnp.zeros((orig_n,), bool).at[item].set(
+        req.send_occ, mode="drop")
+
+    wire_bytes = send.shape[0] * lanes * 4
+    costs.record(op_name, costs.Cost(
+        collectives=1, rounds=1, bytes_moved=wire_bytes,
+        bytes_in=wire_bytes))
     return out, answered
 
 

@@ -40,6 +40,68 @@ def _hist_kernel(bins_ref, valid_ref, out_ref, *, nbins: int):
     out_ref[...] = out_ref[...] + part.astype(_I32)
 
 
+def _offsets_kernel(bins_ref, valid_ref, counts_ref, off_ref, *, nbins: int):
+    """Histogram -> per-tile prefix -> per-item slot offset.
+
+    Grid steps run in order on TPU, so ``counts_ref`` (all steps map to
+    the same output tile) doubles as the running cross-tile prefix: at
+    step t it holds the per-bin counts of tiles [0, t), which is exactly
+    the base offset every item of tile t adds to its within-tile rank.
+    """
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    bins = bins_ref[...].astype(_I32)                      # (TM,)
+    valid = valid_ref[...]                                 # (TM,)
+    tm = bins.shape[0]
+    onehot = ((bins[:, None] ==
+               jax.lax.broadcasted_iota(_I32, (tm, nbins), 1))
+              & valid[:, None]).astype(_I32)               # (TM, NB)
+    # stable within-tile rank: exclusive cumsum down each bin column
+    within = jnp.cumsum(onehot, axis=0) - onehot
+    base = counts_ref[...]                                 # tiles [0, i)
+    off_ref[...] = ((within + base[None, :]) * onehot).sum(axis=1)
+    # fold this tile's histogram into the running counts on the MXU
+    part = jnp.dot(jnp.ones((1, tm), _F32), onehot.astype(_F32),
+                   preferred_element_type=_F32)[0]
+    counts_ref[...] = base + part.astype(_I32)
+
+
+def bin_offsets(bins: jax.Array, nbins: int, valid: jax.Array | None = None,
+                tile: int = 2048):
+    """Exchange send-buffer construction; oracle: ref.bin_offsets_ref.
+
+    Returns ``(counts (nbins,), offsets (N,))`` — per-destination valid
+    counts and each item's stable position within its destination bucket.
+    Replaces the argsort+gather hot path: the caller scatters payload
+    rows straight to ``dest * capacity + offsets``.
+    """
+    m = bins.shape[0]
+    if valid is None:
+        valid = jnp.ones((m,), bool)
+    pad = (-m) % tile
+    if pad:
+        bins = jnp.pad(bins, (0, pad), constant_values=nbins)
+        valid = jnp.pad(valid, (0, pad))
+    mp = bins.shape[0]
+    kern = functools.partial(_offsets_kernel, nbins=nbins)
+    counts, offs = pl.pallas_call(
+        kern,
+        grid=(mp // tile,),
+        in_specs=[pl.BlockSpec((tile,), lambda i: (i,)),
+                  pl.BlockSpec((tile,), lambda i: (i,))],
+        out_specs=[pl.BlockSpec((nbins,), lambda i: (0,)),
+                   pl.BlockSpec((tile,), lambda i: (i,))],
+        out_shape=(jax.ShapeDtypeStruct((nbins,), _I32),
+                   jax.ShapeDtypeStruct((mp,), _I32)),
+        interpret=_interpret(),
+    )(bins.astype(_I32), valid)
+    return counts, offs[:m]
+
+
 def histogram(bins: jax.Array, nbins: int, valid: jax.Array | None = None,
               tile: int = 2048) -> jax.Array:
     """Count items per destination bin; oracle: ref.bin_histogram_ref."""

@@ -232,7 +232,7 @@ def bloom_find(filter_words, qblock, qwords, qvalid, impl: str = "auto"):
 
 
 # --------------------------------------------------------------------------
-# binning histogram
+# binning histogram + exchange send-buffer construction
 # --------------------------------------------------------------------------
 
 def bin_histogram(bins, nbins: int, valid=None, impl: str = "auto"):
@@ -241,6 +241,34 @@ def bin_histogram(bins, nbins: int, valid=None, impl: str = "auto"):
         from repro.kernels import binning
         return binning.histogram(bins, nbins, valid)
     return _ref.bin_histogram_ref(bins, nbins, valid)
+
+
+def bin_offsets(bins, nbins: int, valid=None, impl: str = "auto"):
+    """Per-destination counts + stable within-destination offsets.
+
+    The exchange engine's send-buffer construction: item i's slot is
+    ``bins[i] * capacity + offsets[i]``.  Returns ``(counts (nbins,),
+    offsets (N,))``; offsets of invalid items are unspecified.
+    """
+    impl = _resolve(impl)
+    if impl == "oracle":
+        return _ref.bin_offsets_ref(bins, nbins, valid)
+    if impl == "pallas":
+        from repro.kernels import binning
+        return binning.bin_offsets(bins, nbins, valid)
+
+    # vectorized jnp path: one stable argsort, offsets scattered back
+    n = bins.shape[0]
+    if valid is None:
+        valid = jnp.ones((n,), bool)
+    b = jnp.where(valid, bins.astype(_I32), nbins)   # invalid -> bucket NB
+    counts_full = jnp.zeros((nbins + 1,), _I32).at[b].add(1)
+    start = jnp.concatenate([jnp.zeros((1,), _I32),
+                             jnp.cumsum(counts_full)[:-1].astype(_I32)])
+    order = jnp.argsort(b, stable=True)
+    pos_sorted = jnp.arange(n, dtype=_I32) - start[b[order]]
+    offsets = jnp.zeros((n,), _I32).at[order].set(pos_sorted)
+    return counts_full[:nbins], offsets
 
 
 # --------------------------------------------------------------------------

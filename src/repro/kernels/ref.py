@@ -150,6 +150,32 @@ def bin_histogram_ref(bins: jax.Array, nbins: int, valid=None) -> jax.Array:
     return jnp.zeros((nbins,), jnp.int32).at[bins].add(w)
 
 
+def bin_offsets_ref(bins: jax.Array, nbins: int, valid=None):
+    """Sequential oracle for exchange send-buffer construction.
+
+    Returns ``(counts (nbins,), offsets (N,))`` where ``offsets[i]`` is
+    the number of *valid* items ``j < i`` with ``bins[j] == bins[i]`` —
+    the stable position-within-destination each item claims in the
+    per-destination send bucket.  Offsets of invalid items are
+    unspecified (callers mask them).
+    """
+    n = bins.shape[0]
+    if valid is None:
+        valid = jnp.ones((n,), bool)
+    bins = bins.astype(jnp.int32)
+
+    def body(i, carry):
+        counts, offs = carry
+        b = jnp.clip(bins[i], 0, nbins - 1)
+        offs = offs.at[i].set(counts[b])
+        counts = jnp.where(valid[i], counts.at[b].add(1), counts)
+        return counts, offs
+
+    counts0 = jnp.zeros((nbins,), jnp.int32)
+    offs0 = jnp.zeros((n,), jnp.int32)
+    return jax.lax.fori_loop(0, n, body, (counts0, offs0))
+
+
 # --------------------------------------------------------------------------
 # flash attention
 # --------------------------------------------------------------------------

@@ -7,25 +7,21 @@ before any jax initialization).
 
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 chips per pod; the multi-pod mesh adds a leading pod axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_test_mesh(data: int = 1, model: int = 1, pod: int = 0):
     """Small mesh for CPU tests (uses however many devices exist)."""
     if pod:
-        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
-                             axis_types=(AxisType.Auto,) * 3)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+        return make_mesh((pod, data, model), ("pod", "data", "model"))
+    return make_mesh((data, model), ("data", "model"))
 
 
 # Hardware model used by the roofline (TPU v5e-class chip)

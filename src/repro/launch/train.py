@@ -79,6 +79,9 @@ def main(argv=None):
     losses = []
     for step in range(start_step, args.steps):
         if args.kill_at is not None and step == args.kill_at:
+            if ckpt:
+                ckpt.wait()   # drain in-flight async save, like a real
+                #               preemption handler would before exiting
             print(f"[ft] injected failure at step {step}; "
                   "restart this command to resume from the checkpoint")
             return 17

@@ -31,6 +31,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core.backend import SpmdBackend
 from repro.core.exchange import route, reply
 from repro.models.sharding import Axes
+from repro.compat import shard_map
 
 _F32 = jnp.float32
 _U32 = jnp.uint32
@@ -265,7 +266,7 @@ def moe_apply(params, x, cfg, mesh: Mesh, axes: Axes):
         in_x = P(din, None, None)
         in_i = P(din, None, None)
     espec = lambda *rest: P(axes.model, *rest)
-    y = jax.shard_map(
+    y = shard_map(
         dispatch, mesh=mesh,
         in_specs=(in_x, in_i, in_i,
                   espec(None, None), espec(None, None), espec(None, None)),

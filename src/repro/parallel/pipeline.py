@@ -20,6 +20,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
+from repro.compat import shard_map
 
 
 def gpipe(stage_fn: Callable, stacked_params, x_microbatches, mesh: Mesh,
@@ -57,7 +58,7 @@ def gpipe(stage_fn: Callable, stacked_params, x_microbatches, mesh: Mesh,
         return jax.lax.psum(out, axis)      # broadcast the result
 
     nd = x_microbatches.ndim
-    return jax.shard_map(
+    return shard_map(
         per_stage, mesh=mesh,
         in_specs=(P(axis), P(*([None] * nd))),
         out_specs=P(*([None] * nd)),

@@ -65,6 +65,5 @@ def plan_remesh(axis_names: tuple[str, ...], old_shape: tuple[int, ...],
 
 
 def make_elastic_mesh(plan: ElasticPlan):
-    from jax.sharding import AxisType
-    return jax.make_mesh(plan.new_shape, plan.axis_names,
-                         axis_types=(AxisType.Auto,) * len(plan.axis_names))
+    from repro.compat import make_mesh
+    return make_mesh(plan.new_shape, plan.axis_names)

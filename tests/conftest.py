@@ -12,7 +12,5 @@ def rng():
 
 @pytest.fixture
 def mesh11():
-    import jax
-    from jax.sharding import AxisType
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    from repro.compat import make_mesh
+    return make_mesh((1, 1), ("data", "model"))

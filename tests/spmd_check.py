@@ -14,9 +14,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import ShapeDtypeStruct as SDS
-from jax.sharding import AxisType, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.compat import make_mesh, shard_map
 
 from repro.core import ConProm, get_backend, route
 from repro.containers import bloom as bl
@@ -32,7 +34,7 @@ def check(name, ok):
 
 def main():
     assert len(jax.devices()) == 8
-    mesh = jax.make_mesh((8,), ("bcl",), axis_types=(AxisType.Auto,))
+    mesh = make_mesh((8,), ("bcl",))
     np.random.seed(0)
     PROCS, NLOC = 8, 64
 
@@ -50,7 +52,7 @@ def main():
     vals = keys * 7 + 1
     queries = jnp.concatenate([keys[:PROCS * NLOC // 2],
                                keys[:PROCS * NLOC // 2] + (1 << 21)])
-    f = jax.jit(jax.shard_map(build_and_query, mesh=mesh,
+    f = jax.jit(shard_map(build_and_query, mesh=mesh,
                               in_specs=(P("bcl"),) * 3,
                               out_specs=(P("bcl"),) * 3))
     ok, v, found = f(keys, vals, queries)
@@ -72,7 +74,7 @@ def main():
     vals2 = jnp.asarray(np.random.randint(0, 1 << 20, PROCS * 100),
                         jnp.uint32)
     dest2 = (vals2 // ((1 << 20) // 8)).astype(jnp.int32).clip(0, 7)
-    g = jax.jit(jax.shard_map(isx, mesh=mesh, in_specs=(P("bcl"),) * 2,
+    g = jax.jit(shard_map(isx, mesh=mesh, in_specs=(P("bcl"),) * 2,
                               out_specs=(P("bcl"),) * 3))
     rows, got, dropped = g(vals2, dest2)
     rec = np.asarray(rows)[np.asarray(got)]
@@ -95,7 +97,7 @@ def main():
         return already
 
     dup = jnp.full((PROCS * 16,), 777, jnp.uint32)
-    fb = jax.jit(jax.shard_map(bloomdup, mesh=mesh, in_specs=(P("bcl"),),
+    fb = jax.jit(shard_map(bloomdup, mesh=mesh, in_specs=(P("bcl"),),
                                out_specs=P("bcl")))
     already = np.asarray(fb(dup))
     check("bloom.dup_atomicity", int((~already).sum()) == 1)
@@ -120,8 +122,7 @@ def main():
     from repro.configs.shapes import ShapeSpec, input_specs
     from repro.launch.steps import (batch_shardings, make_train_step,
                                     train_shardings)
-    mesh2 = jax.make_mesh((2, 4), ("data", "model"),
-                          axis_types=(AxisType.Auto,) * 2)
+    mesh2 = make_mesh((2, 4), ("data", "model"))
     for arch in ("qwen3-4b", "arctic-480b"):
         cfg = reduced(get_config(arch), n_heads=4, n_kv_heads=4,
                       d_model=64, vocab=512)
@@ -152,8 +153,7 @@ def main():
         axes8 = Axes.from_mesh(mesh2)
         y_spmd, _ = moe_mod.moe_apply(params, x, cfg, mesh2, axes8)
 
-        mesh1 = jax.make_mesh((1, 1), ("data", "model"),
-                              axis_types=(AxisType.Auto,) * 2)
+        mesh1 = make_mesh((1, 1), ("data", "model"))
         axes1 = Axes.from_mesh(mesh1)
         y_ser, _ = moe_mod.moe_apply(params, x, cfg, mesh1, axes1)
         cfg_dd = dataclasses.replace(cfg, moe_dedup_dispatch=True)
@@ -169,7 +169,7 @@ def main():
 
     # ---- GPipe pipeline: 4 stages over a 'stage' axis == sequential ----
     from repro.parallel import gpipe
-    smesh = jax.make_mesh((4,), ("stage",), axis_types=(AxisType.Auto,))
+    smesh = make_mesh((4,), ("stage",))
     ws = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 8)) * 0.4
     xmb = jax.random.normal(jax.random.PRNGKey(1), (6, 2, 8))
 
@@ -195,7 +195,7 @@ def main():
             got.sum()[None]
 
     keys8 = jnp.asarray(np.random.randint(0, 1 << 20, 8 * 1024), jnp.uint32)
-    fw = jax.jit(jax.shard_map(isx_weak, mesh=mesh, in_specs=(P("bcl"),),
+    fw = jax.jit(shard_map(isx_weak, mesh=mesh, in_specs=(P("bcl"),),
                                out_specs=(P("bcl"), P("bcl"))))
     srted, counts = fw(keys8)
     merged = np.asarray(srted).reshape(8, -1)
@@ -209,10 +209,8 @@ def main():
     import tempfile
     from repro.checkpoint import restore_checkpoint, save_checkpoint
     from jax.sharding import NamedSharding
-    mesh_a = jax.make_mesh((2, 4), ("data", "model"),
-                           axis_types=(AxisType.Auto,) * 2)
-    mesh_b = jax.make_mesh((4, 2), ("data", "model"),
-                           axis_types=(AxisType.Auto,) * 2)
+    mesh_a = make_mesh((2, 4), ("data", "model"))
+    mesh_b = make_mesh((4, 2), ("data", "model"))
     w = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
     w_a = jax.device_put(w, NamedSharding(mesh_a, P("data", "model")))
     with tempfile.TemporaryDirectory() as td:

@@ -1,0 +1,58 @@
+"""Tier-1 smoke run of the exchange-layer microbenchmarks.
+
+Runs micro_hashmap / micro_queue at tiny sizes (benchmarks/run.py
+--smoke) so a perf-shaped regression in the exchange engine — extra
+collectives, extra wire lanes — fails the suite, not just the nightly
+benchmark sweep.
+"""
+
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def test_micro_hashmap_smoke():
+    from benchmarks import micro_hashmap
+    results = micro_hashmap.run(smoke=True)
+    for k in ("hashmap_insert", "hashmap_insert_buffer",
+              "hashmap_find_atomic", "hashmap_find", "hashmap_find_2attempt"):
+        assert results[k] > 0, k
+
+
+def test_micro_queue_smoke():
+    from benchmarks import micro_queue
+    results = micro_queue.run(smoke=True)
+    for k in ("cq_push_pushpop", "fq_push", "fq_pop", "fq_local_pop"):
+        assert results[k] > 0, k
+
+
+def test_smoke_costs_pin_round_reduction():
+    """The benchmark-side cost observables see the fused exchange."""
+    from benchmarks.util import trace_costs
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax import ShapeDtypeStruct as SDS
+    from repro.core import ConProm, get_backend
+    from repro.containers import hashmap as hm
+
+    bk = get_backend(None)
+    spec, st = hm.hashmap_create(bk, 1 << 10, SDS((), jnp.uint32),
+                                 SDS((), jnp.uint32), block_size=16)
+    keys = jnp.asarray(np.arange(64), jnp.uint32)
+    st, _ = hm.insert(bk, spec, st, keys, keys, capacity=64)
+
+    c2 = trace_costs(
+        jax.jit(lambda s, k: hm.find(bk, spec, s, k, capacity=64,
+                                     promise=ConProm.HashMap.find,
+                                     attempts=2)), st, keys)
+    c_seq = trace_costs(
+        jax.jit(lambda s, k: hm.find(bk, spec, s, k, capacity=64,
+                                     promise=ConProm.HashMap.find,
+                                     attempts=2, speculative=False)),
+        st, keys)
+    assert c2.collectives == 2 and c2.rounds == 2
+    assert c_seq.collectives == 4 and c_seq.rounds == 4

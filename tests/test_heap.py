@@ -74,9 +74,9 @@ def test_gpipe_equals_sequential():
     degenerates to S=1; the real multi-stage check runs in the
     multidevice subprocess battery)."""
     import jax
-    from jax.sharding import AxisType
+    from repro.compat import make_mesh
     from repro.parallel import gpipe
-    mesh = jax.make_mesh((1,), ("stage",), axis_types=(AxisType.Auto,))
+    mesh = make_mesh((1,), ("stage",))
     w = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 8)) * 0.5
     x = jax.random.normal(jax.random.PRNGKey(1), (4, 2, 8))
 

@@ -159,7 +159,7 @@ os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
 import sys; sys.path.insert(0, 'src')
 import dataclasses
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
+from repro.compat import make_mesh
 from repro.configs import get_config, reduced
 from repro.models import lm
 from repro.models.sharding import Axes
@@ -177,8 +177,8 @@ def run(c, mesh):
         tok = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
         lg, cache = lm.decode_step(p, c, cache, tok, mesh=mesh, axes=axes)
     return np.asarray(lg)
-mesh1 = jax.make_mesh((1,1), ('data','model'), axis_types=(AxisType.Auto,)*2)
-mesh24 = jax.make_mesh((2,4), ('data','model'), axis_types=(AxisType.Auto,)*2)
+mesh1 = make_mesh((1,1), ('data','model'))
+mesh24 = make_mesh((2,4), ('data','model'))
 base = run(cfg, mesh1)
 cfgc = dataclasses.replace(cfg, mla_absorb=True, mla_cp_decode=True)
 cp4 = run(cfgc, mesh24)

@@ -2,10 +2,14 @@
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
 from hypothesis import given, settings, strategies as st
 from jax import ShapeDtypeStruct as SDS
 
-from repro.core import get_backend
+from repro.core import get_backend, route
 from repro.containers import bloom as bl
 from repro.containers import hashmap as hm
 from repro.containers import queue as q
@@ -90,6 +94,19 @@ def test_bloom_dup_atomicity(value, n_dups):
     dup = jnp.full((n_dups,), value, jnp.uint32)
     state, already = bl.insert(bk, spec, state, dup, capacity=n_dups)
     assert int((~already).sum()) == 1
+
+
+@given(st.lists(st.integers(0, 3), min_size=1, max_size=64),
+       st.integers(1, 4))
+@settings(max_examples=25, deadline=None)
+def test_route_multiset_preserved(dests, ncopies):
+    """Property: with enough capacity, routing preserves the multiset."""
+    bk = get_backend(None)
+    n = len(dests)
+    pay = jnp.arange(n, dtype=jnp.uint32) * ncopies
+    res = route(bk, pay, jnp.zeros(n, jnp.int32), capacity=n)
+    got = sorted(np.asarray(res.payload[res.valid][:, 0]).tolist())
+    assert got == sorted(np.asarray(pay).tolist())
 
 
 @given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=2,

@@ -1,0 +1,181 @@
+"""Wire-format and collective-round assertions for the fused exchange.
+
+Pins the tentpole optimization quantitatively via ``costs.recording()``:
+
+  * route ships exactly ONE metadata lane (L+1 u32 lanes per item);
+  * reply ships ZERO metadata lanes (L u32 lanes per item) — the
+    inverse-permutation all-to-all needs no src_pos on the wire;
+  * a 2-attempt hashmap find costs 2 collectives (speculative dual
+    attempt), down from 4 for the sequential attempt loop;
+
+and pins the semantics of both fusions against the serial oracle.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import ShapeDtypeStruct as SDS
+
+from repro.core import ConProm, costs, get_backend, route
+from repro.core.exchange import reply
+from repro.containers import hashmap as hm
+from repro.kernels import ops as kops
+from repro.kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# bytes per item: one metadata lane out, zero lanes back
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("lanes", [1, 3])
+def test_route_ships_one_metadata_lane(lanes):
+    bk = get_backend(None)
+    n, cap = 16, 16
+    pay = jnp.zeros((n, lanes), jnp.uint32)
+    with costs.recording() as log:
+        route(bk, pay, jnp.zeros(n, jnp.int32), capacity=cap, op_name="op")
+    c = log.by_op("op")
+    # P * C * (L + 1) u32 lanes: payload + packed (valid | src_pos) meta
+    assert c.bytes_out == 1 * cap * (lanes + 1) * 4
+    assert c.bytes_moved == c.bytes_out and c.bytes_in == 0
+    assert c.collectives == 1 and c.rounds == 1
+
+
+@pytest.mark.parametrize("lanes", [1, 3])
+def test_reply_ships_zero_metadata_lanes(lanes):
+    bk = get_backend(None)
+    n, cap = 16, 16
+    req = route(bk, jnp.zeros((n, 2), jnp.uint32), jnp.zeros(n, jnp.int32),
+                capacity=cap)
+    with costs.recording() as log:
+        reply(bk, req, jnp.zeros((cap, lanes), jnp.uint32), orig_n=n,
+              op_name="op")
+    c = log.by_op("op")
+    # pure inverse all-to-all: P * C * L u32 lanes, no src_pos, no valid
+    assert c.bytes_in == 1 * cap * lanes * 4
+    assert c.bytes_moved == c.bytes_in and c.bytes_out == 0
+    assert c.collectives == 1 and c.rounds == 1
+
+
+def test_request_reply_direction_split():
+    bk = get_backend(None)
+    n = 8
+    with costs.recording() as log:
+        req = route(bk, jnp.zeros((n, 1), jnp.uint32),
+                    jnp.zeros(n, jnp.int32), capacity=n, op_name="op")
+        reply(bk, req, req.payload[:, :1], orig_n=n, op_name="op")
+    c = log.by_op("op")
+    assert c.bytes_out == n * 2 * 4          # 1 payload lane + meta lane
+    assert c.bytes_in == n * 1 * 4           # 1 payload lane only
+    assert c.bytes_moved == c.bytes_out + c.bytes_in
+    assert c.rounds == 2
+
+
+# ---------------------------------------------------------------------------
+# collective rounds: speculative dual-attempt find
+# ---------------------------------------------------------------------------
+
+def _loaded_map(nkeys=200, capacity=256, block_size=4):
+    """A hash map loaded to ~0.8 so many keys need attempt-1/2 homes."""
+    bk = get_backend(None)
+    spec, st = hm.hashmap_create(bk, capacity, SDS((), jnp.uint32),
+                                 SDS((), jnp.uint32), block_size=block_size)
+    keys = jnp.asarray(np.random.default_rng(7).permutation(1 << 20)[:nkeys],
+                       jnp.uint32)
+    vals = keys * 3 + 1
+    st, ok = hm.insert(bk, spec, st, keys, vals, capacity=nkeys, attempts=3)
+    return bk, spec, st, keys, vals, ok
+
+
+def test_find_two_attempts_two_collectives():
+    bk, spec, st, keys, _, _ = _loaded_map()
+    with costs.recording() as log:
+        hm.find(bk, spec, st, keys, capacity=keys.shape[0], attempts=2)
+    c = log.by_op("hashmap.find")
+    assert c.collectives == 2 and c.rounds == 2
+
+
+def test_find_sequential_attempts_four_collectives():
+    bk, spec, st, keys, _, _ = _loaded_map()
+    with costs.recording() as log:
+        hm.find(bk, spec, st, keys, capacity=keys.shape[0], attempts=2,
+                speculative=False)
+    c = log.by_op("hashmap.find")
+    assert c.collectives == 4 and c.rounds == 4
+
+
+def test_speculative_find_matches_serial_oracle():
+    bk, spec, st, keys, vals, ok = _loaded_map()
+    n = keys.shape[0]
+    # mix of present keys (including attempt-1 residents) and absent keys
+    queries = jnp.concatenate([keys, keys + jnp.uint32(1 << 21)])
+    _, v_spec, f_spec = hm.find(bk, spec, st, queries, capacity=2 * n)
+    _, v_ser, f_ser = hm.find(bk, spec, st, queries, capacity=2 * n,
+                              speculative=False)
+    assert np.array_equal(np.asarray(f_spec), np.asarray(f_ser))
+    assert np.array_equal(np.asarray(v_spec), np.asarray(v_ser))
+    # inserted keys found at 2 attempts must carry the inserted value
+    fs = np.asarray(f_spec[:n])
+    assert fs.sum() > 0
+    assert (np.asarray(v_spec[:n])[fs] ==
+            (np.asarray(keys) * 3 + 1)[fs]).all()
+    # absent keys are never "found"
+    assert not np.asarray(f_spec[n:]).any()
+
+
+def test_speculative_find_atomic_promise():
+    bk, spec, st, keys, _, _ = _loaded_map()
+    st1, v1, f1 = hm.find(bk, spec, st, keys, capacity=keys.shape[0],
+                          promise=ConProm.HashMap.find_insert)
+    st2, v2, f2 = hm.find(bk, spec, st, keys, capacity=keys.shape[0],
+                          promise=ConProm.HashMap.find_insert,
+                          speculative=False)
+    assert np.array_equal(np.asarray(f1), np.asarray(f2))
+    assert np.array_equal(np.asarray(v1), np.asarray(v2))
+    # the read-bit dance is net-zero on the status word either way
+    assert np.array_equal(np.asarray(st1.status), np.asarray(st2.status))
+
+
+# ---------------------------------------------------------------------------
+# fused reply == oracle alignment
+# ---------------------------------------------------------------------------
+
+def test_fused_reply_aligns_with_request_batch():
+    bk = get_backend(None)
+    n = 32
+    pay = jnp.asarray(np.random.default_rng(3).permutation(n), jnp.uint32)
+    valid = jnp.asarray(np.random.default_rng(4).random(n) < 0.7)
+    req = route(bk, pay, jnp.zeros(n, jnp.int32), capacity=n, valid=valid)
+    out, answered = reply(bk, req, req.payload[:, 0] * 5 + 2, orig_n=n)
+    ans = np.asarray(answered)
+    assert np.array_equal(ans, np.asarray(valid))
+    assert np.array_equal(np.asarray(out[:, 0])[ans],
+                          np.asarray(pay)[ans] * 5 + 2)
+
+
+# ---------------------------------------------------------------------------
+# send-buffer construction kernel: all impls agree
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", ["jnp", "pallas"])
+def test_bin_offsets_impls_match_oracle(impl):
+    rng = np.random.default_rng(11)
+    nbins = 8
+    bins = jnp.asarray(rng.integers(0, nbins, 300), jnp.int32)
+    valid = jnp.asarray(rng.random(300) < 0.8)
+    oc, oo = ref.bin_offsets_ref(bins, nbins, valid)
+    c, o = kops.bin_offsets(bins, nbins, valid, impl=impl)
+    assert np.array_equal(np.asarray(oc), np.asarray(c)), impl
+    ov = np.asarray(valid)
+    assert np.array_equal(np.asarray(oo)[ov], np.asarray(o)[ov]), impl
+
+
+def test_bin_offsets_slots_are_unique_per_bin():
+    rng = np.random.default_rng(13)
+    nbins = 4
+    bins = jnp.asarray(rng.integers(0, nbins, 100), jnp.int32)
+    _, offs = kops.bin_offsets(bins, nbins, impl="jnp")
+    b, o = np.asarray(bins), np.asarray(offs)
+    for d in range(nbins):
+        mine = np.sort(o[b == d])
+        assert np.array_equal(mine, np.arange(mine.size))  # dense + stable
