@@ -71,7 +71,6 @@ def run(smoke: bool = False):
     @jax.jit
     def traverse(state, start_hi, start_lo):
         cur_hi, cur_lo = start_hi, start_lo
-        mask = (jnp.uint64(1) if False else None)
         total = jnp.zeros((), jnp.uint32)
         for _ in range(steps):
             st2, v, found = hm.find(bk, spec, state,

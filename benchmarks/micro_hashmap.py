@@ -7,10 +7,15 @@ Variants (paper naming):
   find            phase-local find (Table 3d: R)
   find_2attempt   speculative dual-attempt find (2 collectives, not 4)
 
+The ``--fused`` arm adds the ExchangePlan fusion pair:
+  find_insert_fused   find + insert flows sharing one plan (2 collectives)
+  find_insert_fine    the Promise.FINE sequential oracle (4 collectives)
+
 Reported as microseconds per operation (amortized over the batch) plus
-the collective/bytes/rounds observables, so the paper's relative claims
-(buffer >> insert; find 2-3x over find_atomic) and the fused wire
-format's round reduction are directly checkable from the CSV.
+the collective/bytes/rounds observables and rounds_per_op, so the
+paper's relative claims (buffer >> insert; find 2-3x over find_atomic)
+and the fused schedules' round reduction are directly checkable from
+the CSV.
 """
 
 from __future__ import annotations
@@ -21,7 +26,7 @@ import numpy as np
 from jax import ShapeDtypeStruct as SDS
 
 from benchmarks.util import emit, time_fn, trace_costs
-from repro.core import ConProm, get_backend
+from repro.core import ConProm, Promise, get_backend
 from repro.containers import hashmap as hm
 from repro.containers import hashmap_buffer as hb
 
@@ -30,7 +35,7 @@ TABLE = 1 << 17
 WAVES = 8                      # fine-grained ops issue per-wave
 
 
-def run(smoke: bool = False):
+def run(smoke: bool = False, fused: bool = False):
     n_ops = 1 << 8 if smoke else N_OPS
     table = 1 << 11 if smoke else TABLE
     bk = get_backend(None)
@@ -111,18 +116,55 @@ def run(smoke: bool = False):
     bench("hashmap_find", find_relaxed, st, keys)
     bench("hashmap_find_2attempt", find_2attempt, st, keys)
 
+    # --- fused arm: find+insert sharing one plan vs the FINE oracle ---
+    if fused:
+        keys2 = jnp.asarray(rng.permutation(1 << 22)[n_ops:2 * n_ops],
+                            jnp.uint32)
+
+        def fi(promise):
+            spec_f, st_f = fresh()
+            st_f, _ = hm.insert(bk, spec_f, st_f, keys, vals, capacity=n_ops)
+
+            @jax.jit
+            def rounds(st, fk, ik, iv):
+                for i in range(WAVES):
+                    sl = slice(i * wave, (i + 1) * wave)
+                    st, _, _, _ = hm.find_insert(
+                        bk, spec_f, st, fk[sl], ik[sl], iv[sl],
+                        capacity=wave, promise=promise)
+                return st
+
+            return rounds, st_f
+
+        for tag, prom in (
+                ("hashmap_find_insert_fused", ConProm.HashMap.find_insert),
+                ("hashmap_find_insert_fine",
+                 ConProm.HashMap.find_insert | Promise.FINE)):
+            fn, st_f = fi(prom)
+            obs[tag] = trace_costs(fn, st_f, keys, keys2, keys2 * 5 + 1)
+            # 2 ops (one find + one insert) per wave item
+            results[tag] = time_fn(fn, st_f, keys, keys2, keys2 * 5 + 1) \
+                / (2 * n_ops) * 1e6
+
     emit("hashmap_insert", results["hashmap_insert"], "2A+W",
-         cost=obs["hashmap_insert"])
+         cost=obs["hashmap_insert"], n_ops=n_ops)
     emit("hashmap_insert_buffer", results["hashmap_insert_buffer"],
          f"speedup={results['hashmap_insert'] / results['hashmap_insert_buffer']:.2f}x",
-         cost=obs["hashmap_insert_buffer"])
+         cost=obs["hashmap_insert_buffer"], n_ops=n_ops)
     emit("hashmap_find_atomic", results["hashmap_find_atomic"], "2A+R",
-         cost=obs["hashmap_find_atomic"])
+         cost=obs["hashmap_find_atomic"], n_ops=n_ops)
     emit("hashmap_find", results["hashmap_find"],
          f"speedup={results['hashmap_find_atomic'] / results['hashmap_find']:.2f}x",
-         cost=obs["hashmap_find"])
+         cost=obs["hashmap_find"], n_ops=n_ops)
     emit("hashmap_find_2attempt", results["hashmap_find_2attempt"],
-         "2 rounds/wave", cost=obs["hashmap_find_2attempt"])
+         "2 rounds/wave", cost=obs["hashmap_find_2attempt"], n_ops=n_ops)
+    if fused:
+        emit("hashmap_find_insert_fused", results["hashmap_find_insert_fused"],
+             "2 collectives/round-trip",
+             cost=obs["hashmap_find_insert_fused"], n_ops=2 * n_ops)
+        emit("hashmap_find_insert_fine", results["hashmap_find_insert_fine"],
+             "FINE oracle: 4 collectives",
+             cost=obs["hashmap_find_insert_fine"], n_ops=2 * n_ops)
     return results
 
 

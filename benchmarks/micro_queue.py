@@ -6,8 +6,14 @@ Variants (paper naming):
   fq_push / fq_pop              FastQueue (A + nW/nR)
   *_many                        one queue per rank, all ranks pushing
 
-Each row carries the collective/bytes/rounds observables of one jitted
-call so exchange-layer regressions show up next to wall time.
+The ``--fused`` arm adds the ExchangePlan fusion pair:
+  cq_push_pop_fused             push + pop flows sharing one plan (2
+                                collectives per wave)
+  cq_push_pop_fine              the Promise.FINE sequential oracle (3)
+
+Each row carries the collective/bytes/rounds observables (and
+rounds_per_op) of one jitted call so exchange-layer regressions show up
+next to wall time.
 """
 
 from __future__ import annotations
@@ -18,14 +24,14 @@ import numpy as np
 from jax import ShapeDtypeStruct as SDS
 
 from benchmarks.util import emit, time_fn, trace_costs
-from repro.core import ConProm, get_backend
+from repro.core import ConProm, Promise, get_backend
 from repro.containers import queue as q
 
 N_OPS = 1 << 14
 WAVES = 8
 
 
-def run(smoke: bool = False):
+def run(smoke: bool = False, fused: bool = False):
     n_ops = 1 << 8 if smoke else N_OPS
     bk = get_backend(None)
     rng = np.random.default_rng(1)
@@ -91,11 +97,43 @@ def run(smoke: bool = False):
     obs["fq_local_pop"] = trace_costs(local_pops, st0)
     results["fq_local_pop"] = time_fn(local_pops, st0) / n_ops * 1e6
 
+    # --- fused arm: push+pop sharing one plan vs the FINE oracle ---
+    if fused:
+        def pp(promise, tag):
+            spec, st0 = q.queue_create(bk, n_ops * 2, SDS((), jnp.uint32),
+                                       circular=True)
+
+            @jax.jit
+            def waves(st, vals, dest):
+                outs = []
+                for i in range(WAVES):
+                    sl = slice(i * wave, (i + 1) * wave)
+                    st, _, _, out, _ = q.push_pop(
+                        bk, spec, st, vals[sl], dest[sl], wave, wave, 0,
+                        promise=promise)
+                    outs.append(out)
+                return st, outs
+
+            obs[tag] = trace_costs(waves, st0, vals, dest)
+            # 2 ops (one push + one pop) per wave item
+            results[tag] = time_fn(waves, st0, vals, dest) \
+                / (2 * n_ops) * 1e6
+
+        pp(ConProm.CircularQueue.push_pop, "cq_push_pop_fused")
+        pp(ConProm.CircularQueue.push_pop | Promise.FINE, "cq_push_pop_fine")
+
     for k in ("cq_push_pushpop", "cq_push_push", "fq_push",
               "cq_pop_pushpop", "cq_pop_pop", "fq_pop", "fq_local_pop"):
         emit(k, results[k],
              "2A" if "pushpop" in k else ("A" if k.startswith("fq") else "2A"),
-             cost=obs[k])
+             cost=obs[k], n_ops=n_ops)
+    if fused:
+        emit("cq_push_pop_fused", results["cq_push_pop_fused"],
+             "2 collectives/wave", cost=obs["cq_push_pop_fused"],
+             n_ops=2 * n_ops)
+        emit("cq_push_pop_fine", results["cq_push_pop_fine"],
+             "FINE oracle: 3 collectives", cost=obs["cq_push_pop_fine"],
+             n_ops=2 * n_ops)
     return results
 
 

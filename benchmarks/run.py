@@ -14,6 +14,10 @@ them empty.
 ``--smoke`` runs each benchmark at tiny sizes (seconds, not minutes) so
 the tier-1 suite can exercise the full benchmark path and its cost
 accounting; timings from a smoke run are not meaningful.
+
+``--fused`` adds the plan/commit-fusion arms (fused vs Promise.FINE
+schedules) to the modules that have them, so the rounds_per_op column
+shows the collective-count reduction side by side with wall time.
 """
 
 from __future__ import annotations
@@ -35,21 +39,27 @@ def main() -> None:
     }
     args = [a for a in sys.argv[1:]]
     smoke = "--smoke" in args
-    args = [a for a in args if a != "--smoke"]
+    fused = "--fused" in args
+    args = [a for a in args if a not in ("--smoke", "--fused")]
     only = args[0] if args else None
-    print("name,us_per_call,collectives,bytes_moved,rounds,derived")
+    print("name,us_per_call,collectives,bytes_moved,rounds,"
+          "rounds_per_op,derived")
     for name, mod in mods.items():
         if only and name != only:
             continue
+        params = inspect.signature(mod.run).parameters
+        kw = {}
+        if smoke and "smoke" in params:
+            kw["smoke"] = True
+        if fused and "fused" in params:
+            kw["fused"] = True
         try:
-            if smoke and "smoke" in inspect.signature(mod.run).parameters:
-                mod.run(smoke=True)
-            elif smoke:
-                print(f"{name},SKIPPED,,,,no smoke mode yet")
+            if smoke and "smoke" not in params:
+                print(f"{name},SKIPPED,,,,,no smoke mode yet")
             else:
-                mod.run()
+                mod.run(**kw)
         except Exception as e:  # keep the harness going; report the row
-            print(f"{name},ERROR,,,,{type(e).__name__}: {e}")
+            print(f"{name},ERROR,,,,,{type(e).__name__}: {e}")
 
 
 if __name__ == "__main__":

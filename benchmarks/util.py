@@ -38,10 +38,18 @@ def trace_costs(fn, *args, **kw):
 
 
 def emit(name: str, us_per_call: float, derived: str = "",
-         cost=None):
-    """CSV row: name,us_per_call,collectives,bytes_moved,rounds,derived."""
+         cost=None, n_ops: int | None = None):
+    """CSV row: name,us_per_call,collectives,bytes_moved,rounds,
+    rounds_per_op,derived.
+
+    ``rounds_per_op`` (rounds amortized over ``n_ops`` data-structure
+    ops) is the collective-count observable of the plan/commit fusion:
+    fused schedules cut it without touching bytes, so BENCH trajectories
+    show the aggregation win directly.
+    """
     if cost is None:
-        print(f"{name},{us_per_call:.2f},,,,{derived}")
-    else:
-        print(f"{name},{us_per_call:.2f},{cost.collectives},"
-              f"{cost.bytes_moved},{cost.rounds},{derived}")
+        print(f"{name},{us_per_call:.2f},,,,,{derived}")
+        return
+    rpo = f"{cost.rounds / n_ops:.6f}" if n_ops else ""
+    print(f"{name},{us_per_call:.2f},{cost.collectives},"
+          f"{cost.bytes_moved},{cost.rounds},{rpo},{derived}")

@@ -9,6 +9,11 @@ deterministic arrival order) observes "not present".  This is the
 property the paper shows a flat distributed Bloom filter cannot provide.
 
 Cost model (paper Table 2): insert = A, find = R.
+
+``insert_find`` fuses an insert batch and a membership-query batch into
+one ExchangePlan round trip (DESIGN.md section 1.5) — the dedup
+pipeline's contamination-check pattern; ``Promise.FINE`` recovers the
+sequential schedule.
 """
 
 from __future__ import annotations
@@ -21,9 +26,10 @@ import jax.numpy as jnp
 
 from repro.core import costs
 from repro.core.backend import Backend
-from repro.core.exchange import route, reply
+from repro.core.exchange import ExchangePlan, reply, route
 from repro.core.hashing import double_hash, hash_lanes
 from repro.core.object_container import Packer, packer_for
+from repro.core.promises import Promise, fine_grained, validate
 from repro.kernels import ops as kops
 from repro.kernels.ref import bloom_words_ref
 
@@ -55,8 +61,8 @@ def bloom_create(backend: Backend, nbits: int, value_spec,
     return spec, BloomState(jnp.zeros((nb_local, 2), _U32))
 
 
-def _route_words(backend: Backend, spec: BloomSpec, items, valid, capacity,
-                 op_name: str):
+def _words_of(spec: BloomSpec, items, valid):
+    """Pack items into the wire body ``[local block | 2 bit-words]``."""
     lanes = spec.packer.pack(items)
     n = lanes.shape[0]
     if valid is None:
@@ -67,6 +73,12 @@ def _route_words(backend: Backend, spec: BloomSpec, items, valid, capacity,
     lblock = gblock % spec.nblocks_local
     words = bloom_words_ref(double_hash(lanes, spec.k, 64), spec.k)
     body = jnp.concatenate([lblock.astype(_U32)[:, None], words], axis=1)
+    return n, body, owner, valid
+
+
+def _route_words(backend: Backend, spec: BloomSpec, items, valid, capacity,
+                 op_name: str):
+    n, body, owner, valid = _words_of(spec, items, valid)
     res = route(backend, body, owner, capacity, valid=valid, op_name=op_name,
                 impl=spec.impl)
     rb = jnp.where(res.valid, res.payload[:, 0].astype(_I32), 0)
@@ -102,6 +114,52 @@ def find(backend: Backend, spec: BloomSpec, state: BloomState,
                     op_name="bloom.find")
     costs.record("bloom.find", costs.Cost(R=n))
     return back[:, 0] == 1
+
+
+def insert_find(backend: Backend, spec: BloomSpec, state: BloomState,
+                ins_items, find_items, capacity_ins: int, capacity_find: int,
+                ins_valid: jax.Array | None = None,
+                find_valid: jax.Array | None = None,
+                promise: Promise = Promise.NONE):
+    """Fused insert + membership query sharing ONE exchange round trip.
+
+    The insert is serialized before the find, so the query observes this
+    batch's insertions (exactly the ``Promise.FINE`` sequential order).
+    Both ops' flows ride one ExchangePlan: 2 collectives where the FINE
+    schedule costs 4.  Returns ``(state, already_present, present)``.
+    """
+    validate(promise)
+    if fine_grained(promise):
+        state, already = insert(backend, spec, state, ins_items,
+                                capacity_ins, valid=ins_valid)
+        present = find(backend, spec, state, find_items, capacity_find,
+                       valid=find_valid)
+        return state, already, present
+
+    ni, body_i, owner_i, ins_valid = _words_of(spec, ins_items, ins_valid)
+    nf, body_f, owner_f, find_valid = _words_of(spec, find_items, find_valid)
+    plan = ExchangePlan(name="bloom.insert_find")
+    hi = plan.add(body_i, owner_i, capacity_ins, reply_lanes=1,
+                  valid=ins_valid, op_name="bloom.insert")
+    hf = plan.add(body_f, owner_f, capacity_find, reply_lanes=1,
+                  valid=find_valid, op_name="bloom.find")
+    c = plan.commit(backend, impl=spec.impl)
+    vi, vf = c.view(hi), c.view(hf)
+
+    rb_i = jnp.where(vi.valid, vi.payload[:, 0].astype(_I32), 0)
+    words, already = kops.bloom_insert(state.words, rb_i, vi.payload[:, 1:3],
+                                       vi.valid, impl=spec.impl)
+    rb_f = jnp.where(vf.valid, vf.payload[:, 0].astype(_I32), 0)
+    present = kops.bloom_find(words, rb_f, vf.payload[:, 1:3], vf.valid,
+                              impl=spec.impl)
+    c.set_reply(hi, already.astype(_U32))
+    c.set_reply(hf, present.astype(_U32))
+    outs = c.finish(backend)
+    bi, _ = outs[hi]
+    bf, _ = outs[hf]
+    costs.record("bloom.insert", costs.Cost(A=1))
+    costs.record("bloom.find", costs.Cost(R=nf))
+    return BloomState(words), bi[:, 0] == 1, bf[:, 0] == 1
 
 
 def fill_fraction(backend: Backend, state: BloomState) -> jax.Array:

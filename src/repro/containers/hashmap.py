@@ -15,6 +15,13 @@ Concurrency promises select the schedule (paper Table 3):
   (c) find|insert   fully atomic find
   (d) find          phase-local find: one read, no AMOs     R
 
+Promises also pick the *collective* schedule (DESIGN.md section 1.5):
+the default 2-attempt find issues both probes as two flows of one
+ExchangePlan (2 collectives), and ``find_insert`` fuses a find batch
+and an insert batch into one plan under the
+``ConProm.HashMap.find_insert`` promise; ``Promise.FINE`` at any
+callsite forces the sequential one-op-per-round oracle.
+
 "Atomic" ops execute the paper's flag dance (reserve CAS / read-bit
 fetch-or + fetch-and) as real owner-side RMW passes over the status
 word, so their extra cost is measurable; promise-relaxed ops skip it.
@@ -30,11 +37,11 @@ import jax.numpy as jnp
 
 from repro.core import costs
 from repro.core.backend import Backend
-from repro.core.exchange import route, reply
+from repro.core.exchange import ExchangePlan, reply, route
 from repro.core.hashing import hash_lanes
 from repro.core.object_container import Packer, packer_for
-from repro.core.promises import (Promise, find_only, fully_atomic_hashmap,
-                                 local_only)
+from repro.core.promises import (Promise, find_only, fine_grained,
+                                 fully_atomic_hashmap, local_only, validate)
 from repro.kernels import ops as kops
 
 _U32 = jnp.uint32
@@ -110,6 +117,7 @@ def insert(backend: Backend, spec: HashMapSpec, state: HashMapState,
     must hash to this rank's own blocks (cost l, no collectives) — the
     HashMapBuffer flush path (paper Table 3b).
     """
+    validate(promise)
     klanes = spec.key_packer.pack(keys)
     vlanes = spec.val_packer.pack(vals)
     n = klanes.shape[0]
@@ -170,46 +178,60 @@ def _find_speculative(backend: Backend, spec: HashMapSpec,
                       valid, atomic: bool):
     """Dual-attempt find in ONE round trip (2 collectives, not 4).
 
-    Each key is routed to its attempt-0 AND attempt-1 owners in the same
-    batch; the requester prefers the attempt-0 answer, which makes the
-    result bit-identical to the sequential attempt loop whenever the
-    route capacity admits every request (zero drops — the operating
-    regime callers are expected to size for).  Under capacity overflow
-    both schedules degrade to best-effort on *different* probe subsets:
-    this path drops among 2N speculative requests at capacity 2C, the
-    sequential loop drops per attempt at capacity C.  Halves the
-    collective rounds of the default 2-attempt find at the price of one
-    speculative lookup per key — the paper's aggregation trade (latency
-    for bandwidth, section 4.2) applied to the probe path itself.
+    Both probe attempts are two *flows* of one :class:`ExchangePlan`:
+    each key is registered against its attempt-0 AND attempt-1 owners,
+    the plan fuses both flows into a single request all-to-all, and the
+    replies share a single inverse all-to-all.  The requester prefers
+    the attempt-0 answer, which makes the result bit-identical to the
+    sequential attempt loop whenever the per-flow capacity admits every
+    request (zero drops — the operating regime callers are expected to
+    size for).  Under capacity overflow both schedules degrade to
+    best-effort on *different* probe subsets: here each attempt flow
+    drops independently at capacity C per (src, dst, flow) segment.
+    Halves the collective rounds of the default 2-attempt find at the
+    price of one speculative lookup per key — the paper's aggregation
+    trade (latency for bandwidth, section 4.2) applied to the probe
+    path itself.
     """
     n = klanes.shape[0]
     owner0, lb0 = _owner_local(spec, _block_of(spec, klanes, 0))
     owner1, lb1 = _owner_local(spec, _block_of(spec, klanes, 1))
-    owner = jnp.concatenate([owner0, owner1])
-    lblock = jnp.concatenate([lb0, lb1])
-    k2 = jnp.concatenate([klanes, klanes], axis=0)
-    valid2 = jnp.concatenate([valid, valid])
-    body = jnp.concatenate([lblock.astype(_U32)[:, None], k2], axis=1)
-    res = route(backend, body, owner, 2 * capacity, valid=valid2,
-                op_name="hashmap.find", impl=spec.impl)
-    rb = jnp.where(res.valid, res.payload[:, 0].astype(_I32), 0)
-    rk = res.payload[:, 1:]
+    rl = spec.val_packer.lanes + 1
+    plan = ExchangePlan(name="hashmap.find")
+    h0 = plan.add(jnp.concatenate([lb0.astype(_U32)[:, None], klanes], axis=1),
+                  owner0, capacity, reply_lanes=rl, valid=valid,
+                  op_name="hashmap.find")
+    h1 = plan.add(jnp.concatenate([lb1.astype(_U32)[:, None], klanes], axis=1),
+                  owner1, capacity, reply_lanes=rl, valid=valid,
+                  op_name="hashmap.find")
+    c = plan.commit(backend, impl=spec.impl)
+    v0, v1 = c.view(h0), c.view(h1)
+
+    rb = jnp.concatenate([
+        jnp.where(v0.valid, v0.payload[:, 0].astype(_I32), 0),
+        jnp.where(v1.valid, v1.payload[:, 0].astype(_I32), 0)])
+    rk = jnp.concatenate([v0.payload[:, 1:], v1.payload[:, 1:]])
+    rvalid = jnp.concatenate([v0.valid, v1.valid])
     tk, tv, st = state
     if atomic:
         st = st.at[rb].add(_READ_BIT, mode="drop")
-    found_here, vlanes = kops.bulk_find(tk, tv, st, rb, rk, res.valid,
+    found_here, vlanes = kops.bulk_find(tk, tv, st, rb, rk, rvalid,
                                         impl=spec.impl)
     if atomic:
         st = st.at[rb].add(_U32(0) - _READ_BIT, mode="drop")
         state = HashMapState(tk, tv, st)
     body_back = jnp.concatenate(
         [vlanes, found_here.astype(_U32)[:, None]], axis=1)
-    back, _ = reply(backend, res, body_back, 2 * n, op_name="hashmap.find")
-    got = back[:, -1] == 1
-    got0 = got[:n] & valid
-    got1 = got[n:] & valid
+    m = v0.payload.shape[0]
+    c.set_reply(h0, body_back[:m])
+    c.set_reply(h1, body_back[m:])
+    outs = c.finish(backend)
+    b0, _ = outs[h0]
+    b1, _ = outs[h1]
+    got0 = (b0[:, -1] == 1) & valid
+    got1 = (b1[:, -1] == 1) & valid
     found = got0 | got1
-    vals = jnp.where(got0[:, None], back[:n, :-1], back[n:, :-1])
+    vals = jnp.where(got0[:, None], b0[:, :-1], b1[:, :-1])
     vals = jnp.where(found[:, None], vals, 0)
     costs.record("hashmap.find",
                  costs.Cost(A=2 if atomic else 0, R=n))
@@ -229,13 +251,17 @@ def find(backend: Backend, spec: HashMapSpec, state: HashMapState,
     fetch-and-or / fetch-and-and pair.
 
     With ``speculative`` (the default) a 2-attempt find issues both
-    probe attempts in one batched round trip — 2 collectives instead of
-    4 — with identical results to the sequential attempt loop
+    probe attempts as two flows of one ExchangePlan — 2 collectives
+    instead of 4 — with identical results to the sequential attempt loop
     (``speculative=False``, the oracle schedule) as long as ``capacity``
     admits every request.  When requests overflow capacity (drops are
     counted, never silent) the two schedules probe different best-effort
     subsets; found keys always carry correct values either way.
+    ``Promise.FINE`` in the promise forces the sequential schedule.
     """
+    validate(promise)
+    if fine_grained(promise):
+        speculative = False
     klanes = spec.key_packer.pack(keys)
     n = klanes.shape[0]
     if valid is None:
@@ -285,6 +311,102 @@ def find(backend: Backend, spec: HashMapSpec, state: HashMapState,
     costs.record("hashmap.find",
                  costs.Cost(A=2 if atomic else 0, R=n))
     return state, spec.val_packer.unpack(vals_all), found_all
+
+
+def find_insert(backend: Backend, spec: HashMapSpec, state: HashMapState,
+                find_keys, ins_keys, ins_vals, capacity: int,
+                promise: Promise = Promise.FIND | Promise.INSERT,
+                find_valid: jax.Array | None = None,
+                ins_valid: jax.Array | None = None,
+                mode: int = kops.MODE_SET):
+    """Fused find + insert sharing ONE exchange round trip.
+
+    Under ``ConProm.HashMap.find_insert`` the two batches are promised
+    concurrent, so the runtime may serialize them however it likes; this
+    schedule serializes find-before-insert (finds observe the table as
+    it was before this batch's insertions) and fuses both ops' flows
+    into one ExchangePlan: **2 collectives** per round trip where the
+    ``Promise.FINE`` sequential schedule costs **4** (pinned in
+    tests/test_wire_format.py).  Both probes use attempt 0; callers
+    needing rehash attempts issue the ops separately.
+
+    Returns ``(state, values, found, ins_ok)`` — find results aligned
+    with ``find_keys``, insert successes aligned with ``ins_keys``.
+    """
+    validate(promise)
+    # per-op atomicity gates mirror the standalone ops exactly, so the
+    # FINE oracle and the fused schedule agree on the A counts and the
+    # status-word traffic for ANY promise, not just find_insert
+    find_atomic = not find_only(promise)
+    ins_atomic = fully_atomic_hashmap(promise)
+    if fine_grained(promise):
+        state, vals, found = find(backend, spec, state, find_keys, capacity,
+                                  promise=promise, valid=find_valid,
+                                  attempts=1)
+        state, ok = insert(backend, spec, state, ins_keys, ins_vals, capacity,
+                           promise=promise, valid=ins_valid, mode=mode,
+                           attempts=1, return_success=True)
+        return state, vals, found, ok
+
+    kf = spec.key_packer.pack(find_keys)
+    ki = spec.key_packer.pack(ins_keys)
+    vi = spec.val_packer.pack(ins_vals)
+    nf, ni = kf.shape[0], ki.shape[0]
+    lk = spec.key_packer.lanes
+    if find_valid is None:
+        find_valid = jnp.ones((nf,), bool)
+    if ins_valid is None:
+        ins_valid = jnp.ones((ni,), bool)
+    owner_f, lb_f = _owner_local(spec, _block_of(spec, kf, 0))
+    owner_i, lb_i = _owner_local(spec, _block_of(spec, ki, 0))
+
+    plan = ExchangePlan(name="hashmap.find_insert")
+    hf = plan.add(jnp.concatenate([lb_f.astype(_U32)[:, None], kf], axis=1),
+                  owner_f, capacity, reply_lanes=spec.val_packer.lanes + 1,
+                  valid=find_valid, op_name="hashmap.find")
+    hi = plan.add(jnp.concatenate([lb_i.astype(_U32)[:, None], ki, vi],
+                                  axis=1),
+                  owner_i, capacity, reply_lanes=1,
+                  valid=ins_valid, op_name="hashmap.insert")
+    c = plan.commit(backend, impl=spec.impl)
+    vf, vw = c.view(hf), c.view(hi)
+
+    # find against the pre-insert table (the chosen serialization)
+    rb_f = jnp.where(vf.valid, vf.payload[:, 0].astype(_I32), 0)
+    rk_f = vf.payload[:, 1:]
+    tk, tv, st = state
+    if find_atomic:
+        st = st.at[rb_f].add(_READ_BIT, mode="drop")
+    found_here, vlanes = kops.bulk_find(tk, tv, st, rb_f, rk_f, vf.valid,
+                                        impl=spec.impl)
+    if find_atomic:
+        st = st.at[rb_f].add(_U32(0) - _READ_BIT, mode="drop")
+
+    # insert (same reserve dance as the standalone op)
+    rb_i = jnp.where(vw.valid, vw.payload[:, 0].astype(_I32), 0)
+    rk_i = vw.payload[:, 1:1 + lk]
+    rv_i = vw.payload[:, 1 + lk:]
+    if ins_atomic:
+        st = st.at[rb_i].add(_READ_BIT, mode="drop")
+        st = st.at[rb_i].add(_U32(0) - _READ_BIT, mode="drop")
+    tk, tv, st, ok_here = kops.bulk_insert(tk, tv, st, rb_i, rk_i, rv_i,
+                                           vw.valid, mode, impl=spec.impl)
+    state = HashMapState(tk, tv, st)
+
+    c.set_reply(hf, jnp.concatenate(
+        [vlanes, found_here.astype(_U32)[:, None]], axis=1))
+    c.set_reply(hi, ok_here.astype(_U32))
+    outs = c.finish(backend)
+    bf, _ = outs[hf]
+    bi, _ = outs[hi]
+    found = (bf[:, -1] == 1) & find_valid
+    vals = jnp.where(found[:, None], bf[:, :-1], 0)
+    ok = (bi[:, 0] == 1) & ins_valid
+    costs.record("hashmap.find",
+                 costs.Cost(A=2 if find_atomic else 0, R=nf))
+    costs.record("hashmap.insert",
+                 costs.Cost(A=2 if ins_atomic else 1, W=ni))
+    return state, spec.val_packer.unpack(vals), found, ok
 
 
 def count_ready(backend: Backend, state: HashMapState) -> jax.Array:

@@ -9,7 +9,10 @@ buffers; full buffers are pushed to a FastQueue on the owning node; a
 This port keeps the exact same three-stage pipeline:
 
   insert()  ->  local append (cost l, zero collectives)
-  _spill()  ->  FastQueue.push of full buffers (one route, cost A + nW)
+  spill()   ->  FastQueue.push of full buffers (one flow on an
+                ExchangePlan, cost A + nW; ``spill_flow``/``spill_apply``
+                let the push ride a caller's plan so the spill shares
+                collectives with concurrent container ops)
   flush()   ->  owner drains its own queue, local bulk insert (cost l)
 
 Buffer capacity is static; ``insert`` reports overflow so callers (or
@@ -26,6 +29,7 @@ import jax.numpy as jnp
 
 from repro.core import costs
 from repro.core.backend import Backend
+from repro.core.exchange import CommittedPlan, ExchangePlan
 from repro.core.promises import ConProm, Promise
 from repro.containers import hashmap as hm
 from repro.containers import queue as q
@@ -95,15 +99,44 @@ def insert(spec: HashMapBufferSpec, state: HashMapBufferState,
                           buf_n=n_new[None]), overflow
 
 
+def spill_flow(plan: ExchangePlan, spec: HashMapBufferSpec,
+               state: HashMapBufferState, capacity: int) -> int:
+    """Register the staged buffer's queue push as a flow on ``plan``.
+
+    The spill is exactly the FastQueue push it wraps, so it rides
+    whatever plan the caller is committing this round — fusing the
+    spill's collective with any concurrent container ops — instead of
+    demanding a round of its own.  Pair with :func:`spill_apply` after
+    ``plan.commit``.
+    """
+    live = jnp.arange(spec.buffer_cap, dtype=_I32) < state.buf_n[0]
+    return plan.add(state.buf, state.buf_dest, capacity, valid=live,
+                    op_name="queue.push")
+
+
+def spill_apply(backend: Backend, committed: CommittedPlan, handle: int,
+                spec: HashMapBufferSpec, state: HashMapBufferState):
+    """Owner-side half of the spill: ring-append the arrived flow."""
+    view = committed.view(handle)
+    qstate, _, full_drop = q._append(spec.queue_spec, state.queue,
+                                     view.payload, view.valid)
+    a = q._amo_count(spec.queue_spec, ConProm.CircularQueue.push)
+    costs.record("queue.push", costs.Cost(A=a, W=spec.buffer_cap))
+    state = state._replace(queue=qstate, buf_n=jnp.zeros((1,), _I32))
+    return state, view.dropped + backend.psum(full_drop)
+
+
 def spill(backend: Backend, spec: HashMapBufferSpec,
           state: HashMapBufferState, capacity: int):
-    """Push staged items to the owners' FastQueues (paper: buffer full)."""
-    live = jnp.arange(spec.buffer_cap, dtype=_I32) < state.buf_n[0]
-    qstate, _, dropped = q.push(backend, spec.queue_spec, state.queue,
-                                state.buf, state.buf_dest, capacity,
-                                valid=live, promise=ConProm.CircularQueue.push)
-    state = state._replace(queue=qstate, buf_n=jnp.zeros((1,), _I32))
-    return state, dropped
+    """Push staged items to the owners' FastQueues (paper: buffer full).
+
+    Eager wrapper: a fresh single-flow plan around
+    :func:`spill_flow`/:func:`spill_apply`.
+    """
+    plan = ExchangePlan(name="queue.push")
+    h = spill_flow(plan, spec, state, capacity)
+    committed = plan.commit(backend)
+    return spill_apply(backend, committed, h, spec, state)
 
 
 def flush(backend: Backend, spec: HashMapBufferSpec,

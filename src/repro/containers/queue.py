@@ -10,6 +10,12 @@ reservation is owner-side: routed items arrive in a deterministic order
 (source rank, then source position), and an exclusive prefix sum over
 the arrivals assigns disjoint slots — associative fetch-and-add.
 
+Remote ops lower through the ExchangePlan scheduler (DESIGN.md
+section 1.5): ``push``/``pop`` are eager single-flow plans, and
+``push_pop`` — the ``ConProm.CircularQueue.push_pop`` promise made
+operational — fuses both ops' flows into one collective round trip
+(``Promise.FINE`` recovers the sequential schedule).
+
 Cost model (paper Table 2):
   FastQueue      push = A + nW     pop = A + nR
   CircularQueue  push = 2A + nW    pop = 2A + nR   (extra AMO maintains
@@ -27,9 +33,10 @@ import jax.numpy as jnp
 
 from repro.core import costs
 from repro.core.backend import Backend
-from repro.core.exchange import route, reply
+from repro.core.exchange import ExchangePlan, reply, route
 from repro.core.object_container import Packer, packer_for
-from repro.core.promises import Promise, fully_atomic_queue
+from repro.core.promises import (Promise, fine_grained, fully_atomic_queue,
+                                 validate)
 
 _U32 = jnp.uint32
 _I32 = jnp.int32
@@ -85,6 +92,7 @@ def push(backend: Backend, spec: QueueSpec, state: QueueState,
       pushed_here  items this rank's ring accepted
       dropped      global count rejected (route overflow or ring full)
     """
+    validate(promise)
     lanes = spec.packer.pack(values)
     n = lanes.shape[0]
     if valid is None:
@@ -107,7 +115,6 @@ def push(backend: Backend, spec: QueueSpec, state: QueueState,
 def _append(spec: QueueSpec, state: QueueState, rows: jax.Array,
             valid: jax.Array):
     """Owner-side ring append in deterministic arrival order."""
-    m = rows.shape[0]
     pos = jnp.cumsum(valid.astype(_I32)) - valid.astype(_I32)  # exclusive
     total = valid.sum().astype(_I32)
     used = (state.tail - state.head)[0]
@@ -123,6 +130,37 @@ def _append(spec: QueueSpec, state: QueueState, rows: jax.Array,
     return new, n_acc, (total - n_acc)
 
 
+def _grant(spec: QueueSpec, state: QueueState, req_valid: jax.Array,
+           promise: Promise):
+    """Owner-side pop grant in deterministic arrival order (FAA analogue).
+
+    Returns ``(new_state, body)`` where ``body`` rows are
+    ``[value lanes | granted flag]`` aligned with the request arrivals.
+    """
+    arrival = jnp.cumsum(req_valid.astype(_I32)) - req_valid.astype(_I32)
+    limit = state.tail[0] - state.head[0]
+    if spec.circular and fully_atomic_queue(promise):
+        limit = state.tail_ready[0] - state.head[0]
+    grant = req_valid & (arrival < limit)
+    idx = jnp.where(grant, (state.head[0] + arrival) % spec.capacity, 0)
+    rows = jnp.where(grant[:, None], state.data[idx], 0)
+    n_grant = jnp.minimum(req_valid.sum().astype(_I32), limit)
+    head = state.head + n_grant
+    head_ready = head if spec.circular else state.head_ready
+    new = QueueState(state.data, head, state.tail, state.tail_ready,
+                     head_ready)
+    body = jnp.concatenate([rows, grant.astype(_U32)[:, None]], axis=1)
+    return new, body
+
+
+def _src_ranks(src: jax.Array | int, n: int) -> jax.Array:
+    if isinstance(src, int):
+        return jnp.full((n,), src, _I32)
+    if src.ndim == 0:
+        return jnp.broadcast_to(src, (n,)).astype(_I32)
+    return src.astype(_I32)
+
+
 def pop(backend: Backend, spec: QueueSpec, state: QueueState,
         n: int, src: jax.Array | int,
         promise: Promise = Promise.POP):
@@ -132,11 +170,8 @@ def pop(backend: Backend, spec: QueueSpec, state: QueueState,
     deterministic requester order (the FAA analogue).  Returns
     (state, values, got_mask).
     """
-    nprocs = backend.nprocs()
-    if isinstance(src, int):
-        src = jnp.full((n,), src, _I32)
-    elif src.ndim == 0:
-        src = jnp.broadcast_to(src, (n,)).astype(_I32)
+    validate(promise)
+    src = _src_ranks(src, n)
 
     if promise & Promise.LOCAL:
         return local_nonatomic_pop(spec, state, n)
@@ -144,27 +179,62 @@ def pop(backend: Backend, spec: QueueSpec, state: QueueState,
     # unit requests: one row per wanted item (per-(src,dst) capacity = n)
     req = route(backend, jnp.zeros((n, 1), _U32), src, capacity=n,
                 op_name="queue.pop")
-    # grant in arrival order
-    arrival = jnp.cumsum(req.valid.astype(_I32)) - req.valid.astype(_I32)
-    limit = state.tail[0] - state.head[0]
-    if spec.circular and fully_atomic_queue(promise):
-        limit = state.tail_ready[0] - state.head[0]
-    grant = req.valid & (arrival < limit)
-    idx = jnp.where(grant, (state.head[0] + arrival) % spec.capacity, 0)
-    rows = jnp.where(grant[:, None], state.data[idx], 0)
-    n_grant = jnp.minimum(req.valid.sum().astype(_I32), limit)
-    head = state.head + n_grant
-    head_ready = head if spec.circular else state.head_ready
-    new = QueueState(state.data, head, state.tail, state.tail_ready,
-                     head_ready)
-
-    body = jnp.concatenate([rows, grant.astype(_U32)[:, None]], axis=1)
+    new, body = _grant(spec, state, req.valid, promise)
     out, _ = reply(backend, req, body, n, op_name="queue.pop")
     got = out[:, -1] == 1
     values = spec.packer.unpack(out[:, :-1])
     a = _amo_count(spec, promise)
     costs.record("queue.pop", costs.Cost(A=a, R=n))
     return new, values, got
+
+
+def push_pop(backend: Backend, spec: QueueSpec, state: QueueState,
+             values, dest: jax.Array, capacity: int,
+             n: int, src: jax.Array | int,
+             valid: jax.Array | None = None,
+             promise: Promise = Promise.PUSH | Promise.POP):
+    """Fused push + pop sharing ONE exchange round trip.
+
+    Under ``ConProm.CircularQueue.push_pop`` the two ops are promised
+    concurrent, so the runtime may serialize them; this schedule applies
+    the push before granting the pop (items pushed this round are
+    poppable this round) and fuses both ops' flows into one
+    ExchangePlan: 2 collectives where the ``Promise.FINE`` sequential
+    schedule costs 3 (push has no reply).  Returns
+    ``(state, pushed, dropped, out_values, got)``.
+    """
+    validate(promise)
+    if fine_grained(promise):
+        state, pushed, dropped = push(backend, spec, state, values, dest,
+                                      capacity, valid=valid, promise=promise)
+        state, out, got = pop(backend, spec, state, n, src, promise=promise)
+        return state, pushed, dropped, out, got
+
+    lanes = spec.packer.pack(values)
+    nv = lanes.shape[0]
+    if valid is None:
+        valid = jnp.ones((nv,), bool)
+    src = _src_ranks(src, n)
+
+    plan = ExchangePlan(name="queue.push_pop")
+    hp = plan.add(lanes, dest, capacity, valid=valid, op_name="queue.push")
+    hq = plan.add(jnp.zeros((n, 1), _U32), src, n,
+                  reply_lanes=spec.lanes + 1, op_name="queue.pop")
+    c = plan.commit(backend)
+    vp, vq = c.view(hp), c.view(hq)
+
+    state, pushed, full_drop = _append(spec, state, vp.payload, vp.valid)
+    state, body = _grant(spec, state, vq.valid, promise)
+    c.set_reply(hq, body)
+    outs = c.finish(backend)
+    out, _ = outs[hq]
+    got = out[:, -1] == 1
+    out_values = spec.packer.unpack(out[:, :-1])
+    a = _amo_count(spec, promise)
+    costs.record("queue.push", costs.Cost(A=a, W=nv))
+    costs.record("queue.pop", costs.Cost(A=a, R=n))
+    dropped = vp.dropped + backend.psum(full_drop)
+    return state, pushed, dropped, out_values, got
 
 
 def local_nonatomic_pop(spec: QueueSpec, state: QueueState, n: int):

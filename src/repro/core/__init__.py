@@ -15,9 +15,9 @@ See DESIGN.md section 2 for the full adaptation table.
 """
 
 from repro.core.backend import Backend, SerialBackend, SpmdBackend, get_backend
-from repro.core.promises import ConProm
+from repro.core.promises import ConProm, Promise
 from repro.core.pointers import GlobalPointer
-from repro.core.exchange import route, RouteResult
+from repro.core.exchange import ExchangePlan, RouteResult, reply, route
 from repro.core import costs
 
 __all__ = [
@@ -26,8 +26,11 @@ __all__ = [
     "SpmdBackend",
     "get_backend",
     "ConProm",
+    "Promise",
     "GlobalPointer",
+    "ExchangePlan",
     "route",
+    "reply",
     "RouteResult",
     "costs",
 ]

@@ -20,30 +20,45 @@ On TPU the same pattern is one fused collective program:
                                              HashMapBuffer insight)
   5. unmask on the owner
 
-``route`` is that program.  Every container op with a remote component
-compiles down to one or two ``route`` calls, mirroring the paper's claim
-that each data-structure op is "a small number of one-sided operations".
+Scheduling is two-phase (DESIGN.md section 1.5): callers register typed
+*flows* on an :class:`ExchangePlan` (``plan.add(payload, dest, capacity,
+reply_lanes, op_name)``), and ``plan.commit(backend)`` concatenates all
+same-round flows lane-wise into ONE binning pass and ONE tiled
+all-to-all, demultiplexing per-flow owner views; replies from every flow
+share one inverse all-to-all (``plan.finish``).  This is the paper's
+concurrency-promise story made operational: a promise names which ops
+may run concurrently, and concurrent ops are exactly the ops whose
+flows may share a collective round.  ``Promise.FINE`` on the plan
+forces the sequential one-op-per-round schedule — the oracle every
+fused path is tested against.
+
+``route``/``reply`` remain as thin single-flow wrappers, so a container
+op that has nothing to fuse with still compiles to the same program it
+always did.
 
 Wire format (DESIGN.md section 1): payloads are u32 lane matrices (see
-object_container.py); ``route`` appends exactly ONE metadata lane —
-bit 31 is the valid flag and the low 31 bits are the item's position in
-the sender's batch — so an L-lane payload costs L+1 u32 lanes on the
-wire.  Replies cost L lanes and zero metadata: the owner's receive
-layout is the exact image of the requester's send layout under the
-all-to-all, so writing replies into the rows they arrived in and running
-one more all-to-all is an *inverse permutation* that lands every reply
-back in the requester's original send slot.  The requester resolves
-slots to batch positions from purely local state (``send_item``); no
-binning, no argsort, no scatter, and no src_pos lane in the reply
-direction.
+object_container.py).  A plan's request buffer has, per destination
+rank, one contiguous *segment per flow* of that flow's static capacity;
+rows are ``max(flow lanes) + 1`` u32 lanes wide, the last lane being the
+single shared metadata lane — bit 31 is the valid flag and the low 31
+bits are the item's position in its flow's batch.  Replies cost
+``max(reply lanes)`` lanes and zero metadata: the owner's receive
+layout is the exact image of the requesters' send layout under the
+all-to-all, so writing replies into segment-order rows and running one
+more all-to-all is an *inverse permutation* that lands every reply back
+in the requester's original send slot.  The requester resolves slots to
+batch positions from purely local state captured at commit time; no
+binning, no argsort, and no src_pos lane in the reply direction.
 
-Shapes and capacities are static; overflow beyond C is dropped and
-*counted* (the analogue of a failed/retried insertion), so callers can
-assert zero drops or size capacities adaptively.
+Shapes and capacities are static; overflow beyond a flow's capacity is
+dropped and *counted* per flow (the analogue of a failed/retried
+insertion), so callers can assert zero drops or size capacities
+adaptively.
 """
 
 from __future__ import annotations
 
+import dataclasses
 from typing import NamedTuple
 
 import jax
@@ -51,6 +66,7 @@ import jax.numpy as jnp
 
 from repro.core import costs
 from repro.core.backend import Backend
+from repro.core.promises import Promise, fine_grained, validate
 from repro.kernels import ops as kops
 
 _U32 = jnp.uint32
@@ -62,7 +78,7 @@ _POS_MASK = jnp.uint32((1 << 31) - 1)
 
 
 class RouteResult(NamedTuple):
-    """Owner-side view of a routed batch (+ requester-local slot map).
+    """Owner-side view of a routed flow (+ requester-local slot map).
 
     payload   (P*C, L) u32 — rows [s*C:(s+1)*C] arrived from rank s
     valid     (P*C,) bool  — which rows hold real items
@@ -71,8 +87,11 @@ class RouteResult(NamedTuple):
     dropped   () i32       — items dropped for capacity overflow (global)
     capacity  int          — static per-(src,dst) capacity C
     send_item (P*C,) i32   — requester-local: original batch index this
-                             rank placed in each of its own send slots
-                             (sentinel N when the slot was empty)
+                             rank placed in each of its own send slots,
+                             in flow-local coordinates (sentinel N when
+                             the slot was empty); identical whether the
+                             flow was routed eagerly or as a segment of
+                             a fused plan
     send_occ  (P*C,) bool  — requester-local send-slot occupancy; the
                              reply path's ``answered`` comes from here,
                              not from the wire
@@ -88,6 +107,300 @@ class RouteResult(NamedTuple):
     send_occ: jax.Array
 
 
+@dataclasses.dataclass
+class _Flow:
+    """One registered flow of an ExchangePlan (trace-time record)."""
+
+    payload: jax.Array        # (N, L) u32
+    dest: jax.Array           # (N,) i32
+    capacity: int             # per-(src,dst) slot count C_f
+    valid: jax.Array          # (N,) bool
+    op_name: str
+    reply_lanes: int          # 0 = fire-and-forget (no reply expected)
+
+    @property
+    def n(self) -> int:
+        return self.payload.shape[0]
+
+    @property
+    def lanes(self) -> int:
+        return self.payload.shape[1]
+
+
+class ExchangePlan:
+    """Two-phase scheduler fusing concurrent container ops' collectives.
+
+    Usage::
+
+        plan = ExchangePlan(name="hashmap.find_insert")
+        h_f = plan.add(find_body, owners_f, cap, reply_lanes=Lv + 1,
+                       op_name="hashmap.find")
+        h_i = plan.add(ins_body, owners_i, cap, reply_lanes=1,
+                       op_name="hashmap.insert")
+        c = plan.commit(backend)          # ONE all-to-all for all flows
+        ... owner-side work on c.view(h_f), c.view(h_i) ...
+        c.set_reply(h_f, find_replies)
+        c.set_reply(h_i, ok_bits)
+        outs = c.finish(backend)          # ONE inverse all-to-all
+        find_out, find_answered = outs[h_f]
+
+    Cost attribution (DESIGN.md section 1.5): each flow is charged the
+    bytes of its own wire segment (its capacity x the fused lane width)
+    under its ``op_name``; the single physical collective and its round
+    are charged once, under ``name`` (default: the first flow's op).
+
+    A plan constructed with ``promise=Promise.FINE`` lowers to the
+    sequential one-op-per-round schedule instead (one ``route`` and one
+    ``reply`` per flow) — the semantic oracle for the fused schedule.
+    """
+
+    def __init__(self, promise: Promise = Promise.NONE,
+                 name: str | None = None):
+        validate(promise)
+        self.promise = promise
+        self.name = name
+        self._flows: list[_Flow] = []
+        self._committed = False
+
+    def add(self, payload: jax.Array, dest: jax.Array, capacity: int,
+            reply_lanes: int = 0, valid: jax.Array | None = None,
+            op_name: str = "flow") -> int:
+        """Register a flow; returns its handle (index into the plan)."""
+        if self._committed:
+            raise ValueError(
+                "add() after commit(): the round's flows are already on "
+                "the wire; build a new ExchangePlan for the next round")
+        if payload.ndim == 1:
+            payload = payload[:, None]
+        payload = payload.astype(_U32)
+        n = payload.shape[0]
+        if valid is None:
+            valid = jnp.ones((n,), bool)
+        self._flows.append(_Flow(payload, dest.astype(_I32), int(capacity),
+                                 valid, op_name, int(reply_lanes)))
+        return len(self._flows) - 1
+
+    def commit(self, backend: Backend, impl: str = "auto") -> "CommittedPlan":
+        """Issue the request round: one fused all-to-all for all flows."""
+        if not self._flows:
+            raise ValueError("commit() on an empty ExchangePlan")
+        if self._committed:
+            # a silent second commit would launch a duplicate collective
+            # and double-record every cost pin
+            raise ValueError("ExchangePlan already committed")
+        self._committed = True
+        if fine_grained(self.promise):
+            views = [route(backend, f.payload, f.dest, f.capacity,
+                           valid=f.valid, op_name=f.op_name, impl=impl)
+                     for f in self._flows]
+            return CommittedPlan(self, views, sequential=True)
+        return self._commit_fused(backend, impl)
+
+    # -- fused lowering ---------------------------------------------------
+
+    def _commit_fused(self, backend: Backend, impl: str) -> "CommittedPlan":
+        flows = self._flows
+        nprocs = backend.nprocs()
+        nflows = len(flows)
+        caps = [f.capacity for f in flows]
+        seg = [0]
+        for c in caps:
+            seg.append(seg[-1] + c)
+        ctot = seg[-1]
+        wl = max(f.lanes for f in flows) + 1          # + shared meta lane
+
+        dest_all = jnp.concatenate([f.dest for f in flows])
+        valid_all = jnp.concatenate([f.valid for f in flows])
+        flow_id = jnp.concatenate([
+            jnp.full((f.n,), fi, _I32) for fi, f in enumerate(flows)])
+
+        # ONE binning pass for every flow: composite (dest, flow) buckets
+        counts, offsets = kops.multi_bin_offsets(
+            dest_all, flow_id, nprocs, nflows, valid_all, impl=impl)
+        caps_arr = jnp.asarray(caps, _I32)
+        seg_arr = jnp.asarray(seg[:-1], _I32)
+        in_cap = offsets < caps_arr[flow_id]
+        ok = valid_all & in_cap
+        slot = jnp.where(ok, dest_all * ctot + seg_arr[flow_id] + offsets,
+                         nprocs * ctot).astype(_I32)   # drop sentinel
+
+        # reply layout: only replying flows get a segment (compact wire)
+        replying = [fi for fi, f in enumerate(flows) if f.reply_lanes > 0]
+        seg_r = {}
+        ctot_r = 0
+        for fi in replying:
+            seg_r[fi] = ctot_r
+            ctot_r += caps[fi]
+
+        send = jnp.zeros((nprocs * ctot, wl), _U32)
+        send_items, send_occs = [], []
+        row0 = 0
+        for fi, f in enumerate(flows):
+            sl = slot[row0:row0 + f.n]
+            meta = jnp.where(f.valid,
+                             _VALID_BIT | jnp.arange(f.n, dtype=_U32), 0)
+            body = f.payload
+            if f.lanes < wl - 1:
+                body = jnp.concatenate(
+                    [body, jnp.zeros((f.n, wl - 1 - f.lanes), _U32)], axis=1)
+            body = jnp.concatenate([body, meta[:, None]], axis=1)
+            send = send.at[sl].set(body, mode="drop")
+
+            # requester-local inverse slot maps in FLOW-local coordinates
+            # (d*C_f + within-bucket rank): identical to the eager layout,
+            # so the reply path — fused segment slice or standalone
+            # ``reply()`` — resolves slots the same way either way
+            okf = ok[row0:row0 + f.n]
+            sl_f = jnp.where(okf,
+                             f.dest * f.capacity + offsets[row0:row0 + f.n],
+                             nprocs * f.capacity).astype(_I32)
+            send_items.append(jnp.full((nprocs * f.capacity,), f.n, _I32)
+                              .at[sl_f].set(jnp.arange(f.n, dtype=_I32),
+                                            mode="drop"))
+            send_occs.append(jnp.zeros((nprocs * f.capacity,), bool)
+                             .at[sl_f].set(jnp.ones((f.n,), bool),
+                                           mode="drop"))
+            row0 += f.n
+
+        recv = backend.all_to_all(send)
+
+        # one psum covers every flow's overflow accounting
+        over = jnp.maximum(counts - caps_arr[None, :], 0).sum(0)   # (F,)
+        dropped = backend.psum(over).astype(_I32)
+
+        r3 = recv.reshape(nprocs, ctot, wl)
+        views = []
+        for fi, f in enumerate(flows):
+            segment = r3[:, seg[fi]:seg[fi] + f.capacity, :]
+            pay = segment[..., :f.lanes].reshape(nprocs * f.capacity, f.lanes)
+            meta_r = segment[..., wl - 1].reshape(-1)
+            out_valid = (meta_r & _VALID_BIT) != 0
+            out_src_pos = (meta_r & _POS_MASK).astype(_I32)
+            src_rank = jnp.repeat(jnp.arange(nprocs, dtype=_I32), f.capacity)
+            views.append(RouteResult(pay, out_valid, src_rank, out_src_pos,
+                                     dropped[fi], f.capacity,
+                                     send_items[fi], send_occs[fi]))
+
+        # cost attribution: per-flow wire-segment share; the physical
+        # collective and its round once, under the plan's op name
+        plan_op = self.name or flows[0].op_name
+        for f in flows:
+            fb = nprocs * f.capacity * wl * 4
+            costs.record(f.op_name, costs.Cost(
+                bytes_moved=fb, bytes_out=fb))
+        costs.record(plan_op, costs.Cost(collectives=1, rounds=1))
+
+        return CommittedPlan(self, views, sequential=False, ctot_r=ctot_r,
+                             seg_r=seg_r)
+
+
+class CommittedPlan:
+    """Request round issued; owner-side views available, replies pending."""
+
+    def __init__(self, plan: ExchangePlan, views: list[RouteResult],
+                 sequential: bool, ctot_r: int = 0,
+                 seg_r: dict | None = None):
+        self._plan = plan
+        self._views = views
+        self._sequential = sequential
+        self._ctot_r = ctot_r
+        self._seg_r = seg_r or {}
+        self._replies: dict[int, jax.Array] = {}
+        self._finished = False
+
+    def view(self, handle: int) -> RouteResult:
+        """Owner-side view of one flow (same layout as eager ``route``)."""
+        return self._views[handle]
+
+    def set_reply(self, handle: int, rows: jax.Array) -> None:
+        """Stage per-request replies for one flow.
+
+        ``rows`` is (P*C_f, reply_lanes) aligned with ``view(handle)``
+        rows; lane count must match the flow's declared ``reply_lanes``.
+        """
+        f = self._plan._flows[handle]
+        if rows.ndim == 1:
+            rows = rows[:, None]
+        if f.reply_lanes == 0:
+            raise ValueError(
+                f"flow {handle} ({f.op_name}) declared reply_lanes=0")
+        if rows.shape[1] != f.reply_lanes:
+            raise ValueError(
+                f"flow {handle} ({f.op_name}) declared reply_lanes="
+                f"{f.reply_lanes}, got {rows.shape[1]}")
+        self._replies[handle] = rows.astype(_U32)
+
+    def finish(self, backend: Backend) -> dict[int, tuple[jax.Array, jax.Array]]:
+        """Issue the reply round: one fused inverse all-to-all.
+
+        Returns ``{handle: (replies (N_f, reply_lanes), answered (N_f,))}``
+        for every flow with ``reply_lanes > 0``; replies land aligned
+        with each flow's *original* request batch.
+        """
+        if self._finished:
+            # callers must cache the returned dict; a second finish would
+            # launch a duplicate collective and double-record costs
+            raise ValueError("CommittedPlan already finished")
+        flows = self._plan._flows
+        replying = [fi for fi, f in enumerate(flows) if f.reply_lanes > 0]
+        for fi in replying:
+            if fi not in self._replies:
+                raise ValueError(
+                    f"finish() before set_reply() for flow {fi} "
+                    f"({flows[fi].op_name})")
+        self._finished = True
+        if not replying:
+            return {}
+
+        if self._sequential:
+            outs = {}
+            for fi in replying:
+                f = flows[fi]
+                outs[fi] = reply(backend, self._views[fi], self._replies[fi],
+                                 f.n, op_name=f.op_name)
+            return outs
+
+        nprocs = backend.nprocs()
+        ctot_r = self._ctot_r
+        wr = max(flows[fi].reply_lanes for fi in replying)
+        send = jnp.zeros((nprocs * ctot_r, wr), _U32)
+        for fi in replying:
+            f = flows[fi]
+            view = self._views[fi]
+            rows = jnp.where(view.valid[:, None], self._replies[fi], 0)
+            # owner arrival row s*C_f + j  ->  reply row s*ctot_r + seg + j
+            ar = jnp.arange(nprocs * f.capacity, dtype=_I32)
+            idx = (ar // f.capacity) * ctot_r + self._seg_r[fi] \
+                + (ar % f.capacity)
+            send = send.at[idx, :f.reply_lanes].set(rows)
+
+        back = backend.all_to_all(send)
+
+        # the inverse all-to-all lands flow f's replies in its own
+        # segment of each source block; slicing the segment recovers the
+        # flow-local slot layout, so the view's send maps resolve it
+        back3 = back.reshape(nprocs, ctot_r, wr)
+        outs = {}
+        for fi in replying:
+            f = flows[fi]
+            view = self._views[fi]
+            seg = back3[:, self._seg_r[fi]:self._seg_r[fi] + f.capacity, :]
+            seg = seg.reshape(nprocs * f.capacity, wr)
+            item = jnp.where(view.send_occ, view.send_item, f.n)
+            out = jnp.zeros((f.n, wr), _U32).at[item].set(seg, mode="drop")
+            answered = jnp.zeros((f.n,), bool).at[item].set(
+                view.send_occ, mode="drop")
+            outs[fi] = (out[:, :f.reply_lanes], answered)
+
+        plan_op = self._plan.name or flows[0].op_name
+        for fi in replying:
+            fb = nprocs * flows[fi].capacity * wr * 4
+            costs.record(flows[fi].op_name, costs.Cost(
+                bytes_moved=fb, bytes_in=fb))
+        costs.record(plan_op, costs.Cost(collectives=1, rounds=1))
+        return outs
+
+
 def route(backend: Backend,
           payload: jax.Array,
           dest: jax.Array,
@@ -97,62 +410,20 @@ def route(backend: Backend,
           impl: str = "auto") -> RouteResult:
     """Send each row of ``payload`` to rank ``dest[i]``; return owner view.
 
+    Thin eager wrapper: a single-flow :class:`ExchangePlan`, committed
+    immediately.  Wire format, costs, and owner-view layout are exactly
+    the fused engine's single-flow case.
+
     payload: (N, L) u32 (or (N,) — treated as one lane)
     dest:    (N,) i32 destination ranks in [0, nprocs)
     capacity: static per-(src,dst) slot count C
     valid:   (N,) bool mask (default all valid)
-    impl:    kernel dispatch for send-buffer construction (kops.bin_offsets)
+    impl:    kernel dispatch for send-buffer construction
+             (kops.multi_bin_offsets)
     """
-    if payload.ndim == 1:
-        payload = payload[:, None]
-    payload = payload.astype(_U32)
-    n, lanes = payload.shape
-    nprocs = backend.nprocs()
-    cap = int(capacity)
-
-    if valid is None:
-        valid = jnp.ones((n,), bool)
-    dest = dest.astype(_I32)
-
-    # send-buffer construction: no argsort — each item computes its slot
-    # directly from (histogram -> per-tile prefix -> within-tile rank)
-    counts, offsets = kops.bin_offsets(dest, nprocs, valid, impl=impl)
-    in_cap = offsets < cap
-    slot = jnp.where(valid & in_cap, dest * cap + offsets,
-                     nprocs * cap).astype(_I32)   # drop sentinel
-
-    # lanes layout: [payload | meta] with meta = VALID_BIT | src_pos
-    meta = jnp.where(valid, _VALID_BIT | jnp.arange(n, dtype=_U32), 0)
-    body = jnp.concatenate([payload, meta[:, None]], axis=1)
-    send = jnp.zeros((nprocs * cap, lanes + 1), _U32)
-    send = send.at[slot].set(body, mode="drop")
-
-    recv = backend.all_to_all(send)
-
-    out_payload = recv[:, :lanes]
-    meta_r = recv[:, lanes]
-    out_valid = (meta_r & _VALID_BIT) != 0
-    out_src_pos = (meta_r & _POS_MASK).astype(_I32)
-    src_rank = jnp.repeat(jnp.arange(nprocs, dtype=_I32), cap)
-
-    # requester-local inverse slot map: which item sits in each send slot
-    send_item = jnp.full((nprocs * cap,), n, _I32).at[slot].set(
-        jnp.arange(n, dtype=_I32), mode="drop")
-    send_occ = jnp.zeros((nprocs * cap,), bool).at[slot].set(
-        jnp.ones((n,), bool), mode="drop")
-
-    over = jnp.maximum(counts - cap, 0).sum()
-    dropped = backend.psum(over).astype(_I32)
-
-    # route records only the TPU observables; the paper-units cost (R/W/A)
-    # is accounted by the calling container op.
-    wire_bytes = nprocs * cap * (lanes + 1) * 4
-    costs.record(op_name, costs.Cost(
-        collectives=1, rounds=1, bytes_moved=wire_bytes,
-        bytes_out=wire_bytes))
-
-    return RouteResult(out_payload, out_valid, src_rank, out_src_pos,
-                       dropped, cap, send_item, send_occ)
+    plan = ExchangePlan(name=op_name)
+    h = plan.add(payload, dest, capacity, valid=valid, op_name=op_name)
+    return plan._commit_fused(backend, impl).view(h)
 
 
 def reply(backend: Backend,
@@ -160,7 +431,7 @@ def reply(backend: Backend,
           reply_payload: jax.Array,
           orig_n: int,
           op_name: str = "reply") -> tuple[jax.Array, jax.Array]:
-    """Route per-request replies back to the requesters.
+    """Route per-request replies back to the requesters (single flow).
 
     ``reply_payload`` is (P*C, L) aligned with ``req.payload`` rows.
     Returns ``(replies, answered)`` where ``replies`` is (orig_n, L)
@@ -173,6 +444,11 @@ def reply(backend: Backend,
     no binning, no metadata lanes, and no second slot reservation.  The
     requester resolves slots to batch positions with its local
     ``send_item`` map and knows ``answered`` from its own ``send_occ``.
+    Flows of a multi-flow plan should reply through
+    ``CommittedPlan.finish`` instead, which fuses every flow's replies
+    into ONE such inverse permutation (calling ``reply`` on a fused view
+    is semantically correct — the slot maps are flow-local — but launches
+    an unfused collective per flow).
     """
     if reply_payload.ndim == 1:
         reply_payload = reply_payload[:, None]

@@ -13,6 +13,16 @@ runtime cost.
 
 Promise algebra: promises are bitflags and combine with ``|`` exactly as in
 the paper (``ConProm.HashMap.find | ConProm.HashMap.insert``).
+
+Promise -> schedule (DESIGN.md section 1.5): promises tell the runtime
+which ops may share a collective round.  The ExchangePlan scheduler
+(``core/exchange.py``) fuses the flows of concurrent ops into one
+request all-to-all and one reply all-to-all; ``Promise.FINE`` opts a
+callsite out of fusion, forcing the sequential one-op-per-round
+schedule — the oracle every fused path is tested against.  ``FINE``
+composes with any remote promise (``find_insert | FINE`` is the
+sequential find-then-insert) but contradicts ``LOCAL`` (a local op has
+no collective rounds to schedule): :func:`validate` raises on it.
 """
 
 from __future__ import annotations
@@ -64,6 +74,27 @@ class ConProm:
     POP = Promise.POP
     LOCAL = Promise.LOCAL
     FINE = Promise.FINE
+
+
+def validate(promise: Promise) -> Promise:
+    """Reject contradictory promise combinations at trace time.
+
+    ``FINE`` requests a per-op collective schedule; ``LOCAL`` promises
+    the op never leaves this rank, so there is no schedule to pick —
+    the combination is nonsense, not merely redundant, and silently
+    honoring either half would mask a caller bug.
+    """
+    if (promise & Promise.FINE) and (promise & Promise.LOCAL):
+        raise ValueError(
+            f"contradictory promise {promise!r}: FINE selects a "
+            "sequential collective schedule but LOCAL promises the op "
+            "issues no collectives at all")
+    return promise
+
+
+def fine_grained(promise: Promise) -> bool:
+    """True when the callsite opted out of cross-op fusion (Promise.FINE)."""
+    return bool(promise & Promise.FINE)
 
 
 def fully_atomic_hashmap(promise: Promise) -> bool:

@@ -60,26 +60,60 @@ class Deduper:
                 "lo": jnp.asarray((h & np.uint64(0xFFFFFFFF))
                                   .astype(np.uint32))}
 
-    def observe(self, tokens: np.ndarray):
-        """Ingest a batch of documents.
-
-        Returns (dup_frac (B,), is_duplicate (B,)) and updates the
-        filter + count table (repeated shingles only — the Bloom
-        pre-pass keeps singletons out, the paper's memory win).
-        """
-        b, t = tokens.shape
+    def _flat_shingles(self, tokens: np.ndarray):
         sh = self.shingles(tokens)
-        n_sh = sh["hi"].shape[1]
         flat = {k: v.reshape(-1) for k, v in sh.items()}
-        m = b * n_sh
+        return flat, tokens.shape[0], sh["hi"].shape[1]
 
-        self.bstate, seen = bl.insert(self.backend, self.bspec, self.bstate,
-                                      flat, capacity=m)
+    def _count_seen(self, flat: dict, m: int, seen, b: int, n_sh: int):
+        """Shared ingest tail: count repeated shingles, rate the docs.
+
+        Repeated shingles only — the Bloom pre-pass keeps singletons out
+        of the count table, the paper's memory win.  Both the eager
+        ``observe`` and the fused ``observe_and_probe`` paths must stay
+        on this one implementation so their semantics cannot diverge.
+        """
         self.hstate, _ = hm.insert(self.backend, self.hspec, self.hstate,
                                    flat, jnp.ones((m,), _U32), capacity=m,
                                    valid=seen, mode=MODE_ADD, attempts=3)
         dup_frac = np.asarray(seen).reshape(b, n_sh).mean(axis=1)
         return dup_frac, dup_frac > self.spec.dup_threshold
+
+    def observe(self, tokens: np.ndarray):
+        """Ingest a batch of documents.
+
+        Returns (dup_frac (B,), is_duplicate (B,)) and updates the
+        filter + count table.
+        """
+        flat, b, n_sh = self._flat_shingles(tokens)
+        m = b * n_sh
+        self.bstate, seen = bl.insert(self.backend, self.bspec, self.bstate,
+                                      flat, capacity=m)
+        return self._count_seen(flat, m, seen, b, n_sh)
+
+    def observe_and_probe(self, tokens: np.ndarray, probe_tokens: np.ndarray):
+        """Ingest ``tokens`` while probing ``probe_tokens`` membership.
+
+        The bloom insert (ingest) and bloom find (probe) are fused into
+        one ExchangePlan — one collective round trip for both ops — the
+        contamination-check pattern: observe a training batch and test
+        an eval batch against the filter in the same round.  The probe
+        observes the filter *after* this batch's insertions (identical
+        to the ``Promise.FINE`` sequential schedule).
+
+        Returns ``(dup_frac (B,), is_duplicate (B,), probe_seen_frac
+        (Bp,))``.
+        """
+        flat, b, n_sh = self._flat_shingles(tokens)
+        flatp, bp, _ = self._flat_shingles(probe_tokens)
+        m, mp = b * n_sh, flatp["hi"].shape[0]
+
+        self.bstate, seen, probed = bl.insert_find(
+            self.backend, self.bspec, self.bstate, flat, flatp,
+            capacity_ins=m, capacity_find=mp)
+        dup_frac, is_dup = self._count_seen(flat, m, seen, b, n_sh)
+        probe_frac = np.asarray(probed).reshape(bp, -1).mean(axis=1)
+        return dup_frac, is_dup, probe_frac
 
     def count_of(self, tokens: np.ndarray):
         """Occurrence counts (beyond first sighting) of a doc's shingles."""

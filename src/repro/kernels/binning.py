@@ -77,7 +77,11 @@ def bin_offsets(bins: jax.Array, nbins: int, valid: jax.Array | None = None,
     Returns ``(counts (nbins,), offsets (N,))`` — per-destination valid
     counts and each item's stable position within its destination bucket.
     Replaces the argsort+gather hot path: the caller scatters payload
-    rows straight to ``dest * capacity + offsets``.
+    rows straight to ``dest * capacity + offsets``.  The ExchangePlan
+    scheduler's segmented multi-flow slot assignment
+    (``kernels/ops.py::multi_bin_offsets``) feeds this same kernel
+    composite ``dest * nflows + flow`` bins, so one launch bins every
+    flow of a fused round.
     """
     m = bins.shape[0]
     if valid is None:

@@ -206,16 +206,11 @@ def _find_kernel(tk_ref, tv_ref, st_ref, qk_ref, qval_ref,
     match = (qk[:, :, None, :] == tk[:, None, :, :]).all(axis=3)
     match = match & ready[:, None, :]     # (TB, Q, B)
     found = match.any(axis=2) & vld
-    # one-hot contraction (MXU): first matching slot's value
+    # first matching slot, recovered via an integer gather (u32 values
+    # would not survive an f32 MXU contraction above 2^24)
     first = match & (jnp.cumsum(match.astype(_I32), axis=2) == 1)
-    vals = jnp.einsum("tqb,tbl->tql", first.astype(jnp.float32),
-                      tv.astype(jnp.float32),
-                      preferred_element_type=jnp.float32)
-    # u32 values survive f32 matmul only below 2^24; recover exactly via
-    # a second integer pass on the selected slot index instead.
     slot = jnp.argmax(first, axis=2)      # (TB, Q)
     vals_exact = jnp.take_along_axis(tv, slot[:, :, None], axis=1)
-    del vals
     found_ref[...] = found.astype(_U32)
     val_ref[...] = jnp.where(found[:, :, None], vals_exact, 0)
 

@@ -271,6 +271,28 @@ def bin_offsets(bins, nbins: int, valid=None, impl: str = "auto"):
     return counts_full[:nbins], offsets
 
 
+def multi_bin_offsets(bins, flow, nbins: int, nflows: int, valid=None,
+                      impl: str = "auto"):
+    """Segmented multi-flow slot assignment (the ExchangePlan hot path).
+
+    One binning pass over the concatenation of all flows of a plan:
+    items are ranked within their composite ``(dest, flow)`` bucket
+    (destination-major) so the fused send buffer can place flow ``f``'s
+    items for destination ``d`` at
+    ``d * sum(caps) + flow_offset[f] + offsets``.  Returns
+    ``(counts (nbins, nflows), offsets (N,))``; per-flow capacity
+    masking is the caller's (drops are ``offsets >= cap[flow]``).
+
+    Lowers to ONE :func:`bin_offsets` pass over the composite key
+    ``dest * nflows + flow`` (destination-major), so every impl —
+    oracle, jnp, and the Pallas kernel — serves multi-flow plans
+    through its existing single-key path.
+    """
+    comp = bins.astype(_I32) * nflows + flow.astype(_I32)
+    counts, offs = bin_offsets(comp, nbins * nflows, valid, impl=impl)
+    return counts.reshape(nbins, nflows), offs
+
+
 # --------------------------------------------------------------------------
 # flash attention
 # --------------------------------------------------------------------------

@@ -22,7 +22,6 @@ from repro.configs import get_config, reduced
 from repro.launch.mesh import make_test_mesh
 from repro.launch.steps import make_prefill_step, make_serve_step
 from repro.models import lm
-from repro.models.sharding import Axes
 
 
 def main(argv=None):
@@ -41,7 +40,6 @@ def main(argv=None):
         cfg = reduced(cfg)
 
     mesh = make_test_mesh(data=1, model=1)
-    axes = Axes.from_mesh(mesh)
     rng = np.random.default_rng(args.seed)
     params = lm.init_params(cfg, jax.random.PRNGKey(args.seed))
 

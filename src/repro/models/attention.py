@@ -351,7 +351,6 @@ def mla_absorbed_decode_cp(params, cfg, q_nope, q_rope, new_c, new_kr,
                        w_uk.astype(_F32))                    # (B,H,r)
     qr = q_rope[:, :, 0].astype(_F32)                        # (B,H,rope)
     scale = (nope + m.qk_rope_head_dim) ** -0.5
-    nm = mesh.shape[axes.model]
     from jax.sharding import PartitionSpec as P
 
     def f(ql, qro, nc, nk, ckv, kr):

@@ -303,7 +303,9 @@ def _apply_block(bp, x, cfg, kind: str, *, positions, mesh, axes,
             new_cache["xk"], new_cache["xv"] = cache["xk"], cache["xv"]
         h = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
         if "moe" in bp:
-            y, aux = moe_mod.moe_apply(bp["moe"], h, cfg, mesh, axes)
+            # expert_load stats ride the dispatch collectives for free;
+            # the bias-update consumer hooks in at the optimizer level
+            y, aux, _stats = moe_mod.moe_apply(bp["moe"], h, cfg, mesh, axes)
         else:
             y = L.mlp(bp["mlp"], h, cfg.activation)
         x = x + y

@@ -4,12 +4,17 @@ This is the paper's technique as a first-class framework feature
 (DESIGN.md section 3): expert dispatch IS the many-to-many
 redistribution pattern of BCL queues / ISx.  The layer:
 
-  1. routes tokens to expert owners over the model axis with
-     ``repro.core.exchange.route`` — bucket-by-owner, prefix-sum slot
-     reservation, one tiled all-to-all (the FastQueue.push_many program);
+  1. registers token routing AND a per-expert stats flow on one
+     ``repro.core.exchange.ExchangePlan`` — bucket-by-owner, prefix-sum
+     slot reservation, one tiled all-to-all for both flows (the
+     FastQueue.push_many program).  The stats flow asks each expert's
+     owner for its post-capacity served-token count, so every rank
+     learns the true global expert load (the DeepSeek aux-loss-free
+     bias-update signal) with ZERO extra collectives;
   2. bins arrivals per local expert (the same binning the hash kernel
      uses) and runs a batched expert FFN;
-  3. routes results back with ``reply`` and combines with router weights.
+  3. the combine and the stats replies share one inverse all-to-all
+     (``plan.finish``) and results merge with router weights.
 
 Parallelism: experts sharded over 'model' (EP); per-expert weights
 FSDP-sharded over the data axes and all-gathered just-in-time (EP x
@@ -29,7 +34,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.backend import SpmdBackend
-from repro.core.exchange import route, reply
+from repro.core.exchange import ExchangePlan
 from repro.models.sharding import Axes
 from repro.compat import shard_map
 
@@ -108,6 +113,31 @@ def _bin_indices(expert, valid, n_groups: int, cap: int, m: int):
     return binned_idx, slot, ok
 
 
+def _stats_flow(plan: ExchangePlan, e: int, e_loc: int) -> int:
+    """Register the per-expert stats flow: one row per global expert,
+    asking that expert's owner for its served-token count.  Capacity is
+    exact (every rank sends exactly ``e_loc`` rows per owner), so the
+    flow can never drop.
+
+    Wire trade: the fused plan pads every flow to the widest flow's
+    lane count (DESIGN.md section 1.5), so this 1-lane flow ships
+    token-width rows — an overhead of e_loc/token_capacity relative to
+    the token segment (small: e_loc rows vs hundreds of token rows per
+    owner).  A ragged per-flow lane layout would eliminate it if stats
+    flows ever grow."""
+    eid = jnp.arange(e, dtype=_I32)
+    return plan.add((eid % e_loc).astype(_U32)[:, None], eid // e_loc,
+                    e_loc, reply_lanes=1, op_name="moe.stats")
+
+
+def _stats_reply(committed, handle: int, served: jax.Array):
+    """Owner side: answer each stats request with its expert's count."""
+    sv = committed.view(handle)
+    lid = jnp.where(sv.valid, sv.payload[:, 0].astype(_I32), 0)
+    committed.set_reply(handle, jnp.where(sv.valid, served[lid], 0)
+                        .astype(_U32))
+
+
 def _make_expert_ffn(cfg):
     def _expert_ffn(binned, wg, wi, wo_):
         if cfg.activation in ("swiglu", "geglu"):
@@ -123,7 +153,15 @@ def _make_expert_ffn(cfg):
 
 
 def moe_apply(params, x, cfg, mesh: Mesh, axes: Axes):
-    """x (B, T, D) sharded over data -> same. Adds aux loss as 2nd output."""
+    """x (B, T, D) sharded over data -> same.
+
+    Returns ``(y, aux, stats)``: the aux load-balance loss plus a stats
+    dict with ``expert_load`` — the true global post-capacity
+    served-token count per expert (E,), delivered by the stats flow that
+    rides the dispatch plan's collectives.  This is the observability
+    signal DeepSeek-style bias routing (``moe_bias``) updates from; it
+    costs zero extra collectives.
+    """
     mo = cfg.moe
     b, t, d = x.shape
     e = mo.n_experts
@@ -185,8 +223,13 @@ def moe_apply(params, x, cfg, mesh: Mesh, axes: Axes):
             [_pack_act(jnp.repeat(xx, k, axis=0), bf16),
              ids.reshape(n, k).astype(_U32),
              jax.lax.bitcast_convert_type(wts.reshape(n, k), _U32)], axis=1)
-        res = route(bk, payload, owners.reshape(-1), capacity=cap,
-                    valid=first.reshape(-1), op_name="moe.dispatch")
+        plan = ExchangePlan(name="moe.dispatch")
+        h_tok = plan.add(payload, owners.reshape(-1), cap,
+                         reply_lanes=act_lanes, valid=first.reshape(-1),
+                         op_name="moe.dispatch")
+        h_st = _stats_flow(plan, e, e_loc)
+        c = plan.commit(bk)
+        res = c.view(h_tok)
 
         m = res.payload.shape[0]
         rows = _unpack_act(res.payload[:, :act_lanes], bf16)   # (M, D)
@@ -212,10 +255,16 @@ def moe_apply(params, x, cfg, mesh: Mesh, axes: Axes):
             jnp.where(okb, flat_row, m)].add(
             flat_y[take] * flat_w[:, None] * okb[:, None], mode="drop")
 
-        out_lanes, _ = reply(bk, res, _pack_act(out_rows, bf16),
-                             orig_n=n, op_name="moe.combine")
+        served = jnp.zeros((e_loc,), _I32).at[
+            jnp.where(okb, flat_ids, e_loc)].add(1, mode="drop")
+        _stats_reply(c, h_st, served)
+        c.set_reply(h_tok, _pack_act(out_rows, bf16))
+        outs = c.finish(bk)
+        out_lanes, _ = outs[h_tok]
+        load = outs[h_st][0][:, 0].astype(_F32)[None]          # (1, e)
         yk = _unpack_act(out_lanes, bf16).reshape(n_tok, k, d)
-        return yk.sum(axis=1).reshape(bl, tl, d)   # weights applied at owner
+        # weights applied at owner
+        return yk.sum(axis=1).reshape(bl, tl, d), load
 
     def dispatch(xl, idxl, wl, wg, wi, wo_):
         # xl (b_loc, t_loc, D); idxl/wl (b_loc, t_loc, K) — PER-DEVICE
@@ -225,7 +274,6 @@ def moe_apply(params, x, cfg, mesh: Mesh, axes: Axes):
             return dispatch_dedup(xl, idxl, wl, wg, wi, wo_)
         bk = SpmdBackend(axes.model)
         bl, tl = xl.shape[0], xl.shape[1]
-        n = bl * tl * k
         cap = max(1, int(bl * tl * k / nm * cfg.moe_capacity_slack) + 1)
         e_cap = max(1, int(bl * tl * k * nm / e * cfg.moe_capacity_slack) + 1)
         xx = jnp.repeat(xl.reshape(bl * tl, d), k, axis=0)     # (n, D)
@@ -236,7 +284,12 @@ def moe_apply(params, x, cfg, mesh: Mesh, axes: Axes):
         payload = jnp.concatenate(
             [_pack_act(xx, bf16),
              (ee % e_loc).astype(_U32)[:, None]], axis=1)
-        res = route(bk, payload, dest, capacity=cap, op_name="moe.dispatch")
+        plan = ExchangePlan(name="moe.dispatch")
+        h_tok = plan.add(payload, dest, cap, reply_lanes=act_lanes,
+                         op_name="moe.dispatch")
+        h_st = _stats_flow(plan, e, e_loc)
+        c = plan.commit(bk)
+        res = c.view(h_tok)
 
         rows = _unpack_act(res.payload[:, :act_lanes], bf16)
         le = jnp.where(res.valid, res.payload[:, act_lanes].astype(_I32),
@@ -252,11 +305,16 @@ def moe_apply(params, x, cfg, mesh: Mesh, axes: Axes):
         take = jnp.minimum(slot, e_loc * e_cap - 1)
         back_rows = jnp.where((slot < e_loc * e_cap)[:, None],
                               flat[take], 0).astype(_F32)
-        out_lanes, _ = reply(bk, res, _pack_act(back_rows, bf16),
-                             orig_n=n, op_name="moe.combine")
+        served = jnp.zeros((e_loc,), _I32).at[
+            jnp.where(okb, le, e_loc)].add(1, mode="drop")
+        _stats_reply(c, h_st, served)
+        c.set_reply(h_tok, _pack_act(back_rows, bf16))
+        outs = c.finish(bk)
+        out_lanes, _ = outs[h_tok]
+        load = outs[h_st][0][:, 0].astype(_F32)[None]           # (1, e)
         yk = _unpack_act(out_lanes, bf16)                       # (n, D)
         yk = yk.reshape(bl, tl, k, d)
-        return jnp.einsum("btkd,btk->btd", yk, wl.astype(_F32))
+        return jnp.einsum("btkd,btk->btd", yk, wl.astype(_F32)), load
 
     din = axes.data
     if seq_split:
@@ -266,16 +324,17 @@ def moe_apply(params, x, cfg, mesh: Mesh, axes: Axes):
         in_x = P(din, None, None)
         in_i = P(din, None, None)
     espec = lambda *rest: P(axes.model, *rest)
-    y = shard_map(
+    y, load = shard_map(
         dispatch, mesh=mesh,
         in_specs=(in_x, in_i, in_i,
                   espec(None, None), espec(None, None), espec(None, None)),
-        out_specs=in_x,
+        out_specs=(in_x, P(din, None)),
         check_vma=False,   # replication over 'model' holds by construction
     )(x, top_idx.astype(_I32), top_w,
       params["experts"]["w_gate"], params["experts"]["w_in"],
       params["experts"]["w_out"])
     y = y.astype(x.dtype)
+    expert_load = load.sum(axis=0)        # (E,) summed over data shards
 
     # ---- always-on paths ----
     from repro.models.layers import mlp
@@ -283,4 +342,4 @@ def moe_apply(params, x, cfg, mesh: Mesh, axes: Axes):
         y = y + mlp(params["shared"], x, cfg.activation)
     if "dense" in params:
         y = y + mlp(params["dense"], x, cfg.activation)
-    return y, aux
+    return y, aux, {"expert_load": expert_load}

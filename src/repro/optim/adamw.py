@@ -121,7 +121,6 @@ def opt_shardings(param_shardings, opt_state_shape, mesh):
                 out[k] = psh
         return out
 
-    flat_st = jax.tree_util.tree_structure(param_shardings)
     per = jax.tree_util.tree_map(
         per_param, param_shardings, opt_state_shape["per_param"],
         is_leaf=lambda x: isinstance(x, NamedSharding))

@@ -20,7 +20,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.compat import make_mesh, shard_map
 
-from repro.core import ConProm, get_backend, route
+from repro.core import ConProm, Promise, get_backend, route
 from repro.containers import bloom as bl
 from repro.containers import hashmap as hm
 from repro.containers import queue as q
@@ -89,6 +89,50 @@ def main():
         .tolist() == [r] * got2[r].sum() for r in range(8))
     check("queue.destinations", ok_dest)
 
+    # ---- fused plans == Promise.FINE oracle on 8 ranks, random data ----
+    def fused_or_fine(fine):
+        extra = Promise.FINE if fine else Promise.NONE
+
+        def body(keys, vals, fk, ik, iv, qv, qd):
+            bk = get_backend("bcl")
+            spec, st = hm.hashmap_create(bk, 8192, SDS((), jnp.uint32),
+                                         SDS((), jnp.uint32), block_size=16)
+            st, _ = hm.insert(bk, spec, st, keys, vals, capacity=NLOC)
+            st, v, f, ok = hm.find_insert(
+                bk, spec, st, fk, ik, iv, capacity=NLOC,
+                promise=ConProm.HashMap.find_insert | extra)
+            qspec, qst = q.queue_create(bk, 512, SDS((), jnp.uint32),
+                                        circular=True)
+            # every rank pops its right neighbor's ring
+            nbr = (jax.lax.axis_index("bcl") + 1) % PROCS
+            qst, pushed, dropped, out, got = q.push_pop(
+                bk, qspec, qst, qv, qd, 32, 24, nbr,
+                promise=ConProm.CircularQueue.push_pop | extra)
+            return (v, f, ok, out, got, pushed[None], dropped[None],
+                    st.status)
+
+        return jax.jit(shard_map(body, mesh=mesh, in_specs=(P("bcl"),) * 7,
+                                 out_specs=(P("bcl"),) * 8))
+
+    rngf = np.random.default_rng(42)
+    base = jnp.asarray(rngf.permutation(1 << 20)[:PROCS * NLOC], jnp.uint32)
+    fi_args = (base, base * 5 + 2,
+               jnp.asarray(np.where(rngf.random(PROCS * NLOC) < 0.5,
+                                    np.asarray(base),
+                                    np.asarray(base) + (1 << 21)),
+                           jnp.uint32),
+               jnp.asarray(rngf.permutation(1 << 20)[:PROCS * NLOC]
+                           + (1 << 21), jnp.uint32),
+               jnp.asarray(rngf.integers(0, 1 << 30, PROCS * NLOC),
+                           jnp.uint32),
+               jnp.asarray(rngf.integers(0, 1 << 30, PROCS * 64), jnp.uint32),
+               jnp.asarray(rngf.integers(0, PROCS, PROCS * 64), jnp.int32))
+    got_fused = fused_or_fine(False)(*fi_args)
+    got_fine = fused_or_fine(True)(*fi_args)
+    check("plan.fused_equals_fine_8rank",
+          all(np.array_equal(np.asarray(a), np.asarray(b))
+              for a, b in zip(got_fused, got_fine)))
+
     # ---- bloom: distributed atomicity of duplicate insertion ----
     def bloomdup(items):
         bk = get_backend("bcl")
@@ -151,21 +195,31 @@ def main():
         params = moe_mod.moe_init(rng, cfg, jnp.float32)
         x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 32))
         axes8 = Axes.from_mesh(mesh2)
-        y_spmd, _ = moe_mod.moe_apply(params, x, cfg, mesh2, axes8)
+        y_spmd, _, st_spmd = moe_mod.moe_apply(params, x, cfg, mesh2, axes8)
 
         mesh1 = make_mesh((1, 1), ("data", "model"))
         axes1 = Axes.from_mesh(mesh1)
-        y_ser, _ = moe_mod.moe_apply(params, x, cfg, mesh1, axes1)
+        y_ser, _, st_ser = moe_mod.moe_apply(params, x, cfg, mesh1, axes1)
         cfg_dd = dataclasses.replace(cfg, moe_dedup_dispatch=True)
-        y_dd, _ = moe_mod.moe_apply(params, x, cfg_dd, mesh2, axes8)
+        y_dd, _, st_dd = moe_mod.moe_apply(params, x, cfg_dd, mesh2, axes8)
+        n_assign = x.shape[0] * x.shape[1] * cfg.moe.top_k
+        # the fused stats flow reports true global served counts: with
+        # ample capacity every assignment is served, on every schedule
+        loads_ok = all(
+            float(st["expert_load"].sum()) == n_assign
+            for st in (st_spmd, st_ser, st_dd))
+        loads_eq = np.array_equal(np.asarray(st_spmd["expert_load"]),
+                                  np.asarray(st_ser["expert_load"]))
         return (np.allclose(np.asarray(y_spmd), np.asarray(y_ser),
                             atol=1e-4),
                 np.allclose(np.asarray(y_dd), np.asarray(y_ser),
-                            atol=1e-4))
+                            atol=1e-4),
+                loads_ok and loads_eq)
 
-    eq_std, eq_dd = moe_equiv()
+    eq_std, eq_dd, eq_load = moe_equiv()
     check("moe.spmd_equals_serial", eq_std)
     check("moe.dedup_dispatch_parity", eq_dd)
+    check("moe.stats_flow_load", eq_load)
 
     # ---- GPipe pipeline: 4 stages over a 'stage' axis == sequential ----
     from repro.parallel import gpipe

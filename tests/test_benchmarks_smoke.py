@@ -29,6 +29,17 @@ def test_micro_queue_smoke():
         assert results[k] > 0, k
 
 
+def test_micro_fused_arms_smoke():
+    """The --fused arms run and report both schedules of each pair."""
+    from benchmarks import micro_hashmap, micro_queue
+    r = micro_hashmap.run(smoke=True, fused=True)
+    assert r["hashmap_find_insert_fused"] > 0
+    assert r["hashmap_find_insert_fine"] > 0
+    r = micro_queue.run(smoke=True, fused=True)
+    assert r["cq_push_pop_fused"] > 0
+    assert r["cq_push_pop_fine"] > 0
+
+
 def test_smoke_costs_pin_round_reduction():
     """The benchmark-side cost observables see the fused exchange."""
     from benchmarks.util import trace_costs

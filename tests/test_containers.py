@@ -6,6 +6,7 @@ import pytest
 from jax import ShapeDtypeStruct as SDS
 
 from repro.core import ConProm, costs, get_backend
+from repro.kernels import ops as kops
 from repro.containers import bloom as bl
 from repro.containers import darray as da
 from repro.containers import hashmap as hm
@@ -277,3 +278,109 @@ class TestHashMapBuffer:
                       jnp.arange(8, dtype=jnp.uint32))
         c = log.by_op("hashmap_buffer.insert")
         assert c.collectives == 0 and c.local == 8
+
+    def test_multiple_spill_flush_cycles(self, bk, rng):
+        """Fill -> flush, repeatedly: every cycle's keys stay findable
+        and every cycle reports zero drops (today's single-flush test
+        generalized to the paper's steady-state usage)."""
+        mspec, mstate = hm.hashmap_create(bk, 4096, SDS((), jnp.uint32),
+                                          SDS((), jnp.uint32), block_size=16)
+        bspec, bstate = hb.create(bk, mspec, mstate, queue_capacity=512,
+                                  buffer_cap=128)
+        all_keys = jnp.asarray(rng.permutation(1 << 16)[:384], jnp.uint32)
+        for cyc in range(3):
+            keys = all_keys[cyc * 128:(cyc + 1) * 128]
+            bstate, ovf = hb.insert(bspec, bstate, keys, keys * 3 + cyc)
+            assert int(ovf) == 0
+            bstate, dropped = hb.flush(bk, bspec, bstate, capacity=128)
+            assert int(dropped) == 0, f"cycle {cyc}"
+            # buffer and ring are empty again after each flush
+            assert int(bstate.buf_n[0]) == 0
+            assert int(q.size(bstate.queue)) == 0
+        _, v, found = hm.find(bk, mspec, bstate.map, all_keys, capacity=384,
+                              promise=ConProm.HashMap.find, attempts=3)
+        assert bool(found.all())
+        expect = np.concatenate([np.asarray(all_keys[c * 128:(c + 1) * 128])
+                                 * 3 + c for c in range(3)])
+        assert np.array_equal(np.asarray(v), expect)
+
+    def test_ring_full_drops_accounted_across_cycles(self, bk):
+        """Spill into a too-small FastQueue: the overflowed items are
+        counted, the survivors are still inserted, and the NEXT cycle is
+        unaffected (ring drained by the flush)."""
+        mspec, mstate = hm.hashmap_create(bk, 1024, SDS((), jnp.uint32),
+                                          SDS((), jnp.uint32), block_size=16)
+        bspec, bstate = hb.create(bk, mspec, mstate, queue_capacity=16,
+                                  buffer_cap=64)
+        keys = jnp.arange(40, dtype=jnp.uint32) + 1
+        bstate, ovf = hb.insert(bspec, bstate, keys, keys)
+        assert int(ovf) == 0
+        bstate, dropped = hb.flush(bk, bspec, bstate, capacity=64)
+        assert int(dropped) == 24            # ring admits 16 of 40
+        _, _, found = hm.find(bk, mspec, bstate.map, keys, capacity=64,
+                              promise=ConProm.HashMap.find)
+        assert int(found.sum()) == 16
+        # second cycle on the drained ring: no residue, full success
+        keys2 = jnp.arange(10, dtype=jnp.uint32) + 100
+        bstate, _ = hb.insert(bspec, bstate, keys2, keys2)
+        bstate, dropped2 = hb.flush(bk, bspec, bstate, capacity=64)
+        assert int(dropped2) == 0
+        _, _, found2 = hm.find(bk, mspec, bstate.map, keys2, capacity=64,
+                               promise=ConProm.HashMap.find)
+        assert bool(found2.all())
+
+    def test_table_full_drops_accounted(self, bk):
+        """Flush into a table with no room: failed local inserts are
+        counted in the drop total, not silently lost."""
+        mspec, mstate = hm.hashmap_create(bk, 16, SDS((), jnp.uint32),
+                                          SDS((), jnp.uint32), block_size=16)
+        bspec, bstate = hb.create(bk, mspec, mstate, queue_capacity=64,
+                                  buffer_cap=64)
+        keys = jnp.arange(40, dtype=jnp.uint32) + 1
+        bstate, _ = hb.insert(bspec, bstate, keys, keys)
+        bstate, dropped = hb.flush(bk, bspec, bstate, capacity=64)
+        assert int(dropped) == 40 - 16       # 16-slot table, 40 arrivals
+        assert int(hm.count_ready(bk, bstate.map)) == 16
+
+    def test_spill_rides_shared_plan(self, bk, rng):
+        """spill_flow/spill_apply fuse the spill with a concurrent
+        hashmap find: 2 collectives for both ops, same results as the
+        eager spill."""
+        from repro.core import ExchangePlan, costs as _costs
+        mspec, mstate = hm.hashmap_create(bk, 2048, SDS((), jnp.uint32),
+                                          SDS((), jnp.uint32), block_size=16)
+        probe_keys = jnp.asarray(rng.permutation(4096)[:64], jnp.uint32)
+        mstate, _ = hm.insert(bk, mspec, mstate, probe_keys, probe_keys * 5,
+                              capacity=64)
+        bspec, bstate = hb.create(bk, mspec, mstate, queue_capacity=256,
+                                  buffer_cap=64)
+        keys = jnp.asarray(rng.permutation(4096)[64:128], jnp.uint32)
+        bstate, _ = hb.insert(bspec, bstate, keys, keys)
+
+        with _costs.recording() as log:
+            plan = ExchangePlan(name="spill_find")
+            h_spill = hb.spill_flow(plan, bspec, bstate, capacity=64)
+            lb = hm._block_of(mspec, probe_keys[:, None], 0)
+            h_find = plan.add(jnp.concatenate(
+                [(lb % mspec.nblocks_local).astype(jnp.uint32)[:, None],
+                 probe_keys[:, None]], axis=1),
+                lb // mspec.nblocks_local, 64, reply_lanes=2,
+                op_name="hashmap.find")
+            c = plan.commit(bk)
+            bstate, dropped = hb.spill_apply(bk, c, h_spill, bspec, bstate)
+            vf = c.view(h_find)
+            rb = jnp.where(vf.valid, vf.payload[:, 0].astype(jnp.int32), 0)
+            fnd, vls = kops.bulk_find(bstate.map.tkeys, bstate.map.tvals,
+                                      bstate.map.status, rb,
+                                      vf.payload[:, 1:], vf.valid)
+            c.set_reply(h_find, jnp.concatenate(
+                [vls, fnd.astype(jnp.uint32)[:, None]], axis=1))
+            outs = c.finish(bk)
+        back, _ = outs[h_find]
+        assert log.total().collectives == 2      # spill + find, one plan
+        assert int(dropped) == 0
+        assert bool((back[:, -1] == 1).all())
+        assert np.array_equal(np.asarray(back[:, 0]),
+                              np.asarray(probe_keys) * 5)
+        # the spilled items are in the ring, ready for the owner's flush
+        assert int(q.size(bstate.queue)) == 64

@@ -2,7 +2,7 @@
 
 import numpy as np
 
-from repro.core import get_backend
+from repro.core import costs, get_backend
 from repro.data.dedup import Deduper, DedupSpec
 
 
@@ -34,6 +34,28 @@ def test_partial_overlap_measured(rng):
     half[0, 32:] = rng.integers(2000, 3000, 32)
     frac, dup = d.observe(half)
     assert 0.25 < frac[0] < 0.75
+
+
+def test_observe_and_probe_fused_pair(rng):
+    """The contamination-check path: bloom insert + find share one plan
+    (2 collectives), and the probe sees this batch's insertions."""
+    d = Deduper(get_backend(None), DedupSpec(ngram=4))
+    train = rng.integers(0, 1000, (2, 64)).astype(np.int32)
+    with costs.recording() as log:
+        frac, dup, probe_frac = d.observe_and_probe(train, train.copy())
+    # the fused bloom pair is exactly one round trip
+    assert log.by_op("bloom.insert_find").collectives == 2
+    assert not dup.any()                    # first sighting: fresh
+    assert (probe_frac > 0.95).all()        # probe sees the fresh inserts
+
+    # fresh probe docs stay unseen; previously observed docs stay seen
+    nxt = rng.integers(2000, 3000, (2, 64)).astype(np.int32)
+    fresh = rng.integers(5000, 9000, (2, 64)).astype(np.int32)
+    _, _, pf = d.observe_and_probe(nxt, fresh)
+    assert (pf < 0.1).all()
+    _, _, pf2 = d.observe_and_probe(
+        rng.integers(3000, 4000, (2, 64)).astype(np.int32), train)
+    assert (pf2 > 0.95).all()
 
 
 def test_counts_accumulate(rng):

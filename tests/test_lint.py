@@ -1,0 +1,100 @@
+"""Tier-1 lint hook: dead locals stay dead.
+
+Porting the containers onto the ExchangePlan scheduler flagged unused
+locals that had survived review (``nprocs`` in ``queue.pop``, ``m`` in
+``queue._append``).  This hook keeps the class of bug out:
+
+  * when ``ruff`` is on PATH, run the configured ruleset
+    (``[tool.ruff]`` in pyproject.toml — pyflakes + core pycodestyle);
+  * always run a dependency-free AST fallback for the highest-signal
+    rule, F841 (local assigned but never read), so the check holds even
+    in environments without ruff.
+
+The fallback is deliberately conservative: only simple ``name = expr``
+/ annotated assignments in function scopes, names not starting with an
+underscore, never flagged when the name is read anywhere in the
+function (including nested closures).
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+import shutil
+import subprocess
+import sys
+
+import pytest
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+_SCAN = ["src", "benchmarks", "tests"]
+
+
+def _py_files():
+    for top in _SCAN:
+        yield from sorted((_ROOT / top).rglob("*.py"))
+
+
+def test_ruff_clean():
+    """The configured ruff ruleset passes repo-wide (skip if no ruff)."""
+    if shutil.which("ruff") is None:
+        pytest.skip("ruff not installed in this environment")
+    proc = subprocess.run(
+        ["ruff", "check", *_SCAN], cwd=_ROOT,
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def _scope_nodes(fn: ast.AST):
+    """Yield nodes of ``fn``'s own scope (nested def/class bodies cut)."""
+    stack = list(ast.iter_child_nodes(fn))
+    while stack:
+        node = stack.pop()
+        yield node
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef, ast.Lambda)):
+            stack.extend(ast.iter_child_nodes(node))
+
+
+def _unused_locals(tree: ast.AST, path: pathlib.Path):
+    findings = []
+    funcs = [n for n in ast.walk(tree)
+             if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+    for fn in funcs:
+        declared = set()
+        for node in _scope_nodes(fn):
+            if isinstance(node, (ast.Global, ast.Nonlocal)):
+                declared.update(node.names)
+        # every name read anywhere in the function, closures included
+        loaded = {n.id for n in ast.walk(fn)
+                  if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)}
+        assigns = {}
+        for node in _scope_nodes(fn):
+            target = None
+            if isinstance(node, ast.Assign) and len(node.targets) == 1:
+                target = node.targets[0]
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                target = node.target
+            if isinstance(target, ast.Name):
+                assigns.setdefault(target.id, node.lineno)
+        for name, lineno in sorted(assigns.items(), key=lambda kv: kv[1]):
+            if name.startswith("_") or name in loaded or name in declared:
+                continue
+            findings.append(f"{path.relative_to(_ROOT)}:{lineno}: "
+                            f"local '{name}' assigned in {fn.name}() "
+                            "but never read (F841)")
+    return findings
+
+
+def test_no_unused_locals():
+    """F841 fallback: no function-scope local is assigned and never read."""
+    findings = []
+    for path in _py_files():
+        tree = ast.parse(path.read_text(), filename=str(path))
+        findings.extend(_unused_locals(tree, path))
+    assert not findings, "\n".join(findings)
+
+
+if __name__ == "__main__":
+    test_no_unused_locals()
+    print("lint fallback clean", file=sys.stderr)

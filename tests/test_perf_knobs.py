@@ -141,8 +141,10 @@ def test_moe_dedup_dispatch_exact(mesh):
     p = moe_mod.moe_init(rng, cfg, jnp.float32)
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
     axes = Axes.from_mesh(mesh)
-    y1, _ = moe_mod.moe_apply(p, x, cfg, mesh, axes)
-    y2, _ = moe_mod.moe_apply(p, x, cfgd, mesh, axes)
+    y1, _, s1 = moe_mod.moe_apply(p, x, cfg, mesh, axes)
+    y2, _, s2 = moe_mod.moe_apply(p, x, cfgd, mesh, axes)
+    np.testing.assert_array_equal(np.asarray(s1["expert_load"]),
+                                  np.asarray(s2["expert_load"]))
     np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
                                atol=1e-5, rtol=1e-5)
 

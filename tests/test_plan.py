@@ -1,0 +1,213 @@
+"""ExchangePlan scheduler semantics (serial backend; SPMD in spmd_check).
+
+The plan/commit scheduler's contract: N flows committed together behave
+exactly like N eager ``route``/``reply`` round trips — same owner views,
+same replies, same per-flow drop accounting — while sharing ONE request
+collective and ONE reply collective.  ``Promise.FINE`` lowers the same
+plan to the eager schedule, which is the oracle these tests compare
+against.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ExchangePlan, Promise, costs, get_backend, route
+from repro.core.exchange import reply
+from repro.core.promises import validate
+
+
+def _mk_flows(rng, n0=24, n1=15):
+    pay0 = jnp.asarray(rng.integers(0, 1 << 30, (n0, 2)), jnp.uint32)
+    pay1 = jnp.asarray(rng.integers(0, 1 << 30, (n1, 1)), jnp.uint32)
+    d0 = jnp.zeros(n0, jnp.int32)
+    d1 = jnp.zeros(n1, jnp.int32)
+    v0 = jnp.asarray(rng.random(n0) < 0.8)
+    v1 = jnp.asarray(rng.random(n1) < 0.8)
+    return (pay0, d0, v0), (pay1, d1, v1)
+
+
+def test_multi_flow_views_match_eager_routes():
+    bk = get_backend(None)
+    rng = np.random.default_rng(5)
+    (p0, d0, v0), (p1, d1, v1) = _mk_flows(rng)
+    plan = ExchangePlan(name="test")
+    h0 = plan.add(p0, d0, 24, valid=v0, op_name="a")
+    h1 = plan.add(p1, d1, 15, valid=v1, op_name="b")
+    c = plan.commit(bk)
+    e0 = route(bk, p0, d0, 24, valid=v0)
+    e1 = route(bk, p1, d1, 15, valid=v1)
+    for view, eager in ((c.view(h0), e0), (c.view(h1), e1)):
+        assert np.array_equal(np.asarray(view.payload),
+                              np.asarray(eager.payload))
+        assert np.array_equal(np.asarray(view.valid), np.asarray(eager.valid))
+        assert np.array_equal(np.asarray(view.src_pos),
+                              np.asarray(eager.src_pos))
+        assert int(view.dropped) == int(eager.dropped)
+
+
+def test_fused_replies_match_eager_replies():
+    bk = get_backend(None)
+    rng = np.random.default_rng(6)
+    (p0, d0, v0), (p1, d1, v1) = _mk_flows(rng)
+    plan = ExchangePlan(name="test")
+    h0 = plan.add(p0, d0, 24, reply_lanes=2, valid=v0, op_name="a")
+    h1 = plan.add(p1, d1, 15, reply_lanes=1, valid=v1, op_name="b")
+    c = plan.commit(bk)
+    r0 = c.view(h0).payload * 3 + 1
+    r1 = c.view(h1).payload * 5 + 2
+    c.set_reply(h0, r0)
+    c.set_reply(h1, r1)
+    outs = c.finish(bk)
+
+    e0 = route(bk, p0, d0, 24, valid=v0)
+    e1 = route(bk, p1, d1, 15, valid=v1)
+    x0 = reply(bk, e0, e0.payload * 3 + 1, orig_n=p0.shape[0])
+    x1 = reply(bk, e1, e1.payload * 5 + 2, orig_n=p1.shape[0])
+    for (out, ans), (xout, xans) in ((outs[h0], x0), (outs[h1], x1)):
+        assert np.array_equal(np.asarray(ans), np.asarray(xans))
+        assert np.array_equal(np.asarray(out), np.asarray(xout))
+
+
+def test_per_flow_drop_accounting():
+    """Each flow drops against its OWN capacity, not a shared budget."""
+    bk = get_backend(None)
+    plan = ExchangePlan(name="test")
+    h0 = plan.add(jnp.arange(10, dtype=jnp.uint32), jnp.zeros(10, jnp.int32),
+                  4, op_name="a")
+    h1 = plan.add(jnp.arange(6, dtype=jnp.uint32), jnp.zeros(6, jnp.int32),
+                  6, op_name="b")
+    c = plan.commit(bk)
+    assert int(c.view(h0).dropped) == 6
+    assert int(c.view(h1).dropped) == 0
+    assert int(c.view(h0).valid.sum()) == 4
+    assert int(c.view(h1).valid.sum()) == 6
+
+
+def test_fused_costs_one_collective_per_direction():
+    """2 flows, both replying: 2 collectives total, bytes split by
+    wire-segment share under each flow's op name."""
+    bk = get_backend(None)
+    n0, n1, c0, c1 = 8, 8, 8, 8
+    plan = ExchangePlan(name="planop")
+    h0 = plan.add(jnp.zeros((n0, 3), jnp.uint32), jnp.zeros(n0, jnp.int32),
+                  c0, reply_lanes=2, op_name="a")
+    h1 = plan.add(jnp.zeros((n1, 1), jnp.uint32), jnp.zeros(n1, jnp.int32),
+                  c1, reply_lanes=1, op_name="b")
+    with costs.recording() as log:
+        c = plan.commit(bk)
+        c.set_reply(h0, jnp.zeros((c0, 2), jnp.uint32))
+        c.set_reply(h1, jnp.zeros((c1, 1), jnp.uint32))
+        c.finish(bk)
+    tot = log.total()
+    assert tot.collectives == 2 and tot.rounds == 2
+    # request lane width = max(3, 1) + 1 meta; reply width = max(2, 1)
+    wl, wr = 4, 2
+    assert log.by_op("a").bytes_out == c0 * wl * 4
+    assert log.by_op("b").bytes_out == c1 * wl * 4
+    assert log.by_op("a").bytes_in == c0 * wr * 4
+    assert log.by_op("b").bytes_in == c1 * wr * 4
+    # physical collective + round attributed to the plan's op name
+    assert log.by_op("planop").collectives == 2
+    assert log.by_op("planop").rounds == 2
+    assert tot.bytes_moved == (c0 + c1) * (wl + wr) * 4
+
+
+def test_fine_promise_lowers_to_sequential_schedule():
+    bk = get_backend(None)
+    rng = np.random.default_rng(7)
+    (p0, d0, v0), (p1, d1, v1) = _mk_flows(rng)
+
+    def run(promise):
+        plan = ExchangePlan(promise=promise, name="test")
+        h0 = plan.add(p0, d0, 24, reply_lanes=2, valid=v0, op_name="a")
+        h1 = plan.add(p1, d1, 15, reply_lanes=1, valid=v1, op_name="b")
+        with costs.recording() as log:
+            c = plan.commit(bk)
+            c.set_reply(h0, c.view(h0).payload * 3)
+            c.set_reply(h1, c.view(h1).payload + 9)
+            outs = c.finish(bk)
+        return log, outs[h0], outs[h1]
+
+    lf, f0, f1 = run(Promise.NONE)
+    ls, s0, s1 = run(Promise.FINE)
+    assert lf.total().collectives == 2          # fused: 1 out + 1 back
+    assert ls.total().collectives == 4          # FINE: per-flow rounds
+    for (a, b) in ((f0, s0), (f1, s1)):
+        assert np.array_equal(np.asarray(a[0]), np.asarray(b[0]))
+        assert np.array_equal(np.asarray(a[1]), np.asarray(b[1]))
+
+
+def test_fine_local_combination_rejected():
+    with pytest.raises(ValueError):
+        ExchangePlan(promise=Promise.FINE | Promise.LOCAL)
+    with pytest.raises(ValueError):
+        validate(Promise.FIND | Promise.FINE | Promise.LOCAL)
+
+
+def test_empty_plan_rejected():
+    with pytest.raises(ValueError):
+        ExchangePlan().commit(get_backend(None))
+
+
+def test_reply_lane_mismatch_rejected():
+    bk = get_backend(None)
+    plan = ExchangePlan()
+    h = plan.add(jnp.zeros((4, 1), jnp.uint32), jnp.zeros(4, jnp.int32), 4,
+                 reply_lanes=2, op_name="a")
+    c = plan.commit(bk)
+    with pytest.raises(ValueError):
+        c.set_reply(h, jnp.zeros((4, 3), jnp.uint32))
+    with pytest.raises(ValueError):
+        c.finish(bk)        # declared reply never staged
+
+
+def test_double_commit_and_double_finish_rejected():
+    """Re-committing or re-finishing would silently launch duplicate
+    collectives and double-record the cost pins — both raise instead."""
+    bk = get_backend(None)
+    plan = ExchangePlan()
+    h = plan.add(jnp.zeros((4, 1), jnp.uint32), jnp.zeros(4, jnp.int32), 4,
+                 reply_lanes=1, op_name="a")
+    c = plan.commit(bk)
+    with pytest.raises(ValueError):
+        plan.commit(bk)
+    c.set_reply(h, jnp.zeros((4, 1), jnp.uint32))
+    c.finish(bk)
+    with pytest.raises(ValueError):
+        c.finish(bk)
+
+
+def test_undeclared_reply_rejected():
+    bk = get_backend(None)
+    plan = ExchangePlan()
+    h = plan.add(jnp.zeros((4, 1), jnp.uint32), jnp.zeros(4, jnp.int32), 4,
+                 op_name="a")
+    c = plan.commit(bk)
+    with pytest.raises(ValueError):
+        c.set_reply(h, jnp.zeros((4, 1), jnp.uint32))
+
+
+def test_three_flow_mixed_reply_plan():
+    """Flows without replies coexist; reply wire stays compact."""
+    bk = get_backend(None)
+    rng = np.random.default_rng(8)
+    n = 12
+    pays = [jnp.asarray(rng.integers(0, 1 << 20, (n, w)), jnp.uint32)
+            for w in (1, 2, 1)]
+    plan = ExchangePlan(name="test")
+    hs = [plan.add(p, jnp.zeros(n, jnp.int32), n,
+                   reply_lanes=(0 if i == 1 else 1), op_name=f"f{i}")
+          for i, p in enumerate(pays)]
+    c = plan.commit(bk)
+    with costs.recording() as log:
+        c.set_reply(hs[0], c.view(hs[0]).payload[:, 0] + 1)
+        c.set_reply(hs[2], c.view(hs[2]).payload[:, 0] + 2)
+        outs = c.finish(bk)
+    assert hs[1] not in outs
+    # reply wire: only the two replying flows' segments, 1 lane each
+    assert log.total().bytes_in == 2 * n * 1 * 4
+    out0, ans0 = outs[hs[0]]
+    assert bool(ans0.all())
+    assert np.array_equal(np.asarray(out0[:, 0]),
+                          np.asarray(pays[0][:, 0]) + 1)

@@ -9,7 +9,7 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 from jax import ShapeDtypeStruct as SDS
 
-from repro.core import get_backend, route
+from repro.core import Promise, get_backend, route
 from repro.containers import bloom as bl
 from repro.containers import hashmap as hm
 from repro.containers import queue as q
@@ -107,6 +107,69 @@ def test_route_multiset_preserved(dests, ncopies):
     res = route(bk, pay, jnp.zeros(n, jnp.int32), capacity=n)
     got = sorted(np.asarray(res.payload[res.valid][:, 0]).tolist())
     assert got == sorted(np.asarray(pay).tolist())
+
+
+def _tree_equal(a, b):
+    if isinstance(a, (tuple, list)):
+        return len(a) == len(b) and all(_tree_equal(x, y)
+                                        for x, y in zip(a, b))
+    return np.array_equal(np.asarray(a), np.asarray(b))
+
+
+@given(st.data())
+@settings(max_examples=10, deadline=None)
+def test_fused_plan_interleavings_match_fine_schedule(data):
+    """Any interleaving of fused-plan ops is bit-identical to the
+    Promise.FINE sequential schedule — outputs AND container state —
+    over random keys, values, and capacities (including the overflow
+    regime: the same per-flow binning drops the same items on both
+    schedules).  The 8-rank version of this check, with random dests,
+    runs in tests/spmd_check.py."""
+    ops_seq = []
+    for _ in range(data.draw(st.integers(1, 4), label="n_ops")):
+        kind = data.draw(st.sampled_from(
+            ["find_insert", "push_pop", "bloom_insert_find"]), label="kind")
+        n = data.draw(st.integers(1, 24), label="n")
+        cap = data.draw(st.integers(max(1, n // 2), n + 8), label="cap")
+        a = data.draw(st.lists(st.integers(0, 300), min_size=n, max_size=n),
+                      label="a")
+        b = data.draw(st.lists(st.integers(0, 300), min_size=n, max_size=n),
+                      label="b")
+        ops_seq.append((kind, cap, a, b))
+
+    def run(fine):
+        bk = get_backend(None)
+        extra = Promise.FINE if fine else Promise.NONE
+        spec, hst = hm.hashmap_create(bk, 512, SDS((), jnp.uint32),
+                                      SDS((), jnp.uint32), block_size=8)
+        qspec, qst = q.queue_create(bk, 64, SDS((), jnp.uint32),
+                                    circular=True)
+        bspec, bst = bl.bloom_create(bk, 1 << 10, SDS((), jnp.uint32), k=4)
+        outs = []
+        for kind, cap, a, b in ops_seq:
+            av = jnp.asarray(a, jnp.uint32)
+            bv = jnp.asarray(b, jnp.uint32)
+            if kind == "find_insert":
+                hst, v, f, ok = hm.find_insert(
+                    bk, spec, hst, av, bv, bv * 7 + 1, capacity=cap,
+                    promise=Promise.FIND | Promise.INSERT | extra)
+                outs.append((v, f, ok))
+            elif kind == "push_pop":
+                qst, pushed, dropped, out, got = q.push_pop(
+                    bk, qspec, qst, av, jnp.zeros(len(a), jnp.int32),
+                    cap, len(b), 0,
+                    promise=Promise.PUSH | Promise.POP | extra)
+                outs.append((pushed, dropped, out, got))
+            else:
+                bst, already, present = bl.insert_find(
+                    bk, bspec, bst, av, bv, cap, cap, promise=extra)
+                outs.append((already, present))
+        return outs, (tuple(hst), tuple(qst), tuple(bst))
+
+    fused_out, fused_state = run(False)
+    fine_out, fine_state = run(True)
+    assert _tree_equal(fused_out, fine_out)
+    assert _tree_equal(fused_state, fine_state)
 
 
 @given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=2,

@@ -80,7 +80,7 @@ def test_int8_compress_accuracy(rng):
 class TestTokenStream:
     def test_deterministic_restart(self):
         a = TokenStream(vocab=100, seq_len=32, global_batch=4, seed=7)
-        b1 = a.next_batch()
+        a.next_batch()          # advance past step 0
         b2 = a.next_batch()
         b = TokenStream(vocab=100, seq_len=32, global_batch=4, seed=7)
         b.load_state_dict({"step": 1, "seed": 7})

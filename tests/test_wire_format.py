@@ -1,14 +1,18 @@
 """Wire-format and collective-round assertions for the fused exchange.
 
-Pins the tentpole optimization quantitatively via ``costs.recording()``:
+Pins the tentpole optimizations quantitatively via ``costs.recording()``:
 
   * route ships exactly ONE metadata lane (L+1 u32 lanes per item);
   * reply ships ZERO metadata lanes (L u32 lanes per item) — the
     inverse-permutation all-to-all needs no src_pos on the wire;
-  * a 2-attempt hashmap find costs 2 collectives (speculative dual
-    attempt), down from 4 for the sequential attempt loop;
+  * a 2-attempt hashmap find costs 2 collectives (two speculative
+    flows on one ExchangePlan), down from 4 for the sequential loop,
+    at the SAME wire bytes as the pre-plan hand-fused dual batch;
+  * a fused find+insert under ``ConProm.HashMap.find_insert`` costs 2
+    collectives per round trip where ``Promise.FINE`` costs 4;
+  * a fused push+pop costs 2 collectives where ``Promise.FINE`` costs 3;
 
-and pins the semantics of both fusions against the serial oracle.
+and pins the semantics of every fusion against the serial oracle.
 """
 
 import jax.numpy as jnp
@@ -16,9 +20,10 @@ import numpy as np
 import pytest
 from jax import ShapeDtypeStruct as SDS
 
-from repro.core import ConProm, costs, get_backend, route
+from repro.core import ConProm, Promise, costs, get_backend, route
 from repro.core.exchange import reply
 from repro.containers import hashmap as hm
+from repro.containers import queue as q
 from repro.kernels import ops as kops
 from repro.kernels import ref
 
@@ -136,6 +141,92 @@ def test_speculative_find_atomic_promise():
     assert np.array_equal(np.asarray(st1.status), np.asarray(st2.status))
 
 
+def test_speculative_find_two_flow_lane_counts():
+    """The two-flow plan ships EXACTLY the bytes of the old hand-fused
+    dual batch: request 2C rows x (1 + Lk + meta) lanes, reply 2C rows x
+    (Lv + found) lanes — the plan refactor changes the scheduler, not
+    the wire."""
+    bk, spec, st, keys, _, _ = _loaded_map()
+    n = keys.shape[0]
+    lk = spec.key_packer.lanes        # 1
+    lv = spec.val_packer.lanes        # 1
+    with costs.recording() as log:
+        hm.find(bk, spec, st, keys, capacity=n, attempts=2)
+    c = log.by_op("hashmap.find")
+    assert c.bytes_out == 2 * n * (1 + lk + 1) * 4    # two C-row segments
+    assert c.bytes_in == 2 * n * (lv + 1) * 4
+    assert c.collectives == 2 and c.rounds == 2
+
+
+# ---------------------------------------------------------------------------
+# collective rounds: fused find+insert (the plan/commit acceptance pin)
+# ---------------------------------------------------------------------------
+
+def test_find_insert_fused_two_collectives_fine_four():
+    """ConProm.HashMap.find_insert fuses both ops into 2 collectives per
+    round trip; the Promise.FINE sequential schedule costs exactly 4."""
+    bk, spec, st, keys, _, _ = _loaded_map()
+    n = keys.shape[0]
+    ins = keys + jnp.uint32(1 << 22)
+    with costs.recording() as log_f:
+        hm.find_insert(bk, spec, st, keys, ins, ins * 9, capacity=n,
+                       promise=ConProm.HashMap.find_insert)
+    with costs.recording() as log_s:
+        hm.find_insert(bk, spec, st, keys, ins, ins * 9, capacity=n,
+                       promise=ConProm.HashMap.find_insert | Promise.FINE)
+    assert log_f.total().collectives == 2 and log_f.total().rounds == 2
+    assert log_s.total().collectives == 4 and log_s.total().rounds == 4
+
+
+def test_find_insert_fused_matches_fine_oracle():
+    bk, spec, st, keys, _, _ = _loaded_map()
+    n = keys.shape[0]
+    queries = jnp.concatenate([keys[:100], keys[:100] + jnp.uint32(1 << 21)])
+    ins = keys + jnp.uint32(1 << 22)
+    f = hm.find_insert(bk, spec, st, queries, ins, ins * 9, capacity=n,
+                       promise=ConProm.HashMap.find_insert)
+    s = hm.find_insert(bk, spec, st, queries, ins, ins * 9, capacity=n,
+                       promise=ConProm.HashMap.find_insert | Promise.FINE)
+    for got, want in zip(f[1:], s[1:]):
+        assert np.array_equal(np.asarray(got), np.asarray(want))
+    for got, want in zip(f[0], s[0]):         # table state, bit-identical
+        assert np.array_equal(np.asarray(got), np.asarray(want))
+    found = np.asarray(f[2])
+    # single-attempt probe: attempt-0 residents found, attempt-1 homes
+    # legitimately missed (the op documents attempts=1 semantics)
+    assert found[:100].sum() > 50
+    assert not found[100:].any()              # absent keys never found
+    vals = np.asarray(f[1])[:100]
+    keys_np = np.asarray(queries)[:100]
+    assert (vals[found[:100]] == (keys_np * 3 + 1)[found[:100]]).all()
+
+
+# ---------------------------------------------------------------------------
+# collective rounds: fused push+pop
+# ---------------------------------------------------------------------------
+
+def test_push_pop_fused_two_collectives_fine_three():
+    bk = get_backend(None)
+    spec, st = q.queue_create(bk, 128, SDS((), jnp.uint32), circular=True)
+    vals = jnp.arange(32, dtype=jnp.uint32) + 1
+    dest = jnp.zeros(32, jnp.int32)
+    with costs.recording() as log_f:
+        f = q.push_pop(bk, spec, st, vals, dest, 32, 16, 0)
+    with costs.recording() as log_s:
+        s = q.push_pop(bk, spec, st, vals, dest, 32, 16, 0,
+                       promise=ConProm.CircularQueue.push_pop | Promise.FINE)
+    assert log_f.total().collectives == 2 and log_f.total().rounds == 2
+    assert log_s.total().collectives == 3 and log_s.total().rounds == 3
+    for got, want in zip(f[1:], s[1:]):
+        assert np.array_equal(np.asarray(got), np.asarray(want))
+    for got, want in zip(f[0], s[0]):
+        assert np.array_equal(np.asarray(got), np.asarray(want))
+    # push lands before pop: this round's pushes are poppable
+    assert int(f[4].sum()) == 16
+    assert np.array_equal(np.asarray(f[3])[np.asarray(f[4])],
+                          np.arange(16, dtype=np.uint32) + 1)
+
+
 # ---------------------------------------------------------------------------
 # fused reply == oracle alignment
 # ---------------------------------------------------------------------------
@@ -168,6 +259,27 @@ def test_bin_offsets_impls_match_oracle(impl):
     assert np.array_equal(np.asarray(oc), np.asarray(c)), impl
     ov = np.asarray(valid)
     assert np.array_equal(np.asarray(oo)[ov], np.asarray(o)[ov]), impl
+
+
+@pytest.mark.parametrize("impl", ["oracle", "jnp", "pallas"])
+def test_multi_bin_offsets_impls_agree(impl):
+    """Segmented multi-flow slot assignment: every impl bins the same
+    composite (dest, flow) buckets with stable within-bucket ranks."""
+    rng = np.random.default_rng(17)
+    nbins, nflows, n = 4, 3, 200
+    bins = jnp.asarray(rng.integers(0, nbins, n), jnp.int32)
+    flow = jnp.asarray(rng.integers(0, nflows, n), jnp.int32)
+    valid = jnp.asarray(rng.random(n) < 0.8)
+    counts, offs = kops.multi_bin_offsets(bins, flow, nbins, nflows, valid,
+                                          impl=impl)
+    b, f, v, o = map(np.asarray, (bins, flow, valid, offs))
+    c = np.asarray(counts)
+    for d in range(nbins):
+        for fl in range(nflows):
+            sel = (b == d) & (f == fl) & v
+            assert c[d, fl] == sel.sum(), impl
+            assert np.array_equal(np.sort(o[sel]),
+                                  np.arange(sel.sum())), impl  # dense+stable
 
 
 def test_bin_offsets_slots_are_unique_per_bin():
