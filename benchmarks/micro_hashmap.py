@@ -11,6 +11,11 @@ The ``--fused`` arm adds the ExchangePlan fusion pair:
   find_insert_fused   find + insert flows sharing one plan (2 collectives)
   find_insert_fine    the Promise.FINE sequential oracle (4 collectives)
 
+The ``--skew zipf`` arm adds the skew-tolerance pair (zipf-sized waves
+at mean-load wire capacity):
+  insert_skew_drop    drop-mode: overflowed inserts fail (counted)
+  insert_skew_retry   carryover retry rounds: every insert lands
+
 Reported as microseconds per operation (amortized over the batch) plus
 the collective/bytes/rounds observables and rounds_per_op, so the
 paper's relative claims (buffer >> insert; find 2-3x over find_atomic)
@@ -35,7 +40,7 @@ TABLE = 1 << 17
 WAVES = 8                      # fine-grained ops issue per-wave
 
 
-def run(smoke: bool = False, fused: bool = False):
+def run(smoke: bool = False, fused: bool = False, skew: str = "none"):
     n_ops = 1 << 8 if smoke else N_OPS
     table = 1 << 11 if smoke else TABLE
     bk = get_backend(None)
@@ -146,6 +151,39 @@ def run(smoke: bool = False, fused: bool = False):
             results[tag] = time_fn(fn, st_f, keys, keys2, keys2 * 5 + 1) \
                 / (2 * n_ops) * 1e6
 
+    # --- skew arm: mean-load capacity, drop-mode vs carryover retries ---
+    skew_rows = []
+    if skew == "zipf":
+        from benchmarks.util import SKEW_PEERS as vp, zipf_wave_mask
+        zcap = max(1, wave // vp)
+        zvalid = zipf_wave_mask(WAVES, wave, n_ops)
+        n_skew = int(zvalid.sum())     # actual ops (hot waves saturate)
+
+        def bench_skew(rounds, tag):
+            spec_s, st_s = fresh()
+
+            @jax.jit
+            def inserts(st, keys, vals):
+                okn = jnp.int32(0)
+                nval = jnp.int32(0)
+                for i in range(WAVES):
+                    sl = slice(i * wave, (i + 1) * wave)
+                    st, ok = hm.insert(bk, spec_s, st, keys[sl], vals[sl],
+                                       capacity=zcap, valid=zvalid[i],
+                                       attempts=1, max_rounds=rounds)
+                    okn = okn + ok.sum().astype(jnp.int32)
+                    nval = nval + zvalid[i].sum().astype(jnp.int32)
+                return st, nval - okn       # failed == dropped-on-wire
+
+            obs[tag] = trace_costs(inserts, st_s, keys, vals)
+            results[tag] = time_fn(inserts, st_s, keys, vals) / n_skew * 1e6
+            _, d = inserts(st_s, keys, vals)
+            results[tag + "_dropped"] = int(d)
+            skew_rows.append((tag, rounds, int(d)))
+
+        bench_skew(1, "hashmap_insert_skew_drop")
+        bench_skew(vp, "hashmap_insert_skew_retry")
+
     emit("hashmap_insert", results["hashmap_insert"], "2A+W",
          cost=obs["hashmap_insert"], n_ops=n_ops)
     emit("hashmap_insert_buffer", results["hashmap_insert_buffer"],
@@ -165,6 +203,9 @@ def run(smoke: bool = False, fused: bool = False):
         emit("hashmap_find_insert_fine", results["hashmap_find_insert_fine"],
              "FINE oracle: 4 collectives",
              cost=obs["hashmap_find_insert_fine"], n_ops=2 * n_ops)
+    for tag, rounds, d in skew_rows:
+        emit(tag, results[tag], "zipf waves @ mean-load capacity",
+             cost=obs[tag], n_ops=n_skew, retry_rounds=rounds, dropped=d)
     return results
 
 

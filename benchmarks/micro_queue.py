@@ -11,6 +11,13 @@ The ``--fused`` arm adds the ExchangePlan fusion pair:
                                 collectives per wave)
   cq_push_pop_fine              the Promise.FINE sequential oracle (3)
 
+The ``--skew zipf`` arm adds the skew-tolerance pair (mean-load wire
+capacity, zipf-sized waves into one hot ring — the hottest (src,dst)
+bucket the paper's aggregation can produce):
+  fq_push_skew_drop             drop-mode: overflow is counted data loss
+  fq_push_skew_retry            carryover retry rounds: zero drops at
+                                the same per-round capacity
+
 Each row carries the collective/bytes/rounds observables (and
 rounds_per_op) of one jitted call so exchange-layer regressions show up
 next to wall time.
@@ -31,7 +38,7 @@ N_OPS = 1 << 14
 WAVES = 8
 
 
-def run(smoke: bool = False, fused: bool = False):
+def run(smoke: bool = False, fused: bool = False, skew: str = "none"):
     n_ops = 1 << 8 if smoke else N_OPS
     bk = get_backend(None)
     rng = np.random.default_rng(1)
@@ -122,6 +129,38 @@ def run(smoke: bool = False, fused: bool = False):
         pp(ConProm.CircularQueue.push_pop, "cq_push_pop_fused")
         pp(ConProm.CircularQueue.push_pop | Promise.FINE, "cq_push_pop_fine")
 
+    # --- skew arm: mean-load capacity, drop-mode vs carryover retries ---
+    skew_rows = []
+    if skew == "zipf":
+        from benchmarks.util import SKEW_PEERS as vp, zipf_wave_mask
+        zcap = max(1, wave // vp)
+        valid = zipf_wave_mask(WAVES, wave, n_ops)         # (WAVES, wave)
+        n_skew = int(valid.sum())      # actual ops (hot waves saturate)
+
+        def bench_skew(rounds, tag):
+            spec, st0 = q.queue_create(bk, n_ops * 2, SDS((), jnp.uint32))
+
+            @jax.jit
+            def pushes(st, vals, dest):
+                dropped = jnp.int32(0)
+                for i in range(WAVES):
+                    sl = slice(i * wave, (i + 1) * wave)
+                    st, _, d = q.push(bk, spec, st, vals[sl], dest[sl],
+                                      capacity=zcap, valid=valid[i],
+                                      max_rounds=rounds)
+                    dropped = dropped + d
+                return st, dropped
+
+            obs[tag] = trace_costs(pushes, st0, vals, dest)
+            t = time_fn(pushes, st0, vals, dest)
+            results[tag] = t / n_skew * 1e6
+            _, d = pushes(st0, vals, dest)
+            results[tag + "_dropped"] = int(d)
+            skew_rows.append((tag, rounds, int(d)))
+
+        bench_skew(1, "fq_push_skew_drop")
+        bench_skew(vp, "fq_push_skew_retry")
+
     for k in ("cq_push_pushpop", "cq_push_push", "fq_push",
               "cq_pop_pushpop", "cq_pop_pop", "fq_pop", "fq_local_pop"):
         emit(k, results[k],
@@ -134,6 +173,9 @@ def run(smoke: bool = False, fused: bool = False):
         emit("cq_push_pop_fine", results["cq_push_pop_fine"],
              "FINE oracle: 3 collectives", cost=obs["cq_push_pop_fine"],
              n_ops=2 * n_ops)
+    for tag, rounds, d in skew_rows:
+        emit(tag, results[tag], "zipf waves @ mean-load capacity",
+             cost=obs[tag], n_ops=n_skew, retry_rounds=rounds, dropped=d)
     return results
 
 

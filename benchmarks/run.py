@@ -18,6 +18,10 @@ accounting; timings from a smoke run are not meaningful.
 ``--fused`` adds the plan/commit-fusion arms (fused vs Promise.FINE
 schedules) to the modules that have them, so the rounds_per_op column
 shows the collective-count reduction side by side with wall time.
+
+``--skew zipf`` adds the skewed-traffic arms (drop-mode vs carryover
+retry rounds at mean-load capacity) to the modules that have them; the
+retry_rounds and dropped columns track skew tolerance over time.
 """
 
 from __future__ import annotations
@@ -29,6 +33,7 @@ import sys
 def main() -> None:
     from benchmarks import isx, kmer, lm_step, meraculous, micro_hashmap, \
         micro_queue
+    from benchmarks.util import HEADER
     mods = {
         "micro_hashmap": micro_hashmap,
         "micro_queue": micro_queue,
@@ -40,10 +45,17 @@ def main() -> None:
     args = [a for a in sys.argv[1:]]
     smoke = "--smoke" in args
     fused = "--fused" in args
+    skew = "none"
+    if "--skew" in args:
+        i = args.index("--skew")
+        skew = args[i + 1] if i + 1 < len(args) else ""
+        if skew not in ("zipf",):
+            sys.exit(f"--skew takes a distribution name (zipf), "
+                     f"got {skew!r}")
+        del args[i:i + 2]
     args = [a for a in args if a not in ("--smoke", "--fused")]
     only = args[0] if args else None
-    print("name,us_per_call,collectives,bytes_moved,rounds,"
-          "rounds_per_op,derived")
+    print(HEADER)
     for name, mod in mods.items():
         if only and name != only:
             continue
@@ -53,13 +65,15 @@ def main() -> None:
             kw["smoke"] = True
         if fused and "fused" in params:
             kw["fused"] = True
+        if skew != "none" and "skew" in params:
+            kw["skew"] = skew
         try:
             if smoke and "smoke" not in params:
-                print(f"{name},SKIPPED,,,,,no smoke mode yet")
+                print(f"{name},SKIPPED,,,,,,,no smoke mode yet")
             else:
                 mod.run(**kw)
         except Exception as e:  # keep the harness going; report the row
-            print(f"{name},ERROR,,,,,{type(e).__name__}: {e}")
+            print(f"{name},ERROR,,,,,,,{type(e).__name__}: {e}")
 
 
 if __name__ == "__main__":

@@ -37,19 +37,48 @@ def trace_costs(fn, *args, **kw):
     return log.total()
 
 
+#: the one CSV schema every benchmark row follows (schema-checked by
+#: tests/test_benchmarks_smoke.py)
+HEADER = ("name,us_per_call,collectives,bytes_moved,rounds,"
+          "rounds_per_op,retry_rounds,dropped,derived")
+
+#: the --skew arms' virtual peer count: wave // SKEW_PEERS is the
+#: uniform per-bucket expectation ("mean-load capacity")
+SKEW_PEERS = 4
+
+
+def zipf_wave_mask(n_waves: int, wave: int, total: int, s: float = 1.2):
+    """Shared --skew workload shape: valid masks (n_waves, wave) whose
+    wave sizes follow ~ total/(w+1)^s (hot waves saturate at ``wave``),
+    so early waves hammer the hot bucket far past mean-load capacity.
+    One definition keeps the micro_hashmap and micro_queue skew arms
+    comparable; callers normalize per-op timings by the mask's actual
+    ``sum()``, not ``total``, because of the saturation."""
+    import jax.numpy as jnp
+    import numpy as np
+    zw = np.array([1.0 / (w + 1) ** s for w in range(n_waves)])
+    sizes = np.maximum((zw / zw.sum() * total).astype(int), 1)
+    return jnp.asarray(np.arange(wave)[None, :] < sizes[:, None])
+
+
 def emit(name: str, us_per_call: float, derived: str = "",
-         cost=None, n_ops: int | None = None):
-    """CSV row: name,us_per_call,collectives,bytes_moved,rounds,
-    rounds_per_op,derived.
+         cost=None, n_ops: int | None = None,
+         retry_rounds: int | None = None, dropped: int | None = None):
+    """CSV row following :data:`HEADER`.
 
     ``rounds_per_op`` (rounds amortized over ``n_ops`` data-structure
     ops) is the collective-count observable of the plan/commit fusion:
     fused schedules cut it without touching bytes, so BENCH trajectories
-    show the aggregation win directly.
+    show the aggregation win directly.  ``retry_rounds``/``dropped``
+    track skew tolerance: the ``--skew`` arms report how many carryover
+    rounds they ran and how many items still fell off the wire, so the
+    perf trajectory covers skewed traffic, not just uniform.
     """
+    rr = "" if retry_rounds is None else str(retry_rounds)
+    dr = "" if dropped is None else str(dropped)
     if cost is None:
-        print(f"{name},{us_per_call:.2f},,,,,{derived}")
+        print(f"{name},{us_per_call:.2f},,,,,{rr},{dr},{derived}")
         return
     rpo = f"{cost.rounds / n_ops:.6f}" if n_ops else ""
     print(f"{name},{us_per_call:.2f},{cost.collectives},"
-          f"{cost.bytes_moved},{cost.rounds},{rpo},{derived}")
+          f"{cost.bytes_moved},{cost.rounds},{rpo},{rr},{dr},{derived}")

@@ -92,6 +92,11 @@ class ArchConfig:
     # exchange capacity model for MoE dispatch (tokens per (src,dst) pair
     # as a multiple of the uniform expectation)
     moe_capacity_slack: float = 1.5
+    # carryover retry rounds for the dispatch exchange: round r re-ships
+    # tokens with per-(src,dst) rank in [r*C, (r+1)*C), so hot experts
+    # tolerate up to rounds x slack of the uniform load before any token
+    # is dropped — skew tolerance without widening every round's wire
+    moe_dispatch_rounds: int = 1
 
     sub_quadratic: bool = False      # eligible for long_500k
 

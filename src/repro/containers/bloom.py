@@ -77,17 +77,18 @@ def _words_of(spec: BloomSpec, items, valid):
 
 
 def _route_words(backend: Backend, spec: BloomSpec, items, valid, capacity,
-                 op_name: str):
+                 op_name: str, max_rounds: int = 1):
     n, body, owner, valid = _words_of(spec, items, valid)
     res = route(backend, body, owner, capacity, valid=valid, op_name=op_name,
-                impl=spec.impl)
+                impl=spec.impl, max_rounds=max_rounds)
     rb = jnp.where(res.valid, res.payload[:, 0].astype(_I32), 0)
     rw = res.payload[:, 1:3]
     return n, res, rb, rw
 
 
 def insert(backend: Backend, spec: BloomSpec, state: BloomState,
-           items, capacity: int, valid: jax.Array | None = None):
+           items, capacity: int, valid: jax.Array | None = None,
+           max_rounds: int = 1):
     """Atomic insert; returns (state, already_present(N,)).
 
     ``already_present[i]`` is True iff every one of item i's k bits was
@@ -95,7 +96,7 @@ def insert(backend: Backend, spec: BloomSpec, state: BloomState,
     whole machine and within the batch (paper's atomicity invariant).
     """
     n, res, rb, rw = _route_words(backend, spec, items, valid, capacity,
-                                  "bloom.insert")
+                                  "bloom.insert", max_rounds=max_rounds)
     words, already = kops.bloom_insert(state.words, rb, rw, res.valid,
                                        impl=spec.impl)
     back, _ = reply(backend, res, already.astype(_U32), n,
@@ -105,10 +106,11 @@ def insert(backend: Backend, spec: BloomSpec, state: BloomState,
 
 
 def find(backend: Backend, spec: BloomSpec, state: BloomState,
-         items, capacity: int, valid: jax.Array | None = None):
+         items, capacity: int, valid: jax.Array | None = None,
+         max_rounds: int = 1):
     """Membership query; returns present(N,). Cost R."""
     n, res, rb, rw = _route_words(backend, spec, items, valid, capacity,
-                                  "bloom.find")
+                                  "bloom.find", max_rounds=max_rounds)
     present = kops.bloom_find(state.words, rb, rw, res.valid, impl=spec.impl)
     back, _ = reply(backend, res, present.astype(_U32), n,
                     op_name="bloom.find")
@@ -120,7 +122,8 @@ def insert_find(backend: Backend, spec: BloomSpec, state: BloomState,
                 ins_items, find_items, capacity_ins: int, capacity_find: int,
                 ins_valid: jax.Array | None = None,
                 find_valid: jax.Array | None = None,
-                promise: Promise = Promise.NONE):
+                promise: Promise = Promise.NONE,
+                max_rounds: int = 1):
     """Fused insert + membership query sharing ONE exchange round trip.
 
     The insert is serialized before the find, so the query observes this
@@ -131,9 +134,10 @@ def insert_find(backend: Backend, spec: BloomSpec, state: BloomState,
     validate(promise)
     if fine_grained(promise):
         state, already = insert(backend, spec, state, ins_items,
-                                capacity_ins, valid=ins_valid)
+                                capacity_ins, valid=ins_valid,
+                                max_rounds=max_rounds)
         present = find(backend, spec, state, find_items, capacity_find,
-                       valid=find_valid)
+                       valid=find_valid, max_rounds=max_rounds)
         return state, already, present
 
     ni, body_i, owner_i, ins_valid = _words_of(spec, ins_items, ins_valid)
@@ -143,7 +147,7 @@ def insert_find(backend: Backend, spec: BloomSpec, state: BloomState,
                   valid=ins_valid, op_name="bloom.insert")
     hf = plan.add(body_f, owner_f, capacity_find, reply_lanes=1,
                   valid=find_valid, op_name="bloom.find")
-    c = plan.commit(backend, impl=spec.impl)
+    c = plan.commit(backend, impl=spec.impl, max_rounds=max_rounds)
     vi, vf = c.view(hi), c.view(hf)
 
     rb_i = jnp.where(vi.valid, vi.payload[:, 0].astype(_I32), 0)

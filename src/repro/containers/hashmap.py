@@ -110,12 +110,15 @@ def insert(backend: Backend, spec: HashMapSpec, state: HashMapState,
            valid: jax.Array | None = None,
            mode: int = kops.MODE_SET,
            attempts: int = 2,
-           return_success: bool = True):
+           return_success: bool = True,
+           max_rounds: int = 1):
     """Insert a batch of (key, value) pairs.
 
     Returns (state, success(N,) | None).  With ``promise=local`` the keys
     must hash to this rank's own blocks (cost l, no collectives) — the
-    HashMapBuffer flush path (paper Table 3b).
+    HashMapBuffer flush path (paper Table 3b).  ``max_rounds`` adds
+    carryover retry rounds to each exchange, absorbing skewed key
+    distributions (hot blocks) without inflating ``capacity``.
     """
     validate(promise)
     klanes = spec.key_packer.pack(keys)
@@ -143,7 +146,8 @@ def insert(backend: Backend, spec: HashMapSpec, state: HashMapState,
         body = jnp.concatenate(
             [lblock.astype(_U32)[:, None], klanes, vlanes], axis=1)
         res = route(backend, body, owner, capacity, valid=pending,
-                    op_name="hashmap.insert", impl=spec.impl)
+                    op_name="hashmap.insert", impl=spec.impl,
+                    max_rounds=max_rounds)
         rb = jnp.where(res.valid, res.payload[:, 0].astype(_I32), 0)
         rk = res.payload[:, 1:1 + spec.key_packer.lanes]
         rv = res.payload[:, 1 + spec.key_packer.lanes:]
@@ -175,7 +179,7 @@ def insert(backend: Backend, spec: HashMapSpec, state: HashMapState,
 
 def _find_speculative(backend: Backend, spec: HashMapSpec,
                       state: HashMapState, klanes, capacity: int,
-                      valid, atomic: bool):
+                      valid, atomic: bool, max_rounds: int = 1):
     """Dual-attempt find in ONE round trip (2 collectives, not 4).
 
     Both probe attempts are two *flows* of one :class:`ExchangePlan`:
@@ -204,7 +208,7 @@ def _find_speculative(backend: Backend, spec: HashMapSpec,
     h1 = plan.add(jnp.concatenate([lb1.astype(_U32)[:, None], klanes], axis=1),
                   owner1, capacity, reply_lanes=rl, valid=valid,
                   op_name="hashmap.find")
-    c = plan.commit(backend, impl=spec.impl)
+    c = plan.commit(backend, impl=spec.impl, max_rounds=max_rounds)
     v0, v1 = c.view(h0), c.view(h1)
 
     rb = jnp.concatenate([
@@ -243,7 +247,8 @@ def find(backend: Backend, spec: HashMapSpec, state: HashMapState,
          promise: Promise = Promise.FIND | Promise.INSERT,
          valid: jax.Array | None = None,
          attempts: int = 2,
-         speculative: bool = True):
+         speculative: bool = True,
+         max_rounds: int = 1):
     """Find a batch of keys. Returns (state, values, found(N,)).
 
     State is returned because the fully-atomic path's read-bit dance
@@ -278,7 +283,7 @@ def find(backend: Backend, spec: HashMapSpec, state: HashMapState,
     atomic = not find_only(promise)
     if speculative and attempts == 2:
         return _find_speculative(backend, spec, state, klanes, capacity,
-                                 valid, atomic)
+                                 valid, atomic, max_rounds=max_rounds)
     pending = valid
     found_all = jnp.zeros((n,), bool)
     vals_all = jnp.zeros((n, spec.val_packer.lanes), _U32)
@@ -287,7 +292,8 @@ def find(backend: Backend, spec: HashMapSpec, state: HashMapState,
         owner, lblock = _owner_local(spec, gblock)
         body = jnp.concatenate([lblock.astype(_U32)[:, None], klanes], axis=1)
         res = route(backend, body, owner, capacity, valid=pending,
-                    op_name="hashmap.find", impl=spec.impl)
+                    op_name="hashmap.find", impl=spec.impl,
+                    max_rounds=max_rounds)
         rb = jnp.where(res.valid, res.payload[:, 0].astype(_I32), 0)
         rk = res.payload[:, 1:]
         tk, tv, st = state
@@ -318,7 +324,8 @@ def find_insert(backend: Backend, spec: HashMapSpec, state: HashMapState,
                 promise: Promise = Promise.FIND | Promise.INSERT,
                 find_valid: jax.Array | None = None,
                 ins_valid: jax.Array | None = None,
-                mode: int = kops.MODE_SET):
+                mode: int = kops.MODE_SET,
+                max_rounds: int = 1):
     """Fused find + insert sharing ONE exchange round trip.
 
     Under ``ConProm.HashMap.find_insert`` the two batches are promised
@@ -342,10 +349,11 @@ def find_insert(backend: Backend, spec: HashMapSpec, state: HashMapState,
     if fine_grained(promise):
         state, vals, found = find(backend, spec, state, find_keys, capacity,
                                   promise=promise, valid=find_valid,
-                                  attempts=1)
+                                  attempts=1, max_rounds=max_rounds)
         state, ok = insert(backend, spec, state, ins_keys, ins_vals, capacity,
                            promise=promise, valid=ins_valid, mode=mode,
-                           attempts=1, return_success=True)
+                           attempts=1, return_success=True,
+                           max_rounds=max_rounds)
         return state, vals, found, ok
 
     kf = spec.key_packer.pack(find_keys)
@@ -368,7 +376,7 @@ def find_insert(backend: Backend, spec: HashMapSpec, state: HashMapState,
                                   axis=1),
                   owner_i, capacity, reply_lanes=1,
                   valid=ins_valid, op_name="hashmap.insert")
-    c = plan.commit(backend, impl=spec.impl)
+    c = plan.commit(backend, impl=spec.impl, max_rounds=max_rounds)
     vf, vw = c.view(hf), c.view(hi)
 
     # find against the pre-insert table (the chosen serialization)

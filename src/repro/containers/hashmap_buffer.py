@@ -115,19 +115,40 @@ def spill_flow(plan: ExchangePlan, spec: HashMapBufferSpec,
 
 
 def spill_apply(backend: Backend, committed: CommittedPlan, handle: int,
-                spec: HashMapBufferSpec, state: HashMapBufferState):
-    """Owner-side half of the spill: ring-append the arrived flow."""
+                spec: HashMapBufferSpec, state: HashMapBufferState,
+                overflow: str = "drop"):
+    """Owner-side half of the spill: ring-append the arrived flow.
+
+    With ``overflow="carry"`` the items the wire could not admit (bucket
+    rank beyond every retry round's window) are NOT dropped: the
+    committed plan's :meth:`~repro.core.exchange.CommittedPlan.leftover`
+    mask re-stages them at the front of the local buffer, to ride the
+    next spill — the paper's re-insert-on-failed-fetch-and-add loop.
+    The returned drop count then covers ring overflow only.
+    """
     view = committed.view(handle)
     qstate, _, full_drop = q._append(spec.queue_spec, state.queue,
                                      view.payload, view.valid)
     a = q._amo_count(spec.queue_spec, ConProm.CircularQueue.push)
     costs.record("queue.push", costs.Cost(A=a, W=spec.buffer_cap))
+    if overflow == "carry":
+        _, mask = committed.leftover(handle)
+        # compact the carried rows to the buffer's front
+        pos = jnp.cumsum(mask.astype(_I32)) - mask.astype(_I32)
+        slot = jnp.where(mask, pos, spec.buffer_cap)
+        buf = jnp.zeros_like(state.buf).at[slot].set(state.buf, mode="drop")
+        buf_dest = jnp.zeros_like(state.buf_dest).at[slot].set(
+            state.buf_dest, mode="drop")
+        state = state._replace(queue=qstate, buf=buf, buf_dest=buf_dest,
+                               buf_n=mask.sum().astype(_I32)[None])
+        return state, backend.psum(full_drop)
     state = state._replace(queue=qstate, buf_n=jnp.zeros((1,), _I32))
     return state, view.dropped + backend.psum(full_drop)
 
 
 def spill(backend: Backend, spec: HashMapBufferSpec,
-          state: HashMapBufferState, capacity: int):
+          state: HashMapBufferState, capacity: int,
+          max_rounds: int = 1, overflow: str = "drop"):
     """Push staged items to the owners' FastQueues (paper: buffer full).
 
     Eager wrapper: a fresh single-flow plan around
@@ -135,18 +156,27 @@ def spill(backend: Backend, spec: HashMapBufferSpec,
     """
     plan = ExchangePlan(name="queue.push")
     h = spill_flow(plan, spec, state, capacity)
-    committed = plan.commit(backend)
-    return spill_apply(backend, committed, h, spec, state)
+    committed = plan.commit(backend, max_rounds=max_rounds,
+                            overflow=overflow)
+    return spill_apply(backend, committed, h, spec, state,
+                       overflow=overflow)
 
 
 def flush(backend: Backend, spec: HashMapBufferSpec,
           state: HashMapBufferState, capacity: int,
-          mode: int = kops.MODE_SET):
+          mode: int = kops.MODE_SET,
+          max_rounds: int = 1, overflow: str = "drop"):
     """Spill + drain own queue with fast local inserts (paper flush()).
 
     Returns (state, dropped) — dropped counts route/ring/table overflow.
+    With ``overflow="carry"`` wire overflow is never dropped: leftover
+    items stay staged in the returned state's buffer (``buf_n > 0``) for
+    the caller's next flush cycle, so repeated flushes are lossless as
+    long as ring and table keep up; ``max_rounds`` shrinks the number of
+    cycles needed by retrying inside the spill itself.
     """
-    state, dropped = spill(backend, spec, state, capacity)
+    state, dropped = spill(backend, spec, state, capacity,
+                           max_rounds=max_rounds, overflow=overflow)
     backend.barrier()
 
     rows, got = q.local_drain(spec.queue_spec, state.queue)

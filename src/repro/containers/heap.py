@@ -61,6 +61,11 @@ def store_local(backend: Backend, spec: HeapSpec, state: HeapState,
     data = state.data.at[idx].set(rows.astype(_U32), mode="drop")
     offsets = base + jnp.concatenate(
         [jnp.zeros((1,), _I32), jnp.cumsum(lengths)[:-1].astype(_I32)])
+    # a failed allocation must NOT hand out in-range offsets: they would
+    # alias whatever record lands there next, and a later rget_rows
+    # would silently read another record's rows.  Clamp failed pointers
+    # to the out-of-range sentinel so reads report not-found instead.
+    offsets = jnp.where(ok, offsets, spec.local_rows)
     rank = jnp.broadcast_to(backend.rank(), offsets.shape)
     new_top = jnp.where(ok, state.top + n, state.top)
     costs.record("heap.store_local", costs.Cost(local=n))
@@ -70,11 +75,22 @@ def store_local(backend: Backend, spec: HeapSpec, state: HeapState,
 
 
 def rget_rows(backend: Backend, spec: HeapSpec, state: HeapState,
-              ptrs: GlobalPointer, span: int, capacity: int):
+              ptrs: GlobalPointer, span: int, capacity: int,
+              max_rounds: int = 1):
     """Read ``span`` consecutive rows behind each pointer (static span).
 
-    Returns (rows (K, span, lanes), found (K,)).  Variable-length
-    records read their max span and slice by the stored length.
+    Returns ``(rows (K, span, lanes), found (K,), dropped () i32)``.
+    Variable-length records read their max span and slice by the stored
+    length.  ``found`` is False when the record's base offset is not a
+    live heap row (dangling / failed-alloc sentinel pointers) or when
+    any of its row-requests fell off the wire; ``dropped`` is the
+    global overflow count, so callers can tell "record absent"
+    (found=False, dropped=0) from "requests fell off the wire"
+    (dropped>0) — and retry with a larger ``capacity`` or
+    ``max_rounds`` in the latter case instead of mis-reporting absence.
+    A short record near the heap end may legally overshoot with a
+    larger static span: rows past the end read as zeros and do NOT
+    unfind the record (callers slice by the stored length).
     """
     k = ptrs.rank.shape[0]
     # expand each pointer into `span` unit row-requests
@@ -82,11 +98,24 @@ def rget_rows(backend: Backend, spec: HeapSpec, state: HeapState,
            ).reshape(-1)
     dst = jnp.repeat(ptrs.rank, span)
     req = route(backend, off.astype(_U32)[:, None], dst,
-                capacity=capacity * span, op_name="heap.rget")
+                capacity=capacity * span, op_name="heap.rget",
+                max_rounds=max_rounds)
     loff = jnp.where(req.valid, req.payload[:, 0].astype(_I32), 0)
-    served = state.data[jnp.clip(loff, 0, spec.local_rows - 1)]
-    out, answered = reply(backend, req, served, k * span,
+    # serve only in-range offsets, and SAY so: the reply carries an
+    # in-range flag lane, so a clamped gather can never masquerade as
+    # another record's data on the requester side
+    in_range = req.valid & (loff >= 0) & (loff < spec.local_rows)
+    served = jnp.where(in_range[:, None],
+                       state.data[jnp.clip(loff, 0, spec.local_rows - 1)], 0)
+    body = jnp.concatenate([served, in_range.astype(_U32)[:, None]], axis=1)
+    out, answered = reply(backend, req, body, k * span,
                           op_name="heap.rget")
+    # found = every row-request came back AND the BASE row is live: the
+    # in-range flag only gates the first row, so a span overshooting
+    # the heap end doesn't unfind a short record, while sentinel /
+    # dangling base offsets still read as absent
+    base_live = (out[:, -1] == 1).reshape(k, span)[:, 0]
     costs.record("heap.rget", costs.Cost(R=k * span))
-    return (out.reshape(k, span, spec.lanes),
-            answered.reshape(k, span).all(axis=1))
+    return (out[:, :-1].reshape(k, span, spec.lanes),
+            answered.reshape(k, span).all(axis=1) & base_live,
+            req.dropped)

@@ -85,12 +85,17 @@ def _amo_count(spec: QueueSpec, promise: Promise) -> int:
 def push(backend: Backend, spec: QueueSpec, state: QueueState,
          values, dest: jax.Array, capacity: int,
          valid: jax.Array | None = None,
-         promise: Promise = Promise.PUSH):
+         promise: Promise = Promise.PUSH,
+         max_rounds: int = 1):
     """Push each value to the ring hosted on ``dest[i]``.
 
     Returns (state, pushed_here, dropped):
       pushed_here  items this rank's ring accepted
       dropped      global count rejected (route overflow or ring full)
+
+    ``max_rounds=R`` retries wire overflow with carryover rounds — an
+    all-to-one or zipf-skewed destination pattern keeps every item as
+    long as the hottest (src,dst) pair stays under R*capacity.
     """
     validate(promise)
     lanes = spec.packer.pack(values)
@@ -104,7 +109,7 @@ def push(backend: Backend, spec: QueueSpec, state: QueueState,
         return _append(spec, state, lanes, valid)
 
     res = route(backend, lanes, dest, capacity, valid=valid,
-                op_name="queue.push")
+                op_name="queue.push", max_rounds=max_rounds)
     state, pushed, full_drop = _append(spec, state, res.payload, res.valid)
     a = _amo_count(spec, promise)
     costs.record("queue.push", costs.Cost(A=a, W=n))
@@ -163,7 +168,8 @@ def _src_ranks(src: jax.Array | int, n: int) -> jax.Array:
 
 def pop(backend: Backend, spec: QueueSpec, state: QueueState,
         n: int, src: jax.Array | int,
-        promise: Promise = Promise.POP):
+        promise: Promise = Promise.POP,
+        max_rounds: int = 1):
     """Pop up to ``n`` items from the ring hosted on rank ``src``.
 
     Every rank issues its own request; the owner grants ranges in
@@ -178,7 +184,7 @@ def pop(backend: Backend, spec: QueueSpec, state: QueueState,
 
     # unit requests: one row per wanted item (per-(src,dst) capacity = n)
     req = route(backend, jnp.zeros((n, 1), _U32), src, capacity=n,
-                op_name="queue.pop")
+                op_name="queue.pop", max_rounds=max_rounds)
     new, body = _grant(spec, state, req.valid, promise)
     out, _ = reply(backend, req, body, n, op_name="queue.pop")
     got = out[:, -1] == 1
@@ -192,7 +198,8 @@ def push_pop(backend: Backend, spec: QueueSpec, state: QueueState,
              values, dest: jax.Array, capacity: int,
              n: int, src: jax.Array | int,
              valid: jax.Array | None = None,
-             promise: Promise = Promise.PUSH | Promise.POP):
+             promise: Promise = Promise.PUSH | Promise.POP,
+             max_rounds: int = 1):
     """Fused push + pop sharing ONE exchange round trip.
 
     Under ``ConProm.CircularQueue.push_pop`` the two ops are promised
@@ -206,8 +213,10 @@ def push_pop(backend: Backend, spec: QueueSpec, state: QueueState,
     validate(promise)
     if fine_grained(promise):
         state, pushed, dropped = push(backend, spec, state, values, dest,
-                                      capacity, valid=valid, promise=promise)
-        state, out, got = pop(backend, spec, state, n, src, promise=promise)
+                                      capacity, valid=valid, promise=promise,
+                                      max_rounds=max_rounds)
+        state, out, got = pop(backend, spec, state, n, src, promise=promise,
+                              max_rounds=max_rounds)
         return state, pushed, dropped, out, got
 
     lanes = spec.packer.pack(values)
@@ -220,7 +229,7 @@ def push_pop(backend: Backend, spec: QueueSpec, state: QueueState,
     hp = plan.add(lanes, dest, capacity, valid=valid, op_name="queue.push")
     hq = plan.add(jnp.zeros((n, 1), _U32), src, n,
                   reply_lanes=spec.lanes + 1, op_name="queue.pop")
-    c = plan.commit(backend)
+    c = plan.commit(backend, max_rounds=max_rounds)
     vp, vq = c.view(hp), c.view(hq)
 
     state, pushed, full_drop = _append(spec, state, vp.payload, vp.valid)

@@ -17,7 +17,8 @@ See DESIGN.md section 2 for the full adaptation table.
 from repro.core.backend import Backend, SerialBackend, SpmdBackend, get_backend
 from repro.core.promises import ConProm, Promise
 from repro.core.pointers import GlobalPointer
-from repro.core.exchange import ExchangePlan, RouteResult, reply, route
+from repro.core.exchange import (ExchangeOverflowError, ExchangePlan,
+                                 RouteResult, carry_mask, reply, route)
 from repro.core import costs
 
 __all__ = [
@@ -29,6 +30,8 @@ __all__ = [
     "Promise",
     "GlobalPointer",
     "ExchangePlan",
+    "ExchangeOverflowError",
+    "carry_mask",
     "route",
     "reply",
     "RouteResult",

@@ -50,10 +50,24 @@ in the requester's original send slot.  The requester resolves slots to
 batch positions from purely local state captured at commit time; no
 binning, no argsort, and no src_pos lane in the reply direction.
 
-Shapes and capacities are static; overflow beyond a flow's capacity is
-dropped and *counted* per flow (the analogue of a failed/retried
-insertion), so callers can assert zero drops or size capacities
-adaptively.
+Shapes and capacities are static; what happens beyond a flow's capacity
+is governed by the plan's ``overflow`` policy (DESIGN.md section 1.6).
+RDMA BCL retries a failed fetch-and-add; the static-shape analogue is
+*carryover retry rounds*: ``commit(max_rounds=R)`` ships, in round
+``r``, exactly the items whose within-(dest, flow)-bucket rank from the
+SINGLE binning pass falls in ``[r*C_f, (r+1)*C_f)`` — the retry rounds
+are pure extra all-to-alls whose masks are derived from the offsets
+already computed, with no second binning pass.  Owner views concatenate
+the rounds to an effective capacity ``R*C_f`` (row ``s*(R*C_f) + o``
+holds rank-``o`` arrivals from rank ``s`` — bit-identical to a single
+round at capacity ``R*C_f``), the reply stays ONE inverse all-to-all
+(just ``R`` times wider), and ``dropped`` counts only items whose rank
+is ``>= R*C_f``.  Residual overflow is then dropped-and-counted
+(``overflow="drop"``), raised on eagerly (``"raise-in-test"``), or
+handed back to the caller as a re-injection mask
+(``"carry"``/:meth:`CommittedPlan.leftover` — the HashMapBuffer flush
+path re-stages leftovers exactly like the paper's failed-insert
+re-insertion loop).
 """
 
 from __future__ import annotations
@@ -76,6 +90,18 @@ _I32 = jnp.int32
 _VALID_BIT = jnp.uint32(1 << 31)
 _POS_MASK = jnp.uint32((1 << 31) - 1)
 
+#: legal ``overflow=`` policies (DESIGN.md section 1.6)
+OVERFLOW_POLICIES = ("drop", "raise-in-test", "carry")
+
+
+class ExchangeOverflowError(RuntimeError):
+    """Raised by ``overflow="raise-in-test"`` when a flow drops items.
+
+    Only raised when drop counts are concrete (eager execution — the
+    test/debug regime the policy is named for); under ``jit`` tracing
+    the counts are tracers and the policy degrades to ``"drop"``.
+    """
+
 
 class RouteResult(NamedTuple):
     """Owner-side view of a routed flow (+ requester-local slot map).
@@ -85,7 +111,9 @@ class RouteResult(NamedTuple):
     src_rank  (P*C,) i32   — originating rank (derived from slot position)
     src_pos   (P*C,) i32   — item's index in the sender's original batch
     dropped   () i32       — items dropped for capacity overflow (global)
-    capacity  int          — static per-(src,dst) capacity C
+    capacity  int          — static EFFECTIVE per-(src,dst) capacity: the
+                             flow's declared C times the plan's
+                             ``max_rounds`` (retry rounds concatenate)
     send_item (P*C,) i32   — requester-local: original batch index this
                              rank placed in each of its own send slots,
                              in flow-local coordinates (sentinel N when
@@ -117,6 +145,7 @@ class _Flow:
     valid: jax.Array          # (N,) bool
     op_name: str
     reply_lanes: int          # 0 = fire-and-forget (no reply expected)
+    max_rounds: int | None = None   # per-flow override; None = plan-wide
 
     @property
     def n(self) -> int:
@@ -125,6 +154,21 @@ class _Flow:
     @property
     def lanes(self) -> int:
         return self.payload.shape[1]
+
+
+def _flow_rounds(f: _Flow, plan_rounds: int) -> int:
+    """Effective retry rounds for one flow.
+
+    The flow-level ``max_rounds`` (if set) overrides the plan-wide
+    knob, and the result is clamped to ``ceil(N_f / C_f)``: no
+    (dest, flow) bucket can ever hold more than the flow's N items, so
+    rounds past that bound could never ship anything new — an
+    exact-capacity flow (queue.pop's unit requests, MoE's stats flow)
+    stays at ONE launch no matter what the plan requests, instead of
+    paying R-fold wire for nothing.
+    """
+    r = plan_rounds if f.max_rounds is None else f.max_rounds
+    return max(1, min(int(r), -(-f.n // f.capacity)))
 
 
 class ExchangePlan:
@@ -164,49 +208,108 @@ class ExchangePlan:
 
     def add(self, payload: jax.Array, dest: jax.Array, capacity: int,
             reply_lanes: int = 0, valid: jax.Array | None = None,
-            op_name: str = "flow") -> int:
-        """Register a flow; returns its handle (index into the plan)."""
+            op_name: str = "flow", max_rounds: int | None = None) -> int:
+        """Register a flow; returns its handle (index into the plan).
+
+        Shape/capacity mistakes are caught HERE, named after the flow's
+        ``op_name`` — not three layers down as an opaque concatenate or
+        reshape error inside the fused lowering.  ``max_rounds``
+        overrides the plan-wide retry-round knob for THIS flow (e.g. an
+        exactly-sized flow declares 1 so it never rides retry launches);
+        either way the effective count clamps to ``ceil(N / capacity)``.
+        """
         if self._committed:
             raise ValueError(
                 "add() after commit(): the round's flows are already on "
                 "the wire; build a new ExchangePlan for the next round")
+        if payload.ndim not in (1, 2):
+            raise ValueError(
+                f"flow '{op_name}': payload must be (N,) or (N, L) u32 "
+                f"lanes, got ndim={payload.ndim}")
         if payload.ndim == 1:
             payload = payload[:, None]
         payload = payload.astype(_U32)
         n = payload.shape[0]
+        if dest.ndim != 1 or dest.shape[0] != n:
+            raise ValueError(
+                f"flow '{op_name}': dest must be ({n},) to match the "
+                f"payload's {n} rows, got shape {tuple(dest.shape)}")
+        if int(capacity) <= 0:
+            raise ValueError(
+                f"flow '{op_name}': capacity must be a positive static "
+                f"per-(src,dst) slot count, got {capacity}")
+        if int(reply_lanes) < 0:
+            raise ValueError(
+                f"flow '{op_name}': reply_lanes must be >= 0, "
+                f"got {reply_lanes}")
         if valid is None:
             valid = jnp.ones((n,), bool)
+        elif valid.ndim != 1 or valid.shape[0] != n:
+            raise ValueError(
+                f"flow '{op_name}': valid must be ({n},) bool to match "
+                f"the payload's {n} rows, got shape {tuple(valid.shape)}")
+        if max_rounds is not None and int(max_rounds) < 1:
+            raise ValueError(
+                f"flow '{op_name}': max_rounds must be >= 1, "
+                f"got {max_rounds}")
         self._flows.append(_Flow(payload, dest.astype(_I32), int(capacity),
-                                 valid, op_name, int(reply_lanes)))
+                                 valid, op_name, int(reply_lanes),
+                                 None if max_rounds is None
+                                 else int(max_rounds)))
         return len(self._flows) - 1
 
-    def commit(self, backend: Backend, impl: str = "auto") -> "CommittedPlan":
-        """Issue the request round: one fused all-to-all for all flows."""
+    def commit(self, backend: Backend, impl: str = "auto",
+               max_rounds: int = 1,
+               overflow: str = "drop") -> "CommittedPlan":
+        """Issue the request round: one fused all-to-all for all flows.
+
+        ``max_rounds=R`` adds R-1 carryover retry rounds: retry round r
+        re-ships the items whose within-bucket rank from the single
+        binning pass falls in ``[r*C_f, (r+1)*C_f)``, so owner views see
+        an effective capacity of ``R*C_f`` per flow and only rank
+        ``>= R*C_f`` counts as dropped.  ``overflow`` picks the residual
+        policy: ``"drop"`` (count only), ``"raise-in-test"`` (raise
+        :class:`ExchangeOverflowError` when counts are concrete), or
+        ``"carry"`` (leftovers stay available via
+        :meth:`CommittedPlan.leftover` for caller re-injection).
+        """
         if not self._flows:
             raise ValueError("commit() on an empty ExchangePlan")
         if self._committed:
             # a silent second commit would launch a duplicate collective
             # and double-record every cost pin
             raise ValueError("ExchangePlan already committed")
+        if int(max_rounds) < 1:
+            raise ValueError(f"max_rounds must be >= 1, got {max_rounds}")
+        if overflow not in OVERFLOW_POLICIES:
+            raise ValueError(
+                f"overflow must be one of {OVERFLOW_POLICIES}, "
+                f"got {overflow!r}")
         self._committed = True
         if fine_grained(self.promise):
             views = [route(backend, f.payload, f.dest, f.capacity,
-                           valid=f.valid, op_name=f.op_name, impl=impl)
+                           valid=f.valid, op_name=f.op_name, impl=impl,
+                           max_rounds=_flow_rounds(f, int(max_rounds)),
+                           overflow=overflow)
                      for f in self._flows]
             return CommittedPlan(self, views, sequential=True)
-        return self._commit_fused(backend, impl)
+        return self._commit_fused(backend, impl, int(max_rounds), overflow)
 
     # -- fused lowering ---------------------------------------------------
 
-    def _commit_fused(self, backend: Backend, impl: str) -> "CommittedPlan":
+    def _commit_fused(self, backend: Backend, impl: str,
+                      max_rounds: int = 1,
+                      overflow: str = "drop") -> "CommittedPlan":
         flows = self._flows
         nprocs = backend.nprocs()
         nflows = len(flows)
+        rounds = int(max_rounds)   # validated by commit(), the sole entry
         caps = [f.capacity for f in flows]
-        seg = [0]
-        for c in caps:
-            seg.append(seg[-1] + c)
-        ctot = seg[-1]
+        # per-flow effective retry rounds: flow override else plan-wide,
+        # clamped to ceil(N_f/C_f) — exactly-sized flows never pay for
+        # retry launches their buckets cannot use
+        rounds_f = [_flow_rounds(f, rounds) for f in flows]
+        nrounds = max(rounds_f)
         wl = max(f.lanes for f in flows) + 1          # + shared meta lane
 
         dest_all = jnp.concatenate([f.dest for f in flows])
@@ -214,81 +317,132 @@ class ExchangePlan:
         flow_id = jnp.concatenate([
             jnp.full((f.n,), fi, _I32) for fi, f in enumerate(flows)])
 
-        # ONE binning pass for every flow: composite (dest, flow) buckets
+        # ONE binning pass for every flow AND every retry round:
+        # composite (dest, flow) buckets.  Retry round r ships exactly
+        # the items with within-bucket rank in [r*C_f, (r+1)*C_f) — a
+        # pure mask over these same offsets, never a second pass.  The
+        # "exchange.bin" entry is how tests pin that invariant.
+        costs.record("exchange.bin",
+                     costs.Cost(local=int(dest_all.shape[0])))
         counts, offsets = kops.multi_bin_offsets(
             dest_all, flow_id, nprocs, nflows, valid_all, impl=impl)
         caps_arr = jnp.asarray(caps, _I32)
-        seg_arr = jnp.asarray(seg[:-1], _I32)
-        in_cap = offsets < caps_arr[flow_id]
-        ok = valid_all & in_cap
-        slot = jnp.where(ok, dest_all * ctot + seg_arr[flow_id] + offsets,
-                         nprocs * ctot).astype(_I32)   # drop sentinel
+        rounds_arr = jnp.asarray(rounds_f, _I32)
+        eff_arr = caps_arr * rounds_arr                # effective R_f*C_f
+        ok = valid_all & (offsets < eff_arr[flow_id])
 
-        # reply layout: only replying flows get a segment (compact wire)
+        # reply layout: only replying flows get a segment (compact wire);
+        # segments span the EFFECTIVE capacity so the single inverse
+        # all-to-all answers every round's arrivals at once
         replying = [fi for fi, f in enumerate(flows) if f.reply_lanes > 0]
         seg_r = {}
         ctot_r = 0
         for fi in replying:
             seg_r[fi] = ctot_r
-            ctot_r += caps[fi]
+            ctot_r += caps[fi] * rounds_f[fi]
 
-        send = jnp.zeros((nprocs * ctot, wl), _U32)
+        # wire bodies and requester-local slot maps are built ONCE;
+        # retry rounds reuse them with different slot masks
+        bodies = []
         send_items, send_occs = [], []
         row0 = 0
         for fi, f in enumerate(flows):
-            sl = slot[row0:row0 + f.n]
             meta = jnp.where(f.valid,
                              _VALID_BIT | jnp.arange(f.n, dtype=_U32), 0)
             body = f.payload
             if f.lanes < wl - 1:
                 body = jnp.concatenate(
                     [body, jnp.zeros((f.n, wl - 1 - f.lanes), _U32)], axis=1)
-            body = jnp.concatenate([body, meta[:, None]], axis=1)
-            send = send.at[sl].set(body, mode="drop")
+            bodies.append(jnp.concatenate([body, meta[:, None]], axis=1))
 
             # requester-local inverse slot maps in FLOW-local coordinates
-            # (d*C_f + within-bucket rank): identical to the eager layout,
-            # so the reply path — fused segment slice or standalone
-            # ``reply()`` — resolves slots the same way either way
+            # (d*(R*C_f) + within-bucket rank): identical to the eager
+            # layout at capacity R*C_f, so the reply path — fused segment
+            # slice or standalone ``reply()`` — resolves slots the same
+            # way either way
+            cap_e = rounds_f[fi] * f.capacity
             okf = ok[row0:row0 + f.n]
             sl_f = jnp.where(okf,
-                             f.dest * f.capacity + offsets[row0:row0 + f.n],
-                             nprocs * f.capacity).astype(_I32)
-            send_items.append(jnp.full((nprocs * f.capacity,), f.n, _I32)
+                             f.dest * cap_e + offsets[row0:row0 + f.n],
+                             nprocs * cap_e).astype(_I32)
+            send_items.append(jnp.full((nprocs * cap_e,), f.n, _I32)
                               .at[sl_f].set(jnp.arange(f.n, dtype=_I32),
                                             mode="drop"))
-            send_occs.append(jnp.zeros((nprocs * f.capacity,), bool)
+            send_occs.append(jnp.zeros((nprocs * cap_e,), bool)
                              .at[sl_f].set(jnp.ones((f.n,), bool),
                                            mode="drop"))
             row0 += f.n
+        body_all = jnp.concatenate(bodies, axis=0)
 
-        recv = backend.all_to_all(send)
+        # round r's all-to-all carries only the flows still retrying at
+        # r, each in its own segment of this round's (narrower) wire;
+        # slots are taken by the items whose rank lands in the round's
+        # capacity window
+        recvs, segs_by_round = [], []
+        for r in range(nrounds):
+            seg_map = {}
+            c_r = 0
+            for fi in range(nflows):
+                if rounds_f[fi] > r:
+                    seg_map[fi] = c_r
+                    c_r += caps[fi]
+            seg_round = jnp.asarray(
+                [seg_map.get(fi, 0) for fi in range(nflows)], _I32)
+            off_r = offsets - r * caps_arr[flow_id]
+            in_r = (valid_all & (rounds_arr[flow_id] > r)
+                    & (off_r >= 0) & (off_r < caps_arr[flow_id]))
+            slot_r = jnp.where(
+                in_r, dest_all * c_r + seg_round[flow_id] + off_r,
+                nprocs * c_r).astype(_I32)             # drop sentinel
+            send = jnp.zeros((nprocs * c_r, wl), _U32).at[slot_r].set(
+                body_all, mode="drop")
+            recvs.append(backend.all_to_all(send).reshape(nprocs, c_r, wl))
+            segs_by_round.append(seg_map)
 
-        # one psum covers every flow's overflow accounting
-        over = jnp.maximum(counts - caps_arr[None, :], 0).sum(0)   # (F,)
+        # one psum covers every flow's overflow accounting; only rank
+        # >= R_f*C_f is a drop — earlier overflow was carried to a retry
+        over = jnp.maximum(counts - eff_arr[None, :], 0).sum(0)   # (F,)
         dropped = backend.psum(over).astype(_I32)
 
-        r3 = recv.reshape(nprocs, ctot, wl)
         views = []
         for fi, f in enumerate(flows):
-            segment = r3[:, seg[fi]:seg[fi] + f.capacity, :]
-            pay = segment[..., :f.lanes].reshape(nprocs * f.capacity, f.lanes)
-            meta_r = segment[..., wl - 1].reshape(-1)
+            cap_e = rounds_f[fi] * f.capacity
+            # rounds concatenate per source: owner row s*(R*C_f) + o holds
+            # the rank-o arrival from rank s, exactly the single-round
+            # layout at capacity R*C_f
+            parts = [recvs[r][:, segs_by_round[r][fi]:
+                              segs_by_round[r][fi] + f.capacity, :]
+                     for r in range(rounds_f[fi])]
+            segment = jnp.stack(parts, axis=1).reshape(nprocs * cap_e, wl)
+            pay = segment[:, :f.lanes]
+            meta_r = segment[:, wl - 1]
             out_valid = (meta_r & _VALID_BIT) != 0
             out_src_pos = (meta_r & _POS_MASK).astype(_I32)
-            src_rank = jnp.repeat(jnp.arange(nprocs, dtype=_I32), f.capacity)
+            src_rank = jnp.repeat(jnp.arange(nprocs, dtype=_I32), cap_e)
             views.append(RouteResult(pay, out_valid, src_rank, out_src_pos,
-                                     dropped[fi], f.capacity,
+                                     dropped[fi], cap_e,
                                      send_items[fi], send_occs[fi]))
 
         # cost attribution: per-flow wire-segment share; the physical
-        # collective and its round once, under the plan's op name
+        # collective and its round once per launch, under the plan's op
+        # name — retry launches land under "<op>.retry" so skew tolerance
+        # is priced separately from the base round
         plan_op = self.name or flows[0].op_name
-        for f in flows:
+        for fi, f in enumerate(flows):
             fb = nprocs * f.capacity * wl * 4
             costs.record(f.op_name, costs.Cost(
                 bytes_moved=fb, bytes_out=fb))
+            if rounds_f[fi] > 1:
+                rb = fb * (rounds_f[fi] - 1)
+                costs.record(f"{f.op_name}.retry", costs.Cost(
+                    bytes_moved=rb, bytes_out=rb))
         costs.record(plan_op, costs.Cost(collectives=1, rounds=1))
+        for _ in range(nrounds - 1):
+            costs.record(f"{plan_op}.retry",
+                         costs.Cost(collectives=1, rounds=1))
+
+        if overflow == "raise-in-test":
+            _raise_on_drops(flows, dropped)
 
         return CommittedPlan(self, views, sequential=False, ctot_r=ctot_r,
                              seg_r=seg_r)
@@ -311,6 +465,22 @@ class CommittedPlan:
     def view(self, handle: int) -> RouteResult:
         """Owner-side view of one flow (same layout as eager ``route``)."""
         return self._views[handle]
+
+    def leftover(self, handle: int) -> tuple[jax.Array, jax.Array]:
+        """Requester-side overflow carry for one flow.
+
+        Returns ``(payload, mask)`` in the flow's ORIGINAL batch
+        coordinates: ``mask[i]`` is True iff item i was valid but never
+        shipped (its within-bucket rank fell beyond every round's
+        capacity window).  The ``overflow="carry"`` contract: the caller
+        re-injects exactly these rows next cycle — the static-shape
+        analogue of re-inserting a failed fetch-and-add, which
+        ``hashmap_buffer.flush`` uses to make spills lossless.  Derived
+        from purely local state (the commit-time send maps), so it costs
+        zero collectives and works on fused and FINE schedules alike.
+        """
+        f = self._plan._flows[handle]
+        return f.payload, carry_mask(self._views[handle], f.valid)
 
     def set_reply(self, handle: int, rows: jax.Array) -> None:
         """Stage per-request replies for one flow.
@@ -367,11 +537,11 @@ class CommittedPlan:
         for fi in replying:
             f = flows[fi]
             view = self._views[fi]
+            cap = view.capacity          # effective R*C_f (retry rounds)
             rows = jnp.where(view.valid[:, None], self._replies[fi], 0)
             # owner arrival row s*C_f + j  ->  reply row s*ctot_r + seg + j
-            ar = jnp.arange(nprocs * f.capacity, dtype=_I32)
-            idx = (ar // f.capacity) * ctot_r + self._seg_r[fi] \
-                + (ar % f.capacity)
+            ar = jnp.arange(nprocs * cap, dtype=_I32)
+            idx = (ar // cap) * ctot_r + self._seg_r[fi] + (ar % cap)
             send = send.at[idx, :f.reply_lanes].set(rows)
 
         back = backend.all_to_all(send)
@@ -384,8 +554,9 @@ class CommittedPlan:
         for fi in replying:
             f = flows[fi]
             view = self._views[fi]
-            seg = back3[:, self._seg_r[fi]:self._seg_r[fi] + f.capacity, :]
-            seg = seg.reshape(nprocs * f.capacity, wr)
+            cap = view.capacity
+            seg = back3[:, self._seg_r[fi]:self._seg_r[fi] + cap, :]
+            seg = seg.reshape(nprocs * cap, wr)
             item = jnp.where(view.send_occ, view.send_item, f.n)
             out = jnp.zeros((f.n, wr), _U32).at[item].set(seg, mode="drop")
             answered = jnp.zeros((f.n,), bool).at[item].set(
@@ -394,11 +565,39 @@ class CommittedPlan:
 
         plan_op = self._plan.name or flows[0].op_name
         for fi in replying:
-            fb = nprocs * flows[fi].capacity * wr * 4
+            fb = nprocs * self._views[fi].capacity * wr * 4
             costs.record(flows[fi].op_name, costs.Cost(
                 bytes_moved=fb, bytes_in=fb))
         costs.record(plan_op, costs.Cost(collectives=1, rounds=1))
         return outs
+
+
+def carry_mask(req: RouteResult, valid: jax.Array) -> jax.Array:
+    """Items of the ORIGINAL batch that were valid but never shipped.
+
+    Requester-local: recovered from the route's commit-time send maps
+    (an item shipped iff it owns a send slot), so it needs no extra
+    collective.  ``route(..., capacity=C, max_rounds=R)`` marks exactly
+    the items with within-bucket rank >= R*C — the rows an
+    ``overflow="carry"`` caller re-injects next cycle.
+    """
+    n = valid.shape[0]
+    shipped = jnp.zeros((n,), bool).at[
+        jnp.where(req.send_occ, req.send_item, n)].set(
+        jnp.ones_like(req.send_occ), mode="drop")
+    return valid & ~shipped
+
+
+def _raise_on_drops(flows: list[_Flow], dropped: jax.Array) -> None:
+    """``overflow="raise-in-test"``: raise on any concrete drop count."""
+    if isinstance(dropped, jax.core.Tracer):
+        return          # traced: counts unknowable here; policy degrades
+    for fi, f in enumerate(flows):
+        if int(dropped[fi]) > 0:
+            raise ExchangeOverflowError(
+                f"flow '{f.op_name}' dropped {int(dropped[fi])} item(s) "
+                f"for capacity overflow (capacity={f.capacity}); raise "
+                f"capacity or max_rounds, or use overflow='carry'")
 
 
 def route(backend: Backend,
@@ -407,7 +606,9 @@ def route(backend: Backend,
           capacity: int,
           valid: jax.Array | None = None,
           op_name: str = "route",
-          impl: str = "auto") -> RouteResult:
+          impl: str = "auto",
+          max_rounds: int = 1,
+          overflow: str = "drop") -> RouteResult:
     """Send each row of ``payload`` to rank ``dest[i]``; return owner view.
 
     Thin eager wrapper: a single-flow :class:`ExchangePlan`, committed
@@ -420,10 +621,18 @@ def route(backend: Backend,
     valid:   (N,) bool mask (default all valid)
     impl:    kernel dispatch for send-buffer construction
              (kops.multi_bin_offsets)
+    max_rounds: carryover retry rounds R — the result is bit-identical
+             to a single round at capacity R*C (only the cost accounting
+             differs: R all-to-all launches off ONE binning pass).
+             Clamped to ceil(N/C), past which a round can't ship
+             anything new
+    overflow: residual policy beyond rank R*C — "drop" | "raise-in-test"
+             | "carry" (pair with :func:`carry_mask` on the result)
     """
     plan = ExchangePlan(name=op_name)
     h = plan.add(payload, dest, capacity, valid=valid, op_name=op_name)
-    return plan._commit_fused(backend, impl).view(h)
+    return plan.commit(backend, impl=impl, max_rounds=max_rounds,
+                       overflow=overflow).view(h)
 
 
 def reply(backend: Backend,

@@ -33,6 +33,15 @@ class DedupSpec:
     nbits: int = 1 << 22
     table_capacity: int = 1 << 16
     dup_threshold: float = 0.5      # duplicate if > this frac seen before
+    max_rounds: int = 1             # exchange carryover retry rounds.
+    #                                 Dedup traffic must be lossless, so
+    #                                 per-round wire capacity is sized
+    #                                 ceil(m / max_rounds): rounds x cap
+    #                                 always covers the batch, and R > 1
+    #                                 trades extra all-to-all launches
+    #                                 for 1/R the per-round wire footprint
+    #                                 (the win when shingle hashing skews
+    #                                 traffic onto few owner ranks)
 
 
 class Deduper:
@@ -65,6 +74,11 @@ class Deduper:
         flat = {k: v.reshape(-1) for k, v in sh.items()}
         return flat, tokens.shape[0], sh["hi"].shape[1]
 
+    def _cap(self, m: int) -> int:
+        """Per-round wire capacity: rounds x cap >= m keeps every
+        exchange lossless while R > 1 shrinks each launch R-fold."""
+        return max(1, -(-m // self.spec.max_rounds))
+
     def _count_seen(self, flat: dict, m: int, seen, b: int, n_sh: int):
         """Shared ingest tail: count repeated shingles, rate the docs.
 
@@ -74,8 +88,10 @@ class Deduper:
         on this one implementation so their semantics cannot diverge.
         """
         self.hstate, _ = hm.insert(self.backend, self.hspec, self.hstate,
-                                   flat, jnp.ones((m,), _U32), capacity=m,
-                                   valid=seen, mode=MODE_ADD, attempts=3)
+                                   flat, jnp.ones((m,), _U32),
+                                   capacity=self._cap(m),
+                                   valid=seen, mode=MODE_ADD, attempts=3,
+                                   max_rounds=self.spec.max_rounds)
         dup_frac = np.asarray(seen).reshape(b, n_sh).mean(axis=1)
         return dup_frac, dup_frac > self.spec.dup_threshold
 
@@ -88,7 +104,8 @@ class Deduper:
         flat, b, n_sh = self._flat_shingles(tokens)
         m = b * n_sh
         self.bstate, seen = bl.insert(self.backend, self.bspec, self.bstate,
-                                      flat, capacity=m)
+                                      flat, capacity=self._cap(m),
+                                      max_rounds=self.spec.max_rounds)
         return self._count_seen(flat, m, seen, b, n_sh)
 
     def observe_and_probe(self, tokens: np.ndarray, probe_tokens: np.ndarray):
@@ -110,7 +127,8 @@ class Deduper:
 
         self.bstate, seen, probed = bl.insert_find(
             self.backend, self.bspec, self.bstate, flat, flatp,
-            capacity_ins=m, capacity_find=mp)
+            capacity_ins=self._cap(m), capacity_find=self._cap(mp),
+            max_rounds=self.spec.max_rounds)
         dup_frac, is_dup = self._count_seen(flat, m, seen, b, n_sh)
         probe_frac = np.asarray(probed).reshape(bp, -1).mean(axis=1)
         return dup_frac, is_dup, probe_frac
@@ -121,6 +139,8 @@ class Deduper:
         flat = {k: v.reshape(-1) for k, v in sh.items()}
         m = flat["hi"].shape[0]
         self.hstate, v, found = hm.find(self.backend, self.hspec,
-                                        self.hstate, flat, capacity=m)
+                                        self.hstate, flat,
+                                        capacity=self._cap(m),
+                                        max_rounds=self.spec.max_rounds)
         counts = np.where(np.asarray(found), np.asarray(v) + 1, 1)
         return counts.reshape(tokens.shape[0], -1)

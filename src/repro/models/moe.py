@@ -124,10 +124,12 @@ def _stats_flow(plan: ExchangePlan, e: int, e_loc: int) -> int:
     token-width rows — an overhead of e_loc/token_capacity relative to
     the token segment (small: e_loc rows vs hundreds of token rows per
     owner).  A ragged per-flow lane layout would eliminate it if stats
-    flows ever grow."""
+    flows ever grow.  ``max_rounds=1``: the capacity is exact, so the
+    flow opts out of any retry rounds the token flow requests."""
     eid = jnp.arange(e, dtype=_I32)
     return plan.add((eid % e_loc).astype(_U32)[:, None], eid // e_loc,
-                    e_loc, reply_lanes=1, op_name="moe.stats")
+                    e_loc, reply_lanes=1, op_name="moe.stats",
+                    max_rounds=1)
 
 
 def _stats_reply(committed, handle: int, served: jax.Array):
@@ -206,7 +208,11 @@ def moe_apply(params, x, cfg, mesh: Mesh, axes: Axes):
         exp_owners = nm * (1.0 - (1.0 - 1.0 / nm) ** k)
         cap = max(1, int(n_tok * min(k, exp_owners) / nm
                          * cfg.moe_capacity_slack) + 1)
-        e_cap = max(1, int(n_tok * k * nm / e * cfg.moe_capacity_slack) + 1)
+        # retry rounds admit up to rounds x cap arrivals per (src,dst),
+        # so the owner-side expert bins must scale with them too or the
+        # rescued tokens would be silently zeroed at the bin stage
+        e_cap = max(1, int(n_tok * k * nm / e * cfg.moe_capacity_slack)
+                    + 1) * max(1, cfg.moe_dispatch_rounds)
         bf16 = cfg.moe_payload_dtype == "bfloat16"
         act_lanes = d // 2 if bf16 else d
 
@@ -228,7 +234,7 @@ def moe_apply(params, x, cfg, mesh: Mesh, axes: Axes):
                          reply_lanes=act_lanes, valid=first.reshape(-1),
                          op_name="moe.dispatch")
         h_st = _stats_flow(plan, e, e_loc)
-        c = plan.commit(bk)
+        c = plan.commit(bk, max_rounds=cfg.moe_dispatch_rounds)
         res = c.view(h_tok)
 
         m = res.payload.shape[0]
@@ -275,7 +281,9 @@ def moe_apply(params, x, cfg, mesh: Mesh, axes: Axes):
         bk = SpmdBackend(axes.model)
         bl, tl = xl.shape[0], xl.shape[1]
         cap = max(1, int(bl * tl * k / nm * cfg.moe_capacity_slack) + 1)
-        e_cap = max(1, int(bl * tl * k * nm / e * cfg.moe_capacity_slack) + 1)
+        # expert bins scale with retry rounds (see dispatch_dedup)
+        e_cap = max(1, int(bl * tl * k * nm / e * cfg.moe_capacity_slack)
+                    + 1) * max(1, cfg.moe_dispatch_rounds)
         xx = jnp.repeat(xl.reshape(bl * tl, d), k, axis=0)     # (n, D)
         ee = idxl.reshape(-1).astype(_I32)                      # (n,)
         dest = ee // e_loc                                      # owner rank
@@ -288,7 +296,7 @@ def moe_apply(params, x, cfg, mesh: Mesh, axes: Axes):
         h_tok = plan.add(payload, dest, cap, reply_lanes=act_lanes,
                          op_name="moe.dispatch")
         h_st = _stats_flow(plan, e, e_loc)
-        c = plan.commit(bk)
+        c = plan.commit(bk, max_rounds=cfg.moe_dispatch_rounds)
         res = c.view(h_tok)
 
         rows = _unpack_act(res.payload[:, :act_lanes], bf16)

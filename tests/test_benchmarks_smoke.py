@@ -40,6 +40,31 @@ def test_micro_fused_arms_smoke():
     assert r["cq_push_pop_fine"] > 0
 
 
+def test_micro_skew_arms_smoke(capsys):
+    """The --skew zipf arms run; the drop-mode arm loses items, the
+    retry arm loses none, and every CSV row follows the shared schema
+    (incl. the retry_rounds and dropped columns)."""
+    from benchmarks import micro_hashmap, micro_queue
+    from benchmarks.util import HEADER
+    ncols = len(HEADER.split(","))
+    rq = micro_queue.run(smoke=True, skew="zipf")
+    assert rq["fq_push_skew_drop_dropped"] > 0
+    assert rq["fq_push_skew_retry_dropped"] == 0
+    rh = micro_hashmap.run(smoke=True, skew="zipf")
+    assert rh["hashmap_insert_skew_drop_dropped"] > 0
+    assert rh["hashmap_insert_skew_retry_dropped"] == 0
+    rows = [ln for ln in capsys.readouterr().out.strip().splitlines()
+            if "," in ln]
+    assert rows, "benchmarks emitted no CSV rows"
+    for ln in rows:
+        assert len(ln.split(",")) == ncols, ln
+    skew_tags = [ln for ln in rows if "_skew_" in ln]
+    assert len(skew_tags) == 4
+    for ln in skew_tags:
+        cols = ln.split(",")
+        assert cols[6] != "" and cols[7] != "", ln     # retry_rounds,dropped
+
+
 def test_smoke_costs_pin_round_reduction():
     """The benchmark-side cost observables see the fused exchange."""
     from benchmarks.util import trace_costs

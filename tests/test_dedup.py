@@ -66,3 +66,25 @@ def test_counts_accumulate(rng):
     counts = d.count_of(doc)
     # seen 3 times: bloom ate the 1st, table counted the next 2 (+1 base)
     assert (counts >= 3).all()
+
+
+def test_retry_rounds_same_results_fraction_of_wire(rng):
+    """max_rounds=R sizes each launch at ceil(m/R) wire rows: identical
+    dedup verdicts, with extra launches buying an R-fold narrower
+    per-round footprint (rounds x capacity still covers the batch)."""
+    docs = rng.integers(0, 1000, (4, 64)).astype(np.int32)
+    again = docs.copy()
+    outs = []
+    byts = []
+    for r in (1, 4):
+        d = Deduper(get_backend(None),
+                    DedupSpec(ngram=4, dup_threshold=0.5, max_rounds=r))
+        with costs.recording() as log:
+            frac1, dup1 = d.observe(docs)
+            frac2, dup2 = d.observe(again)
+        outs.append((frac1, dup1, frac2, dup2))
+        byts.append(log.by_op("bloom.insert").bytes_out)
+    for a, b in zip(outs[0], outs[1]):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    # base-round wire share shrinks ~R-fold (retry share is separate)
+    assert byts[1] * 3 < byts[0]

@@ -17,8 +17,9 @@ def test_store_and_rget_spans():
     lengths = jnp.asarray([4, 4, 4], jnp.int32)
     st, ptrs, ok = store_local(bk, spec, st, rows, lengths)
     assert bool(ok.all())
-    got, found = rget_rows(bk, spec, st, ptrs, span=4, capacity=16)
+    got, found, dropped = rget_rows(bk, spec, st, ptrs, span=4, capacity=16)
     assert bool(found.all())
+    assert int(dropped) == 0
     assert np.array_equal(np.asarray(got).reshape(12, 2), np.asarray(rows))
 
 
@@ -30,6 +31,72 @@ def test_heap_overflow_reported():
                                jnp.asarray([16], jnp.int32))
     assert not bool(ok.any())
     assert int(st.top[0]) == 0          # failed alloc does not advance
+
+
+def test_failed_alloc_pointers_do_not_alias_live_rows():
+    """Regression: a failed store_local used to hand out in-range
+    offsets; a later rget_rows through them read OTHER records' data.
+    Failed pointers now clamp to the sentinel and read as not-found."""
+    bk = get_backend(None)
+    spec, st = heap_create(bk, 8, lanes=1)
+    live = jnp.arange(6, dtype=jnp.uint32)[:, None] + 100
+    st, live_ptrs, ok = store_local(bk, spec, st, live,
+                                    jnp.asarray([3, 3], jnp.int32))
+    assert bool(ok.all())
+    st, bad_ptrs, ok2 = store_local(
+        bk, spec, st, jnp.full((4, 1), 7, jnp.uint32),
+        jnp.asarray([4], jnp.int32))
+    assert not bool(ok2.any())
+    assert int(bad_ptrs.offset[0]) == spec.local_rows    # sentinel
+    rows, found, dropped = rget_rows(bk, spec, st, bad_ptrs, span=4,
+                                     capacity=8)
+    assert not bool(found.any())        # not another record's bytes
+    assert int(dropped) == 0            # absent, NOT wire overflow
+    assert int(np.asarray(rows).sum()) == 0
+    # live records unaffected
+    rows2, found2, _ = rget_rows(bk, spec, st, live_ptrs, span=3,
+                                 capacity=8)
+    assert bool(found2.all())
+    assert np.array_equal(np.asarray(rows2).reshape(6, 1), np.asarray(live))
+
+
+def test_short_record_at_heap_end_stays_found_with_wider_span():
+    """The documented varlen pattern (read max span, slice by stored
+    length) must not unfind a live record whose span overshoots the
+    heap end: only the BASE row decides liveness; tail rows read 0."""
+    bk = get_backend(None)
+    spec, st = heap_create(bk, 8, lanes=1)
+    rows = jnp.asarray([[11], [22], [33], [44], [55], [66], [77], [88]],
+                       jnp.uint32)
+    st, ptrs, ok = store_local(bk, spec, st, rows,
+                               jnp.asarray([6, 2], jnp.int32))
+    assert bool(ok.all())
+    got, found, dropped = rget_rows(bk, spec, st, ptrs, span=4, capacity=32)
+    assert bool(found.all())            # record 1 (offset 6, len 2) lives
+    assert int(dropped) == 0
+    assert np.asarray(got)[1, :2, 0].tolist() == [77, 88]
+    assert np.asarray(got)[1, 2:, 0].tolist() == [0, 0]   # overshoot -> 0
+
+
+def test_rget_distinguishes_overflow_from_absent():
+    """Regression: route overflow used to surface as a silent
+    found=False.  The dropped count now separates the two, and retry
+    rounds recover the reads without raising ``capacity``."""
+    bk = get_backend(None)
+    spec, st = heap_create(bk, 64, lanes=1)
+    rows = jnp.arange(16, dtype=jnp.uint32)[:, None]
+    st, ptrs, ok = store_local(bk, spec, st, rows,
+                               jnp.full((8,), 2, jnp.int32))
+    assert bool(ok.all())
+    # capacity admits half the 8*2 unit row-requests
+    got, found, dropped = rget_rows(bk, spec, st, ptrs, span=2, capacity=4)
+    assert int(dropped) == 8
+    assert not bool(found.all())        # wire overflow, flagged as such
+    got2, found2, dropped2 = rget_rows(bk, spec, st, ptrs, span=2,
+                                       capacity=4, max_rounds=2)
+    assert int(dropped2) == 0
+    assert bool(found2.all())
+    assert np.array_equal(np.asarray(got2).reshape(16, 1), np.asarray(rows))
 
 
 def test_varlen_strings_behind_hashmap():

@@ -109,6 +109,23 @@ def test_route_multiset_preserved(dests, ncopies):
     assert got == sorted(np.asarray(pay).tolist())
 
 
+@given(st.lists(st.integers(0, 1 << 20), min_size=1, max_size=60),
+       st.integers(1, 4))
+@settings(max_examples=20, deadline=None)
+def test_route_retry_rounds_preserve_multiset(vals, rounds):
+    """Property: whenever rounds x capacity covers the hottest bucket,
+    carryover retries make routing lossless at any per-round capacity."""
+    bk = get_backend(None)
+    n = len(vals)
+    cap = max(1, -(-n // rounds))
+    pay = jnp.asarray(vals, jnp.uint32)
+    res = route(bk, pay, jnp.zeros(n, jnp.int32), capacity=cap,
+                max_rounds=rounds)
+    got = sorted(np.asarray(res.payload[res.valid][:, 0]).tolist())
+    assert got == sorted(vals)
+    assert int(res.dropped) == 0
+
+
 def _tree_equal(a, b):
     if isinstance(a, (tuple, list)):
         return len(a) == len(b) and all(_tree_equal(x, y)
@@ -121,9 +138,10 @@ def _tree_equal(a, b):
 def test_fused_plan_interleavings_match_fine_schedule(data):
     """Any interleaving of fused-plan ops is bit-identical to the
     Promise.FINE sequential schedule — outputs AND container state —
-    over random keys, values, and capacities (including the overflow
-    regime: the same per-flow binning drops the same items on both
-    schedules).  The 8-rank version of this check, with random dests,
+    over random keys, values, capacities, AND carryover retry rounds
+    (including the overflow regime: the same per-flow binning drops the
+    same items on both schedules, and each retry round ships the same
+    rank window).  The 8-rank version of this check, with random dests,
     runs in tests/spmd_check.py."""
     ops_seq = []
     for _ in range(data.draw(st.integers(1, 4), label="n_ops")):
@@ -131,11 +149,12 @@ def test_fused_plan_interleavings_match_fine_schedule(data):
             ["find_insert", "push_pop", "bloom_insert_find"]), label="kind")
         n = data.draw(st.integers(1, 24), label="n")
         cap = data.draw(st.integers(max(1, n // 2), n + 8), label="cap")
+        rounds = data.draw(st.integers(1, 3), label="rounds")
         a = data.draw(st.lists(st.integers(0, 300), min_size=n, max_size=n),
                       label="a")
         b = data.draw(st.lists(st.integers(0, 300), min_size=n, max_size=n),
                       label="b")
-        ops_seq.append((kind, cap, a, b))
+        ops_seq.append((kind, cap, rounds, a, b))
 
     def run(fine):
         bk = get_backend(None)
@@ -146,23 +165,26 @@ def test_fused_plan_interleavings_match_fine_schedule(data):
                                     circular=True)
         bspec, bst = bl.bloom_create(bk, 1 << 10, SDS((), jnp.uint32), k=4)
         outs = []
-        for kind, cap, a, b in ops_seq:
+        for kind, cap, rounds, a, b in ops_seq:
             av = jnp.asarray(a, jnp.uint32)
             bv = jnp.asarray(b, jnp.uint32)
             if kind == "find_insert":
                 hst, v, f, ok = hm.find_insert(
                     bk, spec, hst, av, bv, bv * 7 + 1, capacity=cap,
-                    promise=Promise.FIND | Promise.INSERT | extra)
+                    promise=Promise.FIND | Promise.INSERT | extra,
+                    max_rounds=rounds)
                 outs.append((v, f, ok))
             elif kind == "push_pop":
                 qst, pushed, dropped, out, got = q.push_pop(
                     bk, qspec, qst, av, jnp.zeros(len(a), jnp.int32),
                     cap, len(b), 0,
-                    promise=Promise.PUSH | Promise.POP | extra)
+                    promise=Promise.PUSH | Promise.POP | extra,
+                    max_rounds=rounds)
                 outs.append((pushed, dropped, out, got))
             else:
                 bst, already, present = bl.insert_find(
-                    bk, bspec, bst, av, bv, cap, cap, promise=extra)
+                    bk, bspec, bst, av, bv, cap, cap, promise=extra,
+                    max_rounds=rounds)
                 outs.append((already, present))
         return outs, (tuple(hst), tuple(qst), tuple(bst))
 

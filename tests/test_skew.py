@@ -1,0 +1,326 @@
+"""Lossless exchange under skew: carryover retry rounds (DESIGN.md §1.6).
+
+Serial-backend regime: all-to-one destinations are the maximal
+destination skew (every item lands in ONE (src,dst) bucket), and
+multi-flow plans realize zipf-skewed per-bucket loads across the
+composite (dest, flow) buckets.  The 8-rank zipf-*destination* version
+— real skewed all-to-alls over a mesh axis — runs in spmd_check.py
+(``exchange.zipf_retry_lossless``).
+
+The acceptance pins live here: skewed ``queue.push`` / ``hashmap.insert``
+at mean-load capacity reach ZERO drops with ``max_rounds > 1`` while the
+drop-mode run loses items, and the retry path launches extra all-to-alls
+but NO additional ``multi_bin_offsets`` pass.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import ShapeDtypeStruct as SDS
+
+from repro.core import (ExchangeOverflowError, ExchangePlan, Promise,
+                        carry_mask, costs, get_backend, route)
+from repro.containers import hashmap as hm
+from repro.containers import hashmap_buffer as hb
+from repro.containers import queue as q
+
+
+def _zipf_sizes(nflows: int, total: int, s: float = 1.2) -> list[int]:
+    """Deterministic zipf-ish load split: flow f gets ~ total/(f+1)^s."""
+    w = np.array([1.0 / (f + 1) ** s for f in range(nflows)])
+    sizes = np.maximum((w / w.sum() * total).astype(int), 1)
+    sizes[0] += total - sizes.sum()
+    return sizes.tolist()
+
+
+# ---------------------------------------------------------------------------
+# engine-level semantics
+# ---------------------------------------------------------------------------
+
+def test_retry_rounds_equal_single_round_at_wider_capacity():
+    """route(C, max_rounds=R) is bit-identical to route(R*C): the rounds
+    concatenate into the same owner layout; only the launch count (and
+    its cost attribution) differs."""
+    bk = get_backend(None)
+    rng = np.random.default_rng(3)
+    pay = jnp.asarray(rng.integers(0, 1 << 30, (50, 2)), jnp.uint32)
+    dest = jnp.zeros(50, jnp.int32)
+    valid = jnp.asarray(rng.random(50) < 0.8)
+    wide = route(bk, pay, dest, capacity=36, valid=valid)
+    rr = route(bk, pay, dest, capacity=12, valid=valid, max_rounds=3)
+    assert rr.capacity == wide.capacity == 36
+    for a, b in zip(wide, rr):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_zipf_flow_loads_fused_equals_fine_with_retries():
+    """Zipf-skewed per-bucket loads (one flow per bucket): the fused
+    retry schedule matches the Promise.FINE sequential oracle on views,
+    replies, and per-flow drop counts, with and without retries."""
+    bk = get_backend(None)
+    rng = np.random.default_rng(11)
+    sizes = _zipf_sizes(5, 120)
+    cap = int(np.ceil(np.mean(sizes)))          # mean-load capacity
+    pays = [jnp.asarray(rng.integers(0, 1 << 28, (n,)), jnp.uint32)
+            for n in sizes]
+
+    def run(promise, max_rounds):
+        plan = ExchangePlan(promise=promise, name="zipf")
+        hs = [plan.add(p, jnp.zeros(p.shape[0], jnp.int32), cap,
+                       reply_lanes=1, op_name=f"f{i}")
+              for i, p in enumerate(pays)]
+        c = plan.commit(bk, max_rounds=max_rounds)
+        for h in hs:
+            c.set_reply(h, c.view(h).payload[:, 0] * 2 + 1)
+        outs = c.finish(bk)
+        return ([c.view(h) for h in hs], [outs[h] for h in hs])
+
+    for r in (1, 3):
+        vf, of = run(Promise.NONE, r)
+        vs, os_ = run(Promise.FINE, r)
+        for (a, b) in zip(vf, vs):
+            for x, y in zip(a, b):
+                assert np.array_equal(np.asarray(x), np.asarray(y))
+        for (a, b) in zip(of, os_):
+            assert np.array_equal(np.asarray(a[0]), np.asarray(b[0]))
+            assert np.array_equal(np.asarray(a[1]), np.asarray(b[1]))
+    # hot flow overflows mean-load capacity without retries, not with
+    v1, _ = run(Promise.NONE, 1)
+    v3, _ = run(Promise.NONE, 3)
+    assert int(v1[0].dropped) > 0
+    assert sum(int(v.dropped) for v in v3) == 0
+
+
+def test_carry_leftover_reinjection_is_lossless():
+    """overflow="carry": leftover(h) marks exactly the unshipped items;
+    re-injecting them through a second plan recovers every item once."""
+    bk = get_backend(None)
+    pay = jnp.arange(40, dtype=jnp.uint32) + 1
+    dest = jnp.zeros(40, jnp.int32)
+    plan = ExchangePlan(name="c")
+    h = plan.add(pay, dest, 8, op_name="c")
+    c = plan.commit(bk, max_rounds=2, overflow="carry")
+    left_pay, mask = c.leftover(h)
+    got1 = np.asarray(c.view(h).payload[c.view(h).valid][:, 0])
+    assert got1.size == 16 and int(mask.sum()) == 24
+    # shipped and leftover partition the batch
+    assert not np.intersect1d(got1, np.asarray(pay)[np.asarray(mask)]).size
+    res2 = route(bk, left_pay, dest, 8, valid=mask, max_rounds=3,
+                 overflow="carry")
+    got2 = np.asarray(res2.payload[res2.valid][:, 0])
+    assert int(res2.dropped) == 0
+    assert sorted(np.concatenate([got1, got2]).tolist()) == \
+        list(range(1, 41))
+    # carry_mask on a fully-shipped flow is empty
+    assert int(carry_mask(res2, mask).sum()) == 0
+
+
+def test_raise_in_test_policy():
+    bk = get_backend(None)
+    pay = jnp.arange(10, dtype=jnp.uint32)
+    dest = jnp.zeros(10, jnp.int32)
+    with pytest.raises(ExchangeOverflowError, match="queue.push"):
+        route(bk, pay, dest, capacity=4, op_name="queue.push",
+              overflow="raise-in-test")
+    # enough rounds -> no overflow -> no raise
+    res = route(bk, pay, dest, capacity=4, max_rounds=3,
+                overflow="raise-in-test")
+    assert int(res.dropped) == 0
+
+
+# ---------------------------------------------------------------------------
+# plan validation (satellite): errors at add(), named after the flow
+# ---------------------------------------------------------------------------
+
+def test_plan_add_validates_shapes_and_capacity():
+    plan = ExchangePlan()
+    pay = jnp.zeros((8, 2), jnp.uint32)
+    with pytest.raises(ValueError, match="myop.*dest"):
+        plan.add(pay, jnp.zeros(5, jnp.int32), 8, op_name="myop")
+    with pytest.raises(ValueError, match="myop.*valid"):
+        plan.add(pay, jnp.zeros(8, jnp.int32), 8,
+                 valid=jnp.ones(3, bool), op_name="myop")
+    with pytest.raises(ValueError, match="myop.*capacity"):
+        plan.add(pay, jnp.zeros(8, jnp.int32), 0, op_name="myop")
+    with pytest.raises(ValueError, match="myop.*capacity"):
+        plan.add(pay, jnp.zeros(8, jnp.int32), -4, op_name="myop")
+    with pytest.raises(ValueError, match="myop.*payload"):
+        plan.add(jnp.zeros((2, 2, 2), jnp.uint32), jnp.zeros(8, jnp.int32),
+                 8, op_name="myop")
+    with pytest.raises(ValueError, match="myop.*reply_lanes"):
+        plan.add(pay, jnp.zeros(8, jnp.int32), 8, reply_lanes=-1,
+                 op_name="myop")
+    assert plan.add(pay, jnp.zeros(8, jnp.int32), 8, op_name="myop") == 0
+
+
+def test_commit_validates_rounds_and_policy():
+    bk = get_backend(None)
+
+    def mk():
+        plan = ExchangePlan()
+        plan.add(jnp.zeros((4, 1), jnp.uint32), jnp.zeros(4, jnp.int32), 4)
+        return plan
+
+    with pytest.raises(ValueError, match="max_rounds"):
+        mk().commit(bk, max_rounds=0)
+    with pytest.raises(ValueError, match="overflow"):
+        mk().commit(bk, overflow="retry")
+
+
+# ---------------------------------------------------------------------------
+# acceptance pins: skewed containers + cost accounting
+# ---------------------------------------------------------------------------
+
+def test_pin_skewed_queue_push_lossless_with_retries():
+    """All-to-one skew at mean-load capacity: drop-mode loses items,
+    max_rounds=4 loses none and the ring holds the full multiset."""
+    bk = get_backend(None)
+    n, vp = 96, 4                     # vp: virtual uniform peer count
+    cap = n // vp                     # mean-load capacity
+    vals = jnp.arange(n, dtype=jnp.uint32) * 3 + 1
+    dest = jnp.zeros(n, jnp.int32)    # all-to-one: the hot bucket
+    spec, st0 = q.queue_create(bk, 2 * n, SDS((), jnp.uint32))
+
+    st, pushed, dropped = q.push(bk, spec, st0, vals, dest, capacity=cap)
+    assert int(dropped) == n - cap and int(pushed) == cap    # data loss
+
+    st, pushed, dropped = q.push(bk, spec, st0, vals, dest, capacity=cap,
+                                 max_rounds=vp)
+    assert int(dropped) == 0 and int(pushed) == n            # lossless
+    rows, got = q.local_drain(spec, st)
+    assert sorted(np.asarray(rows)[np.asarray(got)].tolist()) == \
+        sorted(np.asarray(vals).tolist())
+
+
+def test_pin_skewed_hashmap_insert_lossless_with_retries():
+    """Hot-block skew (all keys owned by one rank, capacity at the
+    uniform mean): drop-mode fails inserts, retries succeed them all and
+    every value is findable."""
+    bk = get_backend(None)
+    n, vp = 64, 4
+    cap = n // vp
+    spec, st0 = hm.hashmap_create(bk, 2048, SDS((), jnp.uint32),
+                                  SDS((), jnp.uint32), block_size=16)
+    keys = jnp.arange(n, dtype=jnp.uint32) + 5
+    vals = keys * 7
+
+    st, ok = hm.insert(bk, spec, st0, keys, vals, capacity=cap, attempts=1)
+    assert int(ok.sum()) == cap                              # data loss
+
+    st, ok = hm.insert(bk, spec, st0, keys, vals, capacity=cap, attempts=1,
+                       max_rounds=vp)
+    assert bool(ok.all())                                    # lossless
+    st, v, found = hm.find(bk, spec, st, keys, capacity=cap, max_rounds=vp)
+    assert bool(found.all())
+    assert np.array_equal(np.asarray(v), np.asarray(vals))
+
+
+def test_pin_retries_launch_collectives_but_no_extra_binning():
+    """Cost accounting: max_rounds=R launches R-1 extra request
+    all-to-alls (attributed under <op>.retry) off ONE multi_bin_offsets
+    pass — never a second binning pass."""
+    bk = get_backend(None)
+    vals = jnp.arange(64, dtype=jnp.uint32)
+    dest = jnp.zeros(64, jnp.int32)
+    spec, st0 = q.queue_create(bk, 128, SDS((), jnp.uint32))
+
+    def run(rounds):
+        with costs.recording() as log:
+            q.push(bk, spec, st0, vals, dest, capacity=16,
+                   max_rounds=rounds)
+        return log
+
+    base = run(1)
+    retry = run(4)
+    nbin = lambda log: sum(1 for op, _ in log.entries if op == "exchange.bin")
+    assert nbin(base) == 1 and nbin(retry) == 1              # ONE pass
+    assert base.by_op("queue.push").collectives == 1
+    assert base.by_op("queue.push.retry").collectives == 0
+    assert retry.by_op("queue.push").collectives == 1
+    assert retry.by_op("queue.push.retry").collectives == 3  # extra launches
+    assert retry.total().rounds == 4
+    # each retry round re-ships the same wire segment width
+    assert retry.by_op("queue.push.retry").bytes_out == \
+        3 * base.by_op("queue.push").bytes_out
+
+
+def test_exact_capacity_flows_skip_retry_launches():
+    """A flow whose capacity already covers its whole batch clamps to
+    ONE launch (ceil(N/C) rounds) even on a retrying plan: queue.pop's
+    unit-request flow pays no retry wire when push_pop retries."""
+    bk = get_backend(None)
+    vals = jnp.arange(48, dtype=jnp.uint32)
+    spec, st = q.queue_create(bk, 256, SDS((), jnp.uint32), circular=True)
+    with costs.recording() as log:
+        q.push_pop(bk, spec, st, vals, jnp.zeros(48, jnp.int32), 12, 24, 0,
+                   max_rounds=4)
+    # push flow: ceil(48/12) = 4 rounds of retry wire; pop flow: exact
+    # capacity (24 requests, C=24) -> no retry bytes at all
+    assert log.by_op("queue.push.retry").bytes_out > 0
+    assert log.by_op("queue.pop.retry").bytes_out == 0
+    assert log.by_op("queue.push_pop.retry").collectives == 3
+    # and the clamp itself: rounds beyond ceil(N/C) are never launched
+    with costs.recording() as log2:
+        route(bk, vals, jnp.zeros(48, jnp.int32), capacity=24,
+              op_name="r", max_rounds=8)
+    assert log2.by_op("r.retry").collectives == 1        # ceil(48/24)-1
+
+
+def test_fused_retry_plan_equals_fine_for_containers():
+    """find_insert and push_pop with max_rounds>1: fused schedule ==
+    FINE sequential oracle under overflow-heavy all-to-one load."""
+    bk = get_backend(None)
+    rng = np.random.default_rng(9)
+    keys = jnp.asarray(rng.permutation(1 << 16)[:48], jnp.uint32)
+
+    def run(extra):
+        spec, st = hm.hashmap_create(bk, 1024, SDS((), jnp.uint32),
+                                     SDS((), jnp.uint32), block_size=16)
+        st, v, f, ok = hm.find_insert(
+            bk, spec, st, keys, keys, keys * 3, capacity=12,
+            promise=Promise.FIND | Promise.INSERT | extra, max_rounds=2)
+        qspec, qst = q.queue_create(bk, 256, SDS((), jnp.uint32),
+                                    circular=True)
+        qst, pushed, dropped, out, got = q.push_pop(
+            bk, qspec, qst, keys, jnp.zeros(48, jnp.int32), 12, 24, 0,
+            promise=Promise.PUSH | Promise.POP | extra, max_rounds=2)
+        return v, f, ok, pushed, dropped, out, got, tuple(st), tuple(qst)
+
+    fused = run(Promise.NONE)
+    fine = run(Promise.FINE)
+    for a, b in zip(fused, fine):
+        if isinstance(a, tuple):
+            for x, y in zip(a, b):
+                assert np.array_equal(np.asarray(x), np.asarray(y))
+        else:
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_buffer_flush_carry_is_lossless_across_cycles():
+    """hashmap_buffer.flush(overflow="carry"): wire leftovers re-stage
+    instead of dropping; bounded cycles drain them all."""
+    bk = get_backend(None)
+    mspec, mst = hm.hashmap_create(bk, 2048, SDS((), jnp.uint32),
+                                   SDS((), jnp.uint32), block_size=16)
+    bspec, bst = hb.create(bk, mspec, mst, queue_capacity=256,
+                           buffer_cap=64)
+    keys = jnp.arange(48, dtype=jnp.uint32) + 1
+    bst, ovf = hb.insert(bspec, bst, keys, keys * 3)
+    assert int(ovf) == 0
+    staged = []
+    for _ in range(3):
+        bst, dropped = hb.flush(bk, bspec, bst, capacity=16,
+                                overflow="carry")
+        assert int(dropped) == 0
+        staged.append(int(bst.buf_n[0]))
+    assert staged == [32, 16, 0]       # 16 shipped per cycle, none lost
+    _, v, found = hm.find(bk, mspec, bst.map, keys, capacity=48)
+    assert bool(found.all())
+    assert np.array_equal(np.asarray(v), np.asarray(keys) * 3)
+    # retry rounds collapse the cycles: one flush drains everything
+    bspec2, bst2 = hb.create(bk, mspec, mst, queue_capacity=256,
+                             buffer_cap=64)
+    bst2, _ = hb.insert(bspec2, bst2, keys, keys * 3)
+    bst2, dropped = hb.flush(bk, bspec2, bst2, capacity=16,
+                             overflow="carry", max_rounds=3)
+    assert int(dropped) == 0 and int(bst2.buf_n[0]) == 0
