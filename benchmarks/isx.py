@@ -4,6 +4,12 @@ Measures keys/second through distribute(queue push with aggregation) +
 local sort, sweeping the aggregation message size — the paper's central
 claim is that aggregation turns latency-bound pushes into bandwidth-
 bound ones and that larger messages amortize slow transports.
+
+The ``--skew zipf`` arm distributes zipf-sized key waves at mean-load
+wire capacity (the ISx distribution stage under a skewed key histogram):
+  isx_skew_drop     drop-mode: overflowed keys are counted data loss
+  isx_skew_retry    carryover retry rounds keep the sort lossless at
+                    the same per-round wire footprint
 """
 
 from __future__ import annotations
@@ -41,7 +47,7 @@ def bucket_sort(message_size: int, n_keys: int = N_KEYS):
     return sort_fn, st0
 
 
-def run(smoke: bool = False):
+def run(smoke: bool = False, skew: str = "none"):
     n_keys = 1 << 10 if smoke else N_KEYS
     sweep = (256,) if smoke else (256, 1024, 4096, 16384)
     check_msg = 256 if smoke else 4096
@@ -58,6 +64,41 @@ def run(smoke: bool = False):
     fn, st0 = bucket_sort(check_msg, n_keys)
     out = np.asarray(fn(st0, keys))[:n_keys]
     assert np.array_equal(out, np.sort(np.asarray(keys))), "sort wrong!"
+
+    # --- skew arm: zipf-sized waves at mean-load wire capacity ---
+    if skew == "zipf":
+        from benchmarks.util import (SKEW_PEERS as vp, bench_skew_arm,
+                                     mean_load_cap, zipf_wave_mask)
+        bk = get_backend(None)
+        waves = 8
+        wave = n_keys // waves
+        zcap = mean_load_cap(wave)      # ceil: rounds x cap covers a wave
+        valid = zipf_wave_mask(waves, wave, n_keys)
+        n_skew = int(valid.sum())
+
+        def bench_skew(rounds, tag):
+            spec, st0 = q.queue_create(bk, n_keys * 2, SDS((), jnp.uint32))
+
+            @jax.jit
+            def distribute(st, keys):
+                dest = jnp.zeros(wave, jnp.int32)
+                dropped = jnp.int32(0)
+                for i in range(waves):
+                    st, _, d = q.push(
+                        bk, spec, st, keys[i * wave:(i + 1) * wave], dest,
+                        capacity=zcap, valid=valid[i], max_rounds=rounds)
+                    dropped = dropped + d
+                bk.barrier()
+                rows, got = q.local_drain(spec, st)
+                return jnp.sort(
+                    jnp.where(got, rows, jnp.uint32(0xFFFFFFFF))), dropped
+
+            bench_skew_arm(distribute, tag, rounds, n_skew, results,
+                           st0, keys,
+                           derived="zipf waves @ mean-load capacity")
+
+        bench_skew(1, "isx_skew_drop")
+        bench_skew(vp, "isx_skew_retry")
     return results
 
 

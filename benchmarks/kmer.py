@@ -1,5 +1,11 @@
 """Paper Figure 8: k-mer counting, with and without the blocked Bloom
-filter pre-pass (the filter keeps singletons out of the hash table)."""
+filter pre-pass (the filter keeps singletons out of the hash table).
+
+The ``--skew zipf`` arm counts at mean-load wire capacity (coverage
+hotspots routinely skew k-mer traffic onto few owner ranks):
+  kmer_insert_skew_drop     drop-mode: overflowed count updates are lost
+  kmer_insert_skew_retry    carryover retry rounds land every update
+"""
 
 from __future__ import annotations
 
@@ -18,7 +24,7 @@ from repro.kernels.ops import MODE_ADD
 K = 21
 
 
-def run(smoke: bool = False):
+def run(smoke: bool = False, skew: str = "none"):
     bk = get_backend(None)
     glen = 1 << 10 if smoke else 1 << 13
     table_bits = 14 if smoke else 18
@@ -64,6 +70,28 @@ def run(smoke: bool = False):
     emit("kmer_bloom", results["kmer_bloom"],
          f"{n/t_bloom/1e6:.2f}Mkmer/s occ={occ_bloom} "
          f"mem_saved={1-occ_bloom/max(occ_plain,1):.0%}")
+
+    # --- skew arm: counting at mean-load wire capacity ---
+    if skew == "zipf":
+        from benchmarks.util import (SKEW_PEERS as vp, bench_skew_arm,
+                                     mean_load_cap)
+        zcap = mean_load_cap(n)      # ceil: rounds x cap covers n
+
+        def bench_skew(rounds, tag):
+            @jax.jit
+            def count_skew(items):
+                spec, st = hm.hashmap_create(bk, 1 << table_bits, kspec,
+                                             SDS((), jnp.uint32),
+                                             block_size=64)
+                st, ok = hm.insert(bk, spec, st, items, ones, capacity=zcap,
+                                   mode=MODE_ADD, attempts=1,
+                                   max_rounds=rounds)
+                return st, n - ok.sum().astype(jnp.int32)
+
+            bench_skew_arm(count_skew, tag, rounds, n, results, items)
+
+        bench_skew(1, "kmer_insert_skew_drop")
+        bench_skew(vp, "kmer_insert_skew_retry")
     return results
 
 

@@ -9,6 +9,13 @@ Reported as k-mers/s per phase; the BCL claims under test are that the
 buffered build beats direct atomic insertion and that the relaxed
 traversal beats atomic finds (benchmarks/micro_hashmap.py isolates the
 per-op ratios; this one shows them inside the real pipeline).
+
+The ``--skew zipf`` arm runs the buffered build's flush at mean-load
+wire capacity:
+  meraculous_build_skew_drop    drop-mode: spilled k-mers past capacity
+                                are counted data loss
+  meraculous_build_skew_retry   carryover retry rounds make the one-shot
+                                flush lossless
 """
 
 from __future__ import annotations
@@ -27,7 +34,7 @@ from repro.data.genomics import extract_kmers, pack_kmers
 K = 15
 
 
-def run(smoke: bool = False):
+def run(smoke: bool = False, skew: str = "none"):
     bk = get_backend(None)
     rng = np.random.default_rng(4)
     genome = rng.integers(0, 4, 1 << 10 if smoke else 1 << 13).astype(np.uint8)
@@ -99,8 +106,36 @@ def run(smoke: bool = False):
          f"speedup={t_direct/t_buf:.2f}x")
     emit("meraculous_traverse", t_walk / (n_walks * steps) * 1e6,
          f"extended={walked}")
-    return {"build_direct": t_direct, "build_buffered": t_buf,
-            "traverse": t_walk}
+    results = {"build_direct": t_direct, "build_buffered": t_buf,
+               "traverse": t_walk}
+
+    # --- skew arm: buffered flush at mean-load wire capacity ---
+    if skew == "zipf":
+        from benchmarks.util import (SKEW_PEERS as vp, bench_skew_arm,
+                                     mean_load_cap)
+        zcap = mean_load_cap(n)      # ceil: rounds x cap covers n
+
+        def bench_skew(rounds, tag):
+            @jax.jit
+            def build_skew(keys, vals):
+                # roomier table than the timing arms: the pin isolates
+                # WIRE loss, so attempt-0 block overflow must stay out
+                spec2, st2 = hm.hashmap_create(
+                    bk, 1 << (14 if smoke else 17), kspec,
+                    SDS((), jnp.uint32), block_size=128)
+                bspec, bst = hb.create(bk, spec2, st2, queue_capacity=2 * n,
+                                       buffer_cap=2 * n)
+                bst, _ = hb.insert(bspec, bst, keys, vals)
+                bst, dropped = hb.flush(bk, bspec, bst, capacity=zcap,
+                                        max_rounds=rounds)
+                return bst.map, dropped
+
+            bench_skew_arm(build_skew, tag, rounds, n, results,
+                           keys, next_base)
+
+        bench_skew(1, "meraculous_build_skew_drop")
+        bench_skew(vp, "meraculous_build_skew_retry")
+    return results
 
 
 if __name__ == "__main__":

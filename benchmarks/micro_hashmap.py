@@ -152,10 +152,10 @@ def run(smoke: bool = False, fused: bool = False, skew: str = "none"):
                 / (2 * n_ops) * 1e6
 
     # --- skew arm: mean-load capacity, drop-mode vs carryover retries ---
-    skew_rows = []
     if skew == "zipf":
-        from benchmarks.util import SKEW_PEERS as vp, zipf_wave_mask
-        zcap = max(1, wave // vp)
+        from benchmarks.util import (SKEW_PEERS as vp, bench_skew_arm,
+                                     mean_load_cap, zipf_wave_mask)
+        zcap = mean_load_cap(wave)
         zvalid = zipf_wave_mask(WAVES, wave, n_ops)
         n_skew = int(zvalid.sum())     # actual ops (hot waves saturate)
 
@@ -175,11 +175,9 @@ def run(smoke: bool = False, fused: bool = False, skew: str = "none"):
                     nval = nval + zvalid[i].sum().astype(jnp.int32)
                 return st, nval - okn       # failed == dropped-on-wire
 
-            obs[tag] = trace_costs(inserts, st_s, keys, vals)
-            results[tag] = time_fn(inserts, st_s, keys, vals) / n_skew * 1e6
-            _, d = inserts(st_s, keys, vals)
-            results[tag + "_dropped"] = int(d)
-            skew_rows.append((tag, rounds, int(d)))
+            bench_skew_arm(inserts, tag, rounds, n_skew, results,
+                           st_s, keys, vals,
+                           derived="zipf waves @ mean-load capacity")
 
         bench_skew(1, "hashmap_insert_skew_drop")
         bench_skew(vp, "hashmap_insert_skew_retry")
@@ -203,9 +201,6 @@ def run(smoke: bool = False, fused: bool = False, skew: str = "none"):
         emit("hashmap_find_insert_fine", results["hashmap_find_insert_fine"],
              "FINE oracle: 4 collectives",
              cost=obs["hashmap_find_insert_fine"], n_ops=2 * n_ops)
-    for tag, rounds, d in skew_rows:
-        emit(tag, results[tag], "zipf waves @ mean-load capacity",
-             cost=obs[tag], n_ops=n_skew, retry_rounds=rounds, dropped=d)
     return results
 
 

@@ -130,10 +130,10 @@ def run(smoke: bool = False, fused: bool = False, skew: str = "none"):
         pp(ConProm.CircularQueue.push_pop | Promise.FINE, "cq_push_pop_fine")
 
     # --- skew arm: mean-load capacity, drop-mode vs carryover retries ---
-    skew_rows = []
     if skew == "zipf":
-        from benchmarks.util import SKEW_PEERS as vp, zipf_wave_mask
-        zcap = max(1, wave // vp)
+        from benchmarks.util import (SKEW_PEERS as vp, bench_skew_arm,
+                                     mean_load_cap, zipf_wave_mask)
+        zcap = mean_load_cap(wave)
         valid = zipf_wave_mask(WAVES, wave, n_ops)         # (WAVES, wave)
         n_skew = int(valid.sum())      # actual ops (hot waves saturate)
 
@@ -151,12 +151,9 @@ def run(smoke: bool = False, fused: bool = False, skew: str = "none"):
                     dropped = dropped + d
                 return st, dropped
 
-            obs[tag] = trace_costs(pushes, st0, vals, dest)
-            t = time_fn(pushes, st0, vals, dest)
-            results[tag] = t / n_skew * 1e6
-            _, d = pushes(st0, vals, dest)
-            results[tag + "_dropped"] = int(d)
-            skew_rows.append((tag, rounds, int(d)))
+            bench_skew_arm(pushes, tag, rounds, n_skew, results,
+                           st0, vals, dest,
+                           derived="zipf waves @ mean-load capacity")
 
         bench_skew(1, "fq_push_skew_drop")
         bench_skew(vp, "fq_push_skew_retry")
@@ -173,9 +170,6 @@ def run(smoke: bool = False, fused: bool = False, skew: str = "none"):
         emit("cq_push_pop_fine", results["cq_push_pop_fine"],
              "FINE oracle: 3 collectives", cost=obs["cq_push_pop_fine"],
              n_ops=2 * n_ops)
-    for tag, rounds, d in skew_rows:
-        emit(tag, results[tag], "zipf waves @ mean-load capacity",
-             cost=obs[tag], n_ops=n_skew, retry_rounds=rounds, dropped=d)
     return results
 
 

@@ -42,9 +42,20 @@ def trace_costs(fn, *args, **kw):
 HEADER = ("name,us_per_call,collectives,bytes_moved,rounds,"
           "rounds_per_op,retry_rounds,dropped,derived")
 
-#: the --skew arms' virtual peer count: wave // SKEW_PEERS is the
+#: the --skew arms' virtual peer count: ceil(wave / SKEW_PEERS) is the
 #: uniform per-bucket expectation ("mean-load capacity")
 SKEW_PEERS = 4
+
+
+def mean_load_cap(n: int) -> int:
+    """Per-round wire capacity at the uniform per-peer expectation.
+
+    Ceil division, so ``SKEW_PEERS`` retry rounds always cover ``n``
+    exactly — the retry arms' losslessness pins depend on it.  Every
+    benchmark's skew arm uses THIS definition, so drop/retry rows are
+    comparable across micro and application workloads.
+    """
+    return max(1, -(-n // SKEW_PEERS))
 
 
 def zipf_wave_mask(n_waves: int, wave: int, total: int, s: float = 1.2):
@@ -59,6 +70,29 @@ def zipf_wave_mask(n_waves: int, wave: int, total: int, s: float = 1.2):
     zw = np.array([1.0 / (w + 1) ** s for w in range(n_waves)])
     sizes = np.maximum((zw / zw.sum() * total).astype(int), 1)
     return jnp.asarray(np.arange(wave)[None, :] < sizes[:, None])
+
+
+def bench_skew_arm(fn, tag: str, rounds: int, n_ops: int, results: dict,
+                   *args, derived: str = "mean-load wire capacity"):
+    """Shared ``--skew`` arm protocol: trace the cost observables on a
+    fresh jit, time the arm, read its dropped count, and emit ONE
+    schema-complete CSV row (retry_rounds + dropped columns filled).
+    ``fn(*args)`` must return ``(_, dropped)``; timings and the drop
+    count land in ``results[tag]`` / ``results[tag + "_dropped"]``.
+    One definition keeps every benchmark's skew rows on the schema that
+    tests/test_benchmarks_smoke.py pins.
+    """
+    # one call serves as cost trace, dropped-count read, AND warmup —
+    # costs record at trace time, so this must be fn's first execution
+    with costs.recording() as log:
+        out = fn(*args)
+        jax.block_until_ready(out)
+    d = int(out[-1])
+    t = time_fn(fn, *args, warmup=1, iters=3)
+    results[tag] = t / n_ops * 1e6
+    results[tag + "_dropped"] = d
+    emit(tag, results[tag], derived, cost=log.total(), n_ops=n_ops,
+         retry_rounds=rounds, dropped=d)
 
 
 def emit(name: str, us_per_call: float, derived: str = "",

@@ -129,7 +129,10 @@ def insert_find(backend: Backend, spec: BloomSpec, state: BloomState,
     The insert is serialized before the find, so the query observes this
     batch's insertions (exactly the ``Promise.FINE`` sequential order).
     Both ops' flows ride one ExchangePlan: 2 collectives where the FINE
-    schedule costs 4.  Returns ``(state, already_present, present)``.
+    schedule costs 4, at the exact sum of the standalone ops' wire
+    bytes (ragged segments, DESIGN.md section 1.5 — the 1-bit answers
+    ride 1-word reply rows).  Returns
+    ``(state, already_present, present)``.
     """
     validate(promise)
     if fine_grained(promise):

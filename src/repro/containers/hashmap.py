@@ -333,7 +333,10 @@ def find_insert(backend: Backend, spec: HashMapSpec, state: HashMapState,
     schedule serializes find-before-insert (finds observe the table as
     it was before this batch's insertions) and fuses both ops' flows
     into one ExchangePlan: **2 collectives** per round trip where the
-    ``Promise.FINE`` sequential schedule costs **4** (pinned in
+    ``Promise.FINE`` sequential schedule costs **4**, at EXACTLY the
+    sum of the two ops' standalone wire bytes — the ragged layout
+    (DESIGN.md section 1.5) keeps the narrower find rows and the 1-word
+    insert-ok replies at their own widths (both pinned in
     tests/test_wire_format.py).  Both probes use attempt 0; callers
     needing rehash attempts issue the ops separately.
 

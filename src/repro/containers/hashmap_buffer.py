@@ -106,7 +106,10 @@ def spill_flow(plan: ExchangePlan, spec: HashMapBufferSpec,
     The spill is exactly the FastQueue push it wraps, so it rides
     whatever plan the caller is committing this round — fusing the
     spill's collective with any concurrent container ops — instead of
-    demanding a round of its own.  Pair with :func:`spill_apply` after
+    demanding a round of its own, and the ragged wire (DESIGN.md
+    section 1.5) guarantees the ride is free: the spill segment costs
+    exactly its own ``Lk+Lv+1`` words per row however wide the host
+    plan's other flows are.  Pair with :func:`spill_apply` after
     ``plan.commit``.
     """
     live = jnp.arange(spec.buffer_cap, dtype=_I32) < state.buf_n[0]
@@ -127,8 +130,8 @@ def spill_apply(backend: Backend, committed: CommittedPlan, handle: int,
     The returned drop count then covers ring overflow only.
     """
     view = committed.view(handle)
-    qstate, _, full_drop = q._append(spec.queue_spec, state.queue,
-                                     view.payload, view.valid)
+    qstate, _, full_drop, _ = q._append(spec.queue_spec, state.queue,
+                                        view.payload, view.valid)
     a = q._amo_count(spec.queue_spec, ConProm.CircularQueue.push)
     costs.record("queue.push", costs.Cost(A=a, W=spec.buffer_cap))
     if overflow == "carry":

@@ -86,7 +86,8 @@ def push(backend: Backend, spec: QueueSpec, state: QueueState,
          values, dest: jax.Array, capacity: int,
          valid: jax.Array | None = None,
          promise: Promise = Promise.PUSH,
-         max_rounds: int = 1):
+         max_rounds: int = 1,
+         overflow: str = "drop"):
     """Push each value to the ring hosted on ``dest[i]``.
 
     Returns (state, pushed_here, dropped):
@@ -96,21 +97,58 @@ def push(backend: Backend, spec: QueueSpec, state: QueueState,
     ``max_rounds=R`` retries wire overflow with carryover rounds — an
     all-to-one or zipf-skewed destination pattern keeps every item as
     long as the hottest (src,dst) pair stays under R*capacity.
+
+    ``overflow="carry"`` closes the LAST loss path — ring-full rejects
+    (DESIGN.md section 1.6).  The push then declares a 1-lane reply
+    carrying the owner's per-arrival acceptance bit back over the
+    inverse all-to-all, and the return value grows to
+    ``(state, pushed_here, dropped=0, carry)``: ``carry`` marks, in the
+    ORIGINAL batch, every valid item that either never shipped (wire
+    overflow beyond all retry rounds) or shipped and was refused by a
+    full ring.  The caller re-injects exactly those rows next cycle —
+    nothing is dropped, at the price of the reply collective a
+    fire-and-forget push normally skips.  A LOCAL push honors the same
+    4-tuple contract straight from its local accept mask, with zero
+    collectives.
     """
     validate(promise)
+    if overflow not in ("drop", "carry"):
+        raise ValueError(
+            f'queue.push overflow must be "drop" or "carry", '
+            f"got {overflow!r}")
     lanes = spec.packer.pack(values)
     n = lanes.shape[0]
     if valid is None:
         valid = jnp.ones((n,), bool)
 
     if promise & Promise.LOCAL:
-        # local push: no collectives, CPU-only ring append (paper 4c)
+        # local push: no collectives, CPU-only ring append (paper 4c);
+        # carry needs no reply wire here — the accept mask IS local
         costs.record("queue.push", costs.Cost(local=n))
-        return _append(spec, state, lanes, valid)
+        state, pushed, full_drop, accept = _append(spec, state, lanes, valid)
+        if overflow == "carry":
+            return state, pushed, jnp.int32(0), valid & ~accept
+        return state, pushed, full_drop
+
+    if overflow == "carry":
+        plan = ExchangePlan(name="queue.push")
+        h = plan.add(lanes, dest, capacity, reply_lanes=1, valid=valid,
+                     op_name="queue.push")
+        c = plan.commit(backend, max_rounds=max_rounds)
+        res = c.view(h)
+        state, pushed, _, accept = _append(spec, state, res.payload,
+                                           res.valid)
+        c.set_reply(h, accept.astype(_U32))
+        out, answered = c.finish(backend)[h]
+        a = _amo_count(spec, promise)
+        costs.record("queue.push", costs.Cost(A=a, W=n))
+        landed = answered & (out[:, 0] == 1) & valid
+        return state, pushed, jnp.int32(0), valid & ~landed
 
     res = route(backend, lanes, dest, capacity, valid=valid,
                 op_name="queue.push", max_rounds=max_rounds)
-    state, pushed, full_drop = _append(spec, state, res.payload, res.valid)
+    state, pushed, full_drop, _ = _append(spec, state, res.payload,
+                                          res.valid)
     a = _amo_count(spec, promise)
     costs.record("queue.push", costs.Cost(A=a, W=n))
     dropped = res.dropped + backend.psum(full_drop)
@@ -119,7 +157,13 @@ def push(backend: Backend, spec: QueueSpec, state: QueueState,
 
 def _append(spec: QueueSpec, state: QueueState, rows: jax.Array,
             valid: jax.Array):
-    """Owner-side ring append in deterministic arrival order."""
+    """Owner-side ring append in deterministic arrival order.
+
+    Returns ``(state, n_accepted, n_rejected, accept)``; ``accept`` is
+    the per-arrival acceptance mask in wire order — exactly the rows a
+    reply-side carry (``push(overflow="carry")``) reports back so
+    ring-full rejects are re-injected instead of lost.
+    """
     pos = jnp.cumsum(valid.astype(_I32)) - valid.astype(_I32)  # exclusive
     total = valid.sum().astype(_I32)
     used = (state.tail - state.head)[0]
@@ -132,7 +176,7 @@ def _append(spec: QueueSpec, state: QueueState, rows: jax.Array,
     tail = state.tail + n_acc
     tail_ready = tail if spec.circular else state.tail_ready
     new = QueueState(data, state.head, tail, tail_ready, state.head_ready)
-    return new, n_acc, (total - n_acc)
+    return new, n_acc, (total - n_acc), accept
 
 
 def _grant(spec: QueueSpec, state: QueueState, req_valid: jax.Array,
@@ -207,7 +251,10 @@ def push_pop(backend: Backend, spec: QueueSpec, state: QueueState,
     the push before granting the pop (items pushed this round are
     poppable this round) and fuses both ops' flows into one
     ExchangePlan: 2 collectives where the ``Promise.FINE`` sequential
-    schedule costs 3 (push has no reply).  Returns
+    schedule costs 3 (push has no reply).  The ragged wire (DESIGN.md
+    section 1.5) keeps the pop's unit requests at 2 u32 words per row
+    no matter how wide the pushed values are — fusing costs exactly the
+    two ops' standalone bytes.  Returns
     ``(state, pushed, dropped, out_values, got)``.
     """
     validate(promise)
@@ -232,7 +279,7 @@ def push_pop(backend: Backend, spec: QueueSpec, state: QueueState,
     c = plan.commit(backend, max_rounds=max_rounds)
     vp, vq = c.view(hp), c.view(hq)
 
-    state, pushed, full_drop = _append(spec, state, vp.payload, vp.valid)
+    state, pushed, full_drop, _ = _append(spec, state, vp.payload, vp.valid)
     state, body = _grant(spec, state, vq.valid, promise)
     c.set_reply(hq, body)
     outs = c.finish(backend)

@@ -37,18 +37,22 @@ op that has nothing to fuse with still compiles to the same program it
 always did.
 
 Wire format (DESIGN.md section 1): payloads are u32 lane matrices (see
-object_container.py).  A plan's request buffer has, per destination
-rank, one contiguous *segment per flow* of that flow's static capacity;
-rows are ``max(flow lanes) + 1`` u32 lanes wide, the last lane being the
-single shared metadata lane — bit 31 is the valid flag and the low 31
-bits are the item's position in its flow's batch.  Replies cost
-``max(reply lanes)`` lanes and zero metadata: the owner's receive
-layout is the exact image of the requesters' send layout under the
-all-to-all, so writing replies into segment-order rows and running one
-more all-to-all is an *inverse permutation* that lands every reply back
-in the requester's original send slot.  The requester resolves slots to
-batch positions from purely local state captured at commit time; no
-binning, no argsort, and no src_pos lane in the reply direction.
+object_container.py), and the fused wire is *ragged*: per destination
+rank, the request buffer is a flat u32 word vector in which each flow
+owns one contiguous segment of exactly ``C_f * (L_f + 1)`` words — rows
+of flow f are ``L_f + 1`` words wide, the last word being the flow's
+metadata lane (bit 31 the valid flag, low 31 bits the item's position
+in its flow's batch).  No flow pays another flow's width: a plan's
+request bytes equal the SUM of its flows' single-flow ``route()``
+bytes, which is what makes fusion unconditionally profitable.  Reply
+segments are likewise exactly ``R_f`` words per row and zero metadata:
+the owner's receive layout is the exact image of the requesters' send
+layout under the all-to-all, so writing replies into segment-order
+rows and running one more all-to-all is an *inverse permutation* that
+lands every reply back in the requester's original send slot.  The
+requester resolves slots to batch positions from purely local state
+captured at commit time; no binning, no argsort, and no src_pos lane
+in the reply direction.
 
 Shapes and capacities are static; what happens beyond a flow's capacity
 is governed by the plan's ``overflow`` policy (DESIGN.md section 1.6).
@@ -80,6 +84,7 @@ import jax.numpy as jnp
 
 from repro.core import costs
 from repro.core.backend import Backend
+from repro.core.object_container import ragged_offsets, scatter_rows
 from repro.core.promises import Promise, fine_grained, validate
 from repro.kernels import ops as kops
 
@@ -189,9 +194,11 @@ class ExchangePlan:
         find_out, find_answered = outs[h_f]
 
     Cost attribution (DESIGN.md section 1.5): each flow is charged the
-    bytes of its own wire segment (its capacity x the fused lane width)
-    under its ``op_name``; the single physical collective and its round
-    are charged once, under ``name`` (default: the first flow's op).
+    EXACT bytes of its own ragged wire segment — ``P * C_f * (L_f+1) * 4``
+    out, ``P * C_f * R_f * 4`` back, identical to a single-flow
+    ``route``/``reply`` — under its ``op_name``; the single physical
+    collective and its round are charged once, under ``name`` (default:
+    the first flow's op).
 
     A plan constructed with ``promise=Promise.FINE`` lowers to the
     sequential one-op-per-round schedule instead (one ``route`` and one
@@ -310,7 +317,9 @@ class ExchangePlan:
         # retry launches their buckets cannot use
         rounds_f = [_flow_rounds(f, rounds) for f in flows]
         nrounds = max(rounds_f)
-        wl = max(f.lanes for f in flows) + 1          # + shared meta lane
+        # ragged wire: flow f's rows are exactly L_f + 1 words (payload
+        # lanes + its own metadata lane) — no cross-flow padding
+        roww = [f.lanes + 1 for f in flows]
 
         dest_all = jnp.concatenate([f.dest for f in flows])
         valid_all = jnp.concatenate([f.valid for f in flows])
@@ -331,15 +340,15 @@ class ExchangePlan:
         eff_arr = caps_arr * rounds_arr                # effective R_f*C_f
         ok = valid_all & (offsets < eff_arr[flow_id])
 
-        # reply layout: only replying flows get a segment (compact wire);
-        # segments span the EFFECTIVE capacity so the single inverse
-        # all-to-all answers every round's arrivals at once
+        # reply layout: only replying flows get a word segment (compact
+        # ragged wire, exactly R_f words per row); segments span the
+        # EFFECTIVE capacity so the single inverse all-to-all answers
+        # every round's arrivals at once
         replying = [fi for fi, f in enumerate(flows) if f.reply_lanes > 0]
-        seg_r = {}
-        ctot_r = 0
-        for fi in replying:
-            seg_r[fi] = ctot_r
-            ctot_r += caps[fi] * rounds_f[fi]
+        rep_starts, wtot_rep = ragged_offsets(
+            [caps[fi] * rounds_f[fi] * flows[fi].reply_lanes
+             for fi in replying])
+        wseg_rep = dict(zip(replying, rep_starts))
 
         # wire bodies and requester-local slot maps are built ONCE;
         # retry rounds reuse them with different slot masks
@@ -349,11 +358,8 @@ class ExchangePlan:
         for fi, f in enumerate(flows):
             meta = jnp.where(f.valid,
                              _VALID_BIT | jnp.arange(f.n, dtype=_U32), 0)
-            body = f.payload
-            if f.lanes < wl - 1:
-                body = jnp.concatenate(
-                    [body, jnp.zeros((f.n, wl - 1 - f.lanes), _U32)], axis=1)
-            bodies.append(jnp.concatenate([body, meta[:, None]], axis=1))
+            bodies.append(jnp.concatenate([f.payload, meta[:, None]],
+                                          axis=1))
 
             # requester-local inverse slot maps in FLOW-local coordinates
             # (d*(R*C_f) + within-bucket rank): identical to the eager
@@ -372,32 +378,34 @@ class ExchangePlan:
                              .at[sl_f].set(jnp.ones((f.n,), bool),
                                            mode="drop"))
             row0 += f.n
-        body_all = jnp.concatenate(bodies, axis=0)
 
         # round r's all-to-all carries only the flows still retrying at
-        # r, each in its own segment of this round's (narrower) wire;
-        # slots are taken by the items whose rank lands in the round's
-        # capacity window
-        recvs, segs_by_round = [], []
+        # r, each in its own ragged word segment of this round's
+        # (narrower) wire; the kernel turns the ONE binning pass's ranks
+        # into word slots for the items whose rank lands in the round's
+        # capacity window, and each flow packs its own row width
+        roww_arr = jnp.asarray(roww, _I32)
+        recvs, woffs_by_round = [], []
         for r in range(nrounds):
-            seg_map = {}
-            c_r = 0
-            for fi in range(nflows):
+            live = [fi for fi in range(nflows) if rounds_f[fi] > r]
+            starts, w_r = ragged_offsets([caps[fi] * roww[fi]
+                                          for fi in live])
+            woff_map = dict(zip(live, starts))
+            woff_round = jnp.asarray(
+                [woff_map.get(fi, 0) for fi in range(nflows)], _I32)
+            slot_w = kops.ragged_slots(
+                dest_all, flow_id, offsets, valid_all, r, woff_round,
+                roww_arr, caps_arr, rounds_arr, w_r, nprocs * w_r,
+                impl=impl)
+            send = jnp.zeros((nprocs * w_r,), _U32)
+            row0 = 0
+            for fi, f in enumerate(flows):
                 if rounds_f[fi] > r:
-                    seg_map[fi] = c_r
-                    c_r += caps[fi]
-            seg_round = jnp.asarray(
-                [seg_map.get(fi, 0) for fi in range(nflows)], _I32)
-            off_r = offsets - r * caps_arr[flow_id]
-            in_r = (valid_all & (rounds_arr[flow_id] > r)
-                    & (off_r >= 0) & (off_r < caps_arr[flow_id]))
-            slot_r = jnp.where(
-                in_r, dest_all * c_r + seg_round[flow_id] + off_r,
-                nprocs * c_r).astype(_I32)             # drop sentinel
-            send = jnp.zeros((nprocs * c_r, wl), _U32).at[slot_r].set(
-                body_all, mode="drop")
-            recvs.append(backend.all_to_all(send).reshape(nprocs, c_r, wl))
-            segs_by_round.append(seg_map)
+                    send = scatter_rows(send, slot_w[row0:row0 + f.n],
+                                        bodies[fi])
+                row0 += f.n
+            recvs.append(backend.all_to_all(send).reshape(nprocs, w_r))
+            woffs_by_round.append(woff_map)
 
         # one psum covers every flow's overflow accounting; only rank
         # >= R_f*C_f is a drop — earlier overflow was carried to a retry
@@ -407,15 +415,18 @@ class ExchangePlan:
         views = []
         for fi, f in enumerate(flows):
             cap_e = rounds_f[fi] * f.capacity
+            w = roww[fi]
             # rounds concatenate per source: owner row s*(R*C_f) + o holds
             # the rank-o arrival from rank s, exactly the single-round
-            # layout at capacity R*C_f
-            parts = [recvs[r][:, segs_by_round[r][fi]:
-                              segs_by_round[r][fi] + f.capacity, :]
+            # layout at capacity R*C_f; the flow's word segment reshapes
+            # straight to its own (rows, L_f+1) width
+            parts = [recvs[r][:, woffs_by_round[r][fi]:
+                              woffs_by_round[r][fi] + f.capacity * w]
+                     .reshape(nprocs, f.capacity, w)
                      for r in range(rounds_f[fi])]
-            segment = jnp.stack(parts, axis=1).reshape(nprocs * cap_e, wl)
+            segment = jnp.stack(parts, axis=1).reshape(nprocs * cap_e, w)
             pay = segment[:, :f.lanes]
-            meta_r = segment[:, wl - 1]
+            meta_r = segment[:, f.lanes]
             out_valid = (meta_r & _VALID_BIT) != 0
             out_src_pos = (meta_r & _POS_MASK).astype(_I32)
             src_rank = jnp.repeat(jnp.arange(nprocs, dtype=_I32), cap_e)
@@ -423,13 +434,15 @@ class ExchangePlan:
                                      dropped[fi], cap_e,
                                      send_items[fi], send_occs[fi]))
 
-        # cost attribution: per-flow wire-segment share; the physical
-        # collective and its round once per launch, under the plan's op
-        # name — retry launches land under "<op>.retry" so skew tolerance
-        # is priced separately from the base round
+        # cost attribution: per-flow wire segments are ragged, so each
+        # flow's bytes are EXACT — its own capacity x its own row width,
+        # equal to the single-flow route() cost; the physical collective
+        # and its round once per launch, under the plan's op name —
+        # retry launches land under "<op>.retry" so skew tolerance is
+        # priced separately from the base round
         plan_op = self.name or flows[0].op_name
         for fi, f in enumerate(flows):
-            fb = nprocs * f.capacity * wl * 4
+            fb = nprocs * f.capacity * roww[fi] * 4
             costs.record(f.op_name, costs.Cost(
                 bytes_moved=fb, bytes_out=fb))
             if rounds_f[fi] > 1:
@@ -444,21 +457,21 @@ class ExchangePlan:
         if overflow == "raise-in-test":
             _raise_on_drops(flows, dropped)
 
-        return CommittedPlan(self, views, sequential=False, ctot_r=ctot_r,
-                             seg_r=seg_r)
+        return CommittedPlan(self, views, sequential=False,
+                             reply_words=wtot_rep, reply_seg=wseg_rep)
 
 
 class CommittedPlan:
     """Request round issued; owner-side views available, replies pending."""
 
     def __init__(self, plan: ExchangePlan, views: list[RouteResult],
-                 sequential: bool, ctot_r: int = 0,
-                 seg_r: dict | None = None):
+                 sequential: bool, reply_words: int = 0,
+                 reply_seg: dict | None = None):
         self._plan = plan
         self._views = views
         self._sequential = sequential
-        self._ctot_r = ctot_r
-        self._seg_r = seg_r or {}
+        self._reply_words = reply_words    # ragged reply words per block
+        self._reply_seg = reply_seg or {}  # flow -> segment's first word
         self._replies: dict[int, jax.Array] = {}
         self._finished = False
 
@@ -531,41 +544,46 @@ class CommittedPlan:
             return outs
 
         nprocs = backend.nprocs()
-        ctot_r = self._ctot_r
-        wr = max(flows[fi].reply_lanes for fi in replying)
-        send = jnp.zeros((nprocs * ctot_r, wr), _U32)
+        wtot = self._reply_words
+        send = jnp.zeros((nprocs * wtot,), _U32)
         for fi in replying:
             f = flows[fi]
             view = self._views[fi]
             cap = view.capacity          # effective R*C_f (retry rounds)
+            rl = f.reply_lanes
             rows = jnp.where(view.valid[:, None], self._replies[fi], 0)
-            # owner arrival row s*C_f + j  ->  reply row s*ctot_r + seg + j
+            # owner arrival row s*C_f + j  ->  words
+            # [s*wtot + seg_f + j*R_f, ... + R_f) — the flow's own ragged
+            # segment, exactly R_f words per reply
             ar = jnp.arange(nprocs * cap, dtype=_I32)
-            idx = (ar // cap) * ctot_r + self._seg_r[fi] + (ar % cap)
-            send = send.at[idx, :f.reply_lanes].set(rows)
+            base = (ar // cap) * wtot + self._reply_seg[fi] + (ar % cap) * rl
+            send = scatter_rows(send, base, rows)
 
         back = backend.all_to_all(send)
 
-        # the inverse all-to-all lands flow f's replies in its own
+        # the inverse all-to-all lands flow f's replies in its own word
         # segment of each source block; slicing the segment recovers the
         # flow-local slot layout, so the view's send maps resolve it
-        back3 = back.reshape(nprocs, ctot_r, wr)
+        back2 = back.reshape(nprocs, wtot)
         outs = {}
         for fi in replying:
             f = flows[fi]
             view = self._views[fi]
             cap = view.capacity
-            seg = back3[:, self._seg_r[fi]:self._seg_r[fi] + cap, :]
-            seg = seg.reshape(nprocs * cap, wr)
+            rl = f.reply_lanes
+            seg = back2[:, self._reply_seg[fi]:
+                        self._reply_seg[fi] + cap * rl]
+            seg = seg.reshape(nprocs * cap, rl)
             item = jnp.where(view.send_occ, view.send_item, f.n)
-            out = jnp.zeros((f.n, wr), _U32).at[item].set(seg, mode="drop")
+            out = jnp.zeros((f.n, rl), _U32).at[item].set(seg, mode="drop")
             answered = jnp.zeros((f.n,), bool).at[item].set(
                 view.send_occ, mode="drop")
-            outs[fi] = (out[:, :f.reply_lanes], answered)
+            outs[fi] = (out, answered)
 
         plan_op = self._plan.name or flows[0].op_name
         for fi in replying:
-            fb = nprocs * self._views[fi].capacity * wr * 4
+            fb = (nprocs * self._views[fi].capacity
+                  * flows[fi].reply_lanes * 4)
             costs.record(flows[fi].op_name, costs.Cost(
                 bytes_moved=fb, bytes_in=fb))
         costs.record(plan_op, costs.Cost(collectives=1, rounds=1))

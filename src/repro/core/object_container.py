@@ -77,6 +77,40 @@ def _from_u32(lanes: jax.Array, dtype, inner: int) -> jax.Array:
     return out
 
 
+def ragged_offsets(widths) -> tuple[list[int], int]:
+    """Word offsets of back-to-back ragged segments.
+
+    The exchange engine's fused wire is a flat u32 word buffer per
+    destination in which flow ``f`` owns a contiguous segment of
+    ``C_f * widths[f]`` words (DESIGN.md section 1.5) — the serialized
+    analogue of this module's lane matrices, with no cross-flow padding.
+    Returns ``(starts, total)`` where ``starts[f]`` is the first word of
+    segment ``f`` and ``total`` is the words per destination block.
+    Packing goes through :func:`scatter_rows`; unpacking is free — a
+    segment's rows are contiguous, so every owner view is a slice plus
+    reshape, never a gather.
+    """
+    starts, off = [], 0
+    for w in widths:
+        starts.append(off)
+        off += int(w)
+    return starts, off
+
+
+def scatter_rows(flat: jax.Array, base: jax.Array,
+                 rows: jax.Array) -> jax.Array:
+    """Pack (N, W) u32 rows into a flat word buffer at per-row offsets.
+
+    Row ``i`` lands at words ``[base[i], base[i] + W)``; a sentinel
+    ``base[i] >= flat.size`` drops the row.  This is the ragged wire's
+    serializer: rows of different flows have different widths, so each
+    flow packs with its own call instead of one rectangular scatter.
+    """
+    w = rows.shape[1]
+    idx = base[:, None] + jnp.arange(w, dtype=base.dtype)[None, :]
+    return flat.at[idx].set(rows.astype(_U32), mode="drop")
+
+
 class Packer(abc.ABC):
     """Serialize a record pytree <-> a fixed-width u32 lane matrix."""
 

@@ -112,11 +112,13 @@ class Deduper:
         """Ingest ``tokens`` while probing ``probe_tokens`` membership.
 
         The bloom insert (ingest) and bloom find (probe) are fused into
-        one ExchangePlan — one collective round trip for both ops — the
-        contamination-check pattern: observe a training batch and test
-        an eval batch against the filter in the same round.  The probe
-        observes the filter *after* this batch's insertions (identical
-        to the ``Promise.FINE`` sequential schedule).
+        one ExchangePlan — one collective round trip for both ops, at
+        exactly the sum of the two standalone ops' wire bytes (ragged
+        segments, DESIGN.md section 1.5) — the contamination-check
+        pattern: observe a training batch and test an eval batch
+        against the filter in the same round.  The probe observes the
+        filter *after* this batch's insertions (identical to the
+        ``Promise.FINE`` sequential schedule).
 
         Returns ``(dup_frac (B,), is_duplicate (B,), probe_seen_frac
         (Bp,))``.

@@ -106,6 +106,83 @@ def bin_offsets(bins: jax.Array, nbins: int, valid: jax.Array | None = None,
     return counts, offs[:m]
 
 
+def _ragged_slots_kernel(bins_ref, flow_ref, off_ref, valid_ref,
+                         woff_ref, roww_ref, caps_ref, rounds_ref,
+                         slot_ref, *, nflows: int, rnd: int, wtot: int,
+                         sentinel: int):
+    """Per-item ragged word slot off the ONE binning pass.
+
+    Flow tables (word offset, row words, capacity, rounds) are gathered
+    by flow id via a one-hot contraction (nflows is tiny), then the
+    retry-round window ``[rnd*C_f, (rnd+1)*C_f)`` masks which items ride
+    this launch — the §1.6 mask and the §1.5 ragged layout fused into
+    one elementwise pass, with no second binning.
+    """
+    bins = bins_ref[...].astype(_I32)
+    flow = flow_ref[...].astype(_I32)
+    off = off_ref[...].astype(_I32)
+    valid = valid_ref[...]
+    tm = bins.shape[0]
+    oh = (flow[:, None] ==
+          jax.lax.broadcasted_iota(_I32, (tm, nflows), 1)).astype(_I32)
+
+    def sel(tbl_ref):
+        return (oh * tbl_ref[...][None, :]).sum(axis=1)
+
+    woff_i, roww_i = sel(woff_ref), sel(roww_ref)
+    cap_i, rnds_i = sel(caps_ref), sel(rounds_ref)
+    off_r = off - rnd * cap_i
+    in_r = valid & (rnds_i > rnd) & (off_r >= 0) & (off_r < cap_i)
+    slot_ref[...] = jnp.where(in_r, bins * wtot + woff_i + off_r * roww_i,
+                              sentinel)
+
+
+def ragged_slots(bins: jax.Array, flow: jax.Array, offsets: jax.Array,
+                 valid: jax.Array, rnd: int, word_off: jax.Array,
+                 row_words: jax.Array, caps: jax.Array, rounds: jax.Array,
+                 wtot: int, sentinel: int, tile: int = 2048) -> jax.Array:
+    """Ragged send-buffer word slots for retry round ``rnd``.
+
+    Item ``i`` of flow ``f = flow[i]`` with within-(dest, flow)-bucket
+    rank ``offsets[i]`` (from :func:`bin_offsets`) starts at word
+    ``bins[i]*wtot + word_off[f] + (offsets[i] - rnd*caps[f]) *
+    row_words[f]`` of the flat fused wire iff its rank falls in round
+    ``rnd``'s capacity window and the flow is still retrying; every
+    other item gets ``sentinel`` (a drop index past the buffer).
+    Oracle: the pure-jnp gather in ``kernels/ops.py::ragged_slots``.
+    """
+    m = bins.shape[0]
+    nflows = word_off.shape[0]
+    pad = (-m) % tile
+    if pad:
+        bins = jnp.pad(bins, (0, pad))
+        flow = jnp.pad(flow, (0, pad))
+        offsets = jnp.pad(offsets, (0, pad))
+        valid = jnp.pad(valid, (0, pad))
+    mp = bins.shape[0]
+    kern = functools.partial(_ragged_slots_kernel, nflows=nflows,
+                             rnd=rnd, wtot=wtot, sentinel=sentinel)
+    full = lambda i: (0,)
+    slots = pl.pallas_call(
+        kern,
+        grid=(mp // tile,),
+        in_specs=[pl.BlockSpec((tile,), lambda i: (i,)),
+                  pl.BlockSpec((tile,), lambda i: (i,)),
+                  pl.BlockSpec((tile,), lambda i: (i,)),
+                  pl.BlockSpec((tile,), lambda i: (i,)),
+                  pl.BlockSpec((nflows,), full),
+                  pl.BlockSpec((nflows,), full),
+                  pl.BlockSpec((nflows,), full),
+                  pl.BlockSpec((nflows,), full)],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((mp,), _I32),
+        interpret=_interpret(),
+    )(bins.astype(_I32), flow.astype(_I32), offsets.astype(_I32), valid,
+      word_off.astype(_I32), row_words.astype(_I32), caps.astype(_I32),
+      rounds.astype(_I32))
+    return slots[:m]
+
+
 def histogram(bins: jax.Array, nbins: int, valid: jax.Array | None = None,
               tile: int = 2048) -> jax.Array:
     """Count items per destination bin; oracle: ref.bin_histogram_ref."""

@@ -293,6 +293,38 @@ def multi_bin_offsets(bins, flow, nbins: int, nflows: int, valid=None,
     return counts.reshape(nbins, nflows), offs
 
 
+def ragged_slots(bins, flow, offsets, valid, rnd: int, word_off, row_words,
+                 caps, rounds, wtot: int, sentinel: int, impl: str = "auto"):
+    """Ragged fused-wire word slots for retry round ``rnd``.
+
+    The ExchangePlan send buffer is a flat u32 word vector per
+    destination (DESIGN.md section 1.5): flow ``f``'s segment starts at
+    ``word_off[f]`` and its rows are exactly ``row_words[f] = L_f + 1``
+    words wide — no cross-flow padding.  This op turns the ONE
+    :func:`multi_bin_offsets` pass's within-bucket ranks into per-item
+    word slots for one launch: item i starts at ``bins[i]*wtot +
+    word_off[flow[i]] + (offsets[i] - rnd*caps[flow[i]]) *
+    row_words[flow[i]]`` iff its rank falls in round ``rnd``'s capacity
+    window ``[rnd*C_f, (rnd+1)*C_f)`` and ``rounds[flow[i]] > rnd``;
+    all other items get ``sentinel`` (an index past the buffer, dropped
+    by the scatter).  Retry rounds therefore reuse the same offsets
+    with a different ``rnd`` — never a second binning pass.
+    """
+    impl = _resolve(impl)
+    if impl == "pallas":
+        from repro.kernels import binning
+        return binning.ragged_slots(bins, flow, offsets, valid, rnd,
+                                    word_off, row_words, caps, rounds,
+                                    wtot, sentinel)
+    f = flow.astype(_I32)
+    off_r = offsets.astype(_I32) - rnd * caps[f]
+    in_r = valid & (rounds[f] > rnd) & (off_r >= 0) & (off_r < caps[f])
+    return jnp.where(in_r,
+                     bins.astype(_I32) * wtot + word_off[f]
+                     + off_r * row_words[f],
+                     sentinel).astype(_I32)
+
+
 # --------------------------------------------------------------------------
 # flash attention
 # --------------------------------------------------------------------------

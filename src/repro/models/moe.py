@@ -119,13 +119,13 @@ def _stats_flow(plan: ExchangePlan, e: int, e_loc: int) -> int:
     exact (every rank sends exactly ``e_loc`` rows per owner), so the
     flow can never drop.
 
-    Wire trade: the fused plan pads every flow to the widest flow's
-    lane count (DESIGN.md section 1.5), so this 1-lane flow ships
-    token-width rows — an overhead of e_loc/token_capacity relative to
-    the token segment (small: e_loc rows vs hundreds of token rows per
-    owner).  A ragged per-flow lane layout would eliminate it if stats
-    flows ever grow.  ``max_rounds=1``: the capacity is exact, so the
-    flow opts out of any retry rounds the token flow requests."""
+    The ragged fused wire (DESIGN.md section 1.5) makes this flow's
+    cost independent of the token payload: its segment is exactly 2 u32
+    request words (expert id + meta) and 1 reply word per row — byte-
+    pinned in tests/test_wire_format.py — so global expert-load
+    observability is genuinely free of d_model-width wire.
+    ``max_rounds=1``: the capacity is exact, so the flow opts out of
+    any retry rounds the token flow requests."""
     eid = jnp.arange(e, dtype=_I32)
     return plan.add((eid % e_loc).astype(_U32)[:, None], eid // e_loc,
                     e_loc, reply_lanes=1, op_name="moe.stats",

@@ -133,6 +133,45 @@ def main():
           all(np.array_equal(np.asarray(a), np.asarray(b))
               for a, b in zip(got_fused, got_fine)))
 
+    # ---- ragged mixed-width plan == FINE on 8 ranks, random dests ----
+    # a 1-lane flow and a 3-lane flow with different reply widths share
+    # one plan under carryover retries: the ragged wire (per-flow word
+    # segments, DESIGN.md section 1.5) must be bit-identical to the
+    # sequential oracle on views, replies, and drop counts.
+    from repro.core import ExchangePlan
+
+    def ragged_or_fine(fine):
+        extra = Promise.FINE if fine else Promise.NONE
+
+        def body(p1, p3, d1, d3):
+            bk = get_backend("bcl")
+            plan = ExchangePlan(promise=extra, name="ragged")
+            h1 = plan.add(p1, d1, 8, reply_lanes=1, op_name="narrow")
+            h3 = plan.add(p3, d3, 8, reply_lanes=2, op_name="wide")
+            c = plan.commit(bk, max_rounds=2)
+            c.set_reply(h1, c.view(h1).payload[:, 0] * 3 + 1)
+            c.set_reply(h3, c.view(h3).payload[:, :2] + 5)
+            outs = c.finish(bk)
+            v1, v3 = c.view(h1), c.view(h3)
+            return (outs[h1][0], outs[h1][1], outs[h3][0], outs[h3][1],
+                    v1.payload, v1.valid, v3.payload, v3.valid,
+                    v1.dropped[None], v3.dropped[None])
+
+        return jax.jit(shard_map(body, mesh=mesh, in_specs=(P("bcl"),) * 4,
+                                 out_specs=(P("bcl"),) * 10))
+
+    rr = np.random.default_rng(23)
+    rg_args = (jnp.asarray(rr.integers(0, 1 << 30, PROCS * 96), jnp.uint32),
+               jnp.asarray(rr.integers(0, 1 << 30, (PROCS * 48, 3)),
+                           jnp.uint32),
+               jnp.asarray(rr.integers(0, PROCS, PROCS * 96), jnp.int32),
+               jnp.asarray(rr.integers(0, PROCS, PROCS * 48), jnp.int32))
+    got_rf = ragged_or_fine(False)(*rg_args)
+    got_rs = ragged_or_fine(True)(*rg_args)
+    check("plan.ragged_equals_fine_8rank",
+          all(np.array_equal(np.asarray(a), np.asarray(b))
+              for a, b in zip(got_rf, got_rs)))
+
     # ---- zipf-skewed destinations: retry rounds make push lossless ----
     # mean-load capacity (n_loc / P) with zipf destination draws: the
     # hot rank overflows every (src, hot) bucket; carryover retries

@@ -65,6 +65,33 @@ def test_micro_skew_arms_smoke(capsys):
         assert cols[6] != "" and cols[7] != "", ln     # retry_rounds,dropped
 
 
+def test_app_skew_arms_smoke(capsys):
+    """The --skew zipf arms on the APPLICATION benchmarks (isx /
+    meraculous / kmer): drop-mode arms lose items, retry arms lose none,
+    and every skew row carries the retry_rounds/dropped columns of the
+    shared CSV schema."""
+    from benchmarks import isx, kmer, meraculous
+    from benchmarks.util import HEADER
+    ncols = len(HEADER.split(","))
+    r = isx.run(smoke=True, skew="zipf")
+    assert r["isx_skew_drop_dropped"] > 0
+    assert r["isx_skew_retry_dropped"] == 0
+    r = kmer.run(smoke=True, skew="zipf")
+    assert r["kmer_insert_skew_drop_dropped"] > 0
+    assert r["kmer_insert_skew_retry_dropped"] == 0
+    r = meraculous.run(smoke=True, skew="zipf")
+    assert r["meraculous_build_skew_drop_dropped"] > 0
+    assert r["meraculous_build_skew_retry_dropped"] == 0
+    rows = [ln for ln in capsys.readouterr().out.strip().splitlines()
+            if "," in ln]
+    skew_rows = [ln for ln in rows if "_skew_" in ln]
+    assert len(skew_rows) == 6
+    for ln in skew_rows:
+        cols = ln.split(",")
+        assert len(cols) == ncols, ln
+        assert cols[6] != "" and cols[7] != "", ln     # retry_rounds,dropped
+
+
 def test_smoke_costs_pin_round_reduction():
     """The benchmark-side cost observables see the fused exchange."""
     from benchmarks.util import trace_costs

@@ -122,6 +122,33 @@ class TestBinning:
         h_ker = binning.histogram(bins, nbins, valid, tile=tile)
         assert np.array_equal(np.asarray(h_ref), np.asarray(h_ker))
 
+    @pytest.mark.parametrize("n,nbins,nflows", [(100, 3, 2), (3000, 8, 4)])
+    def test_ragged_slots_pallas_matches_jnp(self, rng, n, nbins, nflows):
+        """The ragged-wire slot kernel against its jnp oracle, over
+        every retry round of an uneven flow mix (the exchange engine
+        dispatches whichever the backend picks — they must agree)."""
+        bins = jnp.asarray(rng.integers(0, nbins, n), jnp.int32)
+        flow = jnp.asarray(rng.integers(0, nflows, n), jnp.int32)
+        valid = jnp.asarray(rng.random(n) < 0.8)
+        _, offs = ops.multi_bin_offsets(bins, flow, nbins, nflows, valid)
+        roww = jnp.asarray(rng.integers(2, 6, nflows), jnp.int32)
+        caps = jnp.asarray(rng.integers(1, 9, nflows), jnp.int32)
+        rounds = jnp.asarray(rng.integers(1, 4, nflows), jnp.int32)
+        woff, wtot = [], 0
+        for f in range(nflows):
+            woff.append(wtot)
+            wtot += int(caps[f]) * int(roww[f])
+        woff = jnp.asarray(woff, jnp.int32)
+        for r in range(int(rounds.max())):
+            args = (bins, flow, offs, valid, r, woff, roww, caps, rounds,
+                    wtot, nbins * wtot)
+            sj = ops.ragged_slots(*args, impl="jnp")
+            sp = ops.ragged_slots(*args, impl="pallas")
+            assert np.array_equal(np.asarray(sj), np.asarray(sp)), r
+            # in-round slots are unique (disjoint word ranges per item)
+            live = np.asarray(sj) < nbins * wtot
+            assert np.unique(np.asarray(sj)[live]).size == live.sum()
+
 
 class TestFlashAttention:
     @pytest.mark.parametrize(

@@ -85,8 +85,10 @@ def test_per_flow_drop_accounting():
 
 
 def test_fused_costs_one_collective_per_direction():
-    """2 flows, both replying: 2 collectives total, bytes split by
-    wire-segment share under each flow's op name."""
+    """2 flows, both replying: 2 collectives total, each flow charged
+    the EXACT bytes of its own ragged wire segment under its op name —
+    L_f+1 request words and R_f reply words per row, with no cross-flow
+    padding (the narrow flow pays nothing for the wide one)."""
     bk = get_backend(None)
     n0, n1, c0, c1 = 8, 8, 8, 8
     plan = ExchangePlan(name="planop")
@@ -101,16 +103,14 @@ def test_fused_costs_one_collective_per_direction():
         c.finish(bk)
     tot = log.total()
     assert tot.collectives == 2 and tot.rounds == 2
-    # request lane width = max(3, 1) + 1 meta; reply width = max(2, 1)
-    wl, wr = 4, 2
-    assert log.by_op("a").bytes_out == c0 * wl * 4
-    assert log.by_op("b").bytes_out == c1 * wl * 4
-    assert log.by_op("a").bytes_in == c0 * wr * 4
-    assert log.by_op("b").bytes_in == c1 * wr * 4
+    assert log.by_op("a").bytes_out == c0 * (3 + 1) * 4
+    assert log.by_op("b").bytes_out == c1 * (1 + 1) * 4
+    assert log.by_op("a").bytes_in == c0 * 2 * 4
+    assert log.by_op("b").bytes_in == c1 * 1 * 4
     # physical collective + round attributed to the plan's op name
     assert log.by_op("planop").collectives == 2
     assert log.by_op("planop").rounds == 2
-    assert tot.bytes_moved == (c0 + c1) * (wl + wr) * 4
+    assert tot.bytes_moved == c0 * (4 + 2) * 4 + c1 * (2 + 1) * 4
 
 
 def test_fine_promise_lowers_to_sequential_schedule():

@@ -9,7 +9,7 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 from jax import ShapeDtypeStruct as SDS
 
-from repro.core import Promise, get_backend, route
+from repro.core import ExchangePlan, Promise, get_backend, route
 from repro.containers import bloom as bl
 from repro.containers import hashmap as hm
 from repro.containers import queue as q
@@ -192,6 +192,56 @@ def test_fused_plan_interleavings_match_fine_schedule(data):
     fine_out, fine_state = run(True)
     assert _tree_equal(fused_out, fine_out)
     assert _tree_equal(fused_state, fine_state)
+
+
+@given(st.data())
+@settings(max_examples=15, deadline=None)
+def test_ragged_fused_plans_equal_fine_over_flow_mixes(data):
+    """Ragged fused wire == Promise.FINE oracle over random flow mixes:
+    1-4 flows of lane widths 1..4 and reply widths 0..3, random
+    capacities and carryover retry rounds 1..3 — owner views, replies,
+    answered masks, and per-flow drop counts are all bit-identical, so
+    the ragged layout is pure wire compression, never a semantic
+    change."""
+    bk = get_backend(None)
+    nflows = data.draw(st.integers(1, 4), label="nflows")
+    rounds = data.draw(st.integers(1, 3), label="rounds")
+    flows = []
+    for i in range(nflows):
+        n = data.draw(st.integers(1, 20), label=f"n{i}")
+        lanes = data.draw(st.integers(1, 4), label=f"lanes{i}")
+        cap = data.draw(st.integers(1, n + 4), label=f"cap{i}")
+        rl = data.draw(st.integers(0, 3), label=f"rl{i}")
+        pay = jnp.asarray(
+            data.draw(st.lists(st.integers(0, 1 << 30),
+                               min_size=n * lanes, max_size=n * lanes),
+                      label=f"pay{i}"), jnp.uint32).reshape(n, lanes)
+        valid = jnp.asarray(
+            data.draw(st.lists(st.booleans(), min_size=n, max_size=n),
+                      label=f"valid{i}"))
+        flows.append((pay, valid, cap, rl))
+
+    def run(promise):
+        plan = ExchangePlan(promise=promise, name="mix")
+        hs = [plan.add(p, jnp.zeros(p.shape[0], jnp.int32), cap,
+                       reply_lanes=rl, valid=v, op_name=f"f{i}")
+              for i, (p, v, cap, rl) in enumerate(flows)]
+        c = plan.commit(bk, max_rounds=rounds)
+        for h, (p, v, cap, rl) in zip(hs, flows):
+            if rl:
+                c.set_reply(h, jnp.tile(
+                    c.view(h).payload[:, :1] * 3 + h + 1, (1, rl)))
+        fin = c.finish(bk)
+        return ([tuple(c.view(h)) for h in hs],
+                sorted(fin.items()))
+
+    fused = run(Promise.NONE)
+    fine = run(Promise.FINE)
+    assert _tree_equal(fused[0], fine[0])
+    for (hf, (of, af)), (hs_, (os_, as_)) in zip(fused[1], fine[1]):
+        assert hf == hs_
+        assert np.array_equal(np.asarray(of), np.asarray(os_))
+        assert np.array_equal(np.asarray(af), np.asarray(as_))
 
 
 @given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=2,

@@ -296,6 +296,71 @@ def test_fused_retry_plan_equals_fine_for_containers():
             assert np.array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_pin_queue_push_ring_full_carry_lossless():
+    """The LAST drop path (ROADMAP): ring-full rejects.  All-to-one push
+    at over-ring load with ``overflow="carry"`` ships the owner's
+    per-arrival acceptance bit back on the reply wire; re-injecting the
+    carried rows after each drain recovers every item exactly once."""
+    bk = get_backend(None)
+    n, ring = 48, 16
+    vals = jnp.arange(n, dtype=jnp.uint32) + 1
+    dest = jnp.zeros(n, jnp.int32)
+    spec, st0 = q.queue_create(bk, ring, SDS((), jnp.uint32))
+
+    # drop mode: the ring overflow is lost even though the wire kept all
+    _, pushed, dropped = q.push(bk, spec, st0, vals, dest, capacity=n)
+    assert int(pushed) == ring and int(dropped) == n - ring
+
+    # carry mode: drains + re-injections are lossless
+    st, got = st0, []
+    carry = jnp.ones(n, bool)
+    for want_carry in (n - ring, n - 2 * ring, 0):
+        st, pushed, dropped, carry = q.push(bk, spec, st, vals, dest,
+                                            capacity=n, valid=carry,
+                                            overflow="carry")
+        assert int(dropped) == 0
+        assert int(carry.sum()) == want_carry
+        st, out, gotm = q.local_nonatomic_pop(spec, st, ring)
+        got += np.asarray(out)[np.asarray(gotm)].tolist()
+    assert sorted(got) == np.asarray(vals).tolist()
+
+
+def test_queue_push_carry_covers_wire_and_ring_overflow():
+    """One carry mask marks BOTH loss paths: items the wire never
+    shipped (capacity window) and items a full ring refused."""
+    bk = get_backend(None)
+    n, ring, wire = 48, 16, 20
+    vals = jnp.arange(n, dtype=jnp.uint32) + 1
+    dest = jnp.zeros(n, jnp.int32)
+    spec, st0 = q.queue_create(bk, ring, SDS((), jnp.uint32))
+    st, pushed, dropped, carry = q.push(bk, spec, st0, vals, dest,
+                                        capacity=wire, overflow="carry")
+    # 20 shipped, 16 accepted: 4 ring rejects + 28 never shipped carried
+    assert int(pushed) == ring and int(dropped) == 0
+    assert int(carry.sum()) == n - ring
+    rows, gotm = q.local_drain(spec, st)
+    in_ring = np.asarray(rows)[np.asarray(gotm)]
+    # ring ∪ carry is exactly the batch, with no overlap
+    assert sorted(in_ring.tolist()
+                  + np.asarray(vals)[np.asarray(carry)].tolist()) == \
+        np.asarray(vals).tolist()
+    # and the reply round is priced: 2 collectives, not fire-and-forget
+    with costs.recording() as log:
+        q.push(bk, spec, st0, vals, dest, capacity=wire, overflow="carry")
+    assert log.total().collectives == 2
+    with pytest.raises(ValueError, match="overflow"):
+        q.push(bk, spec, st0, vals, dest, capacity=wire, overflow="retry")
+    # a LOCAL push honors carry from its local accept mask — same
+    # contract, zero collectives
+    with costs.recording() as log:
+        _, pushed_l, dropped_l, carry_l = q.push(
+            bk, spec, st0, vals, dest, capacity=wire,
+            promise=Promise.PUSH | Promise.LOCAL, overflow="carry")
+    assert log.total().collectives == 0
+    assert int(pushed_l) == ring and int(dropped_l) == 0
+    assert int(carry_l.sum()) == n - ring
+
+
 def test_buffer_flush_carry_is_lossless_across_cycles():
     """hashmap_buffer.flush(overflow="carry"): wire leftovers re-stage
     instead of dropping; bounded cycles drain them all."""

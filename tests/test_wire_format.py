@@ -20,7 +20,8 @@ import numpy as np
 import pytest
 from jax import ShapeDtypeStruct as SDS
 
-from repro.core import ConProm, Promise, costs, get_backend, route
+from repro.core import (ConProm, ExchangePlan, Promise, costs, get_backend,
+                        route)
 from repro.core.exchange import reply
 from repro.containers import hashmap as hm
 from repro.containers import queue as q
@@ -225,6 +226,143 @@ def test_push_pop_fused_two_collectives_fine_three():
     assert int(f[4].sum()) == 16
     assert np.array_equal(np.asarray(f[3])[np.asarray(f[4])],
                           np.arange(16, dtype=np.uint32) + 1)
+
+
+# ---------------------------------------------------------------------------
+# ragged per-flow wire segments: byte-exact pins (DESIGN.md section 1.5)
+# ---------------------------------------------------------------------------
+
+def test_find_insert_ragged_bytes_exact_and_below_rectangular():
+    """Mixed-width fused plan: each flow ships exactly C_f*(L_f+1) u32
+    request words and C_f*R_f reply words — the analytic formula — and
+    the plan total is strictly below the rectangular (max-width padded)
+    layout in both directions."""
+    bk, spec, st, keys, _, _ = _loaded_map()
+    n = keys.shape[0]
+    lk, lv = spec.key_packer.lanes, spec.val_packer.lanes       # 1, 1
+    ins = keys + jnp.uint32(1 << 22)
+    with costs.recording() as log:
+        hm.find_insert(bk, spec, st, keys, ins, ins * 9, capacity=n,
+                       promise=ConProm.HashMap.find_insert)
+    lf, li = 1 + lk, 1 + lk + lv               # payload lanes per flow
+    assert log.by_op("hashmap.find").bytes_out == n * (lf + 1) * 4
+    assert log.by_op("hashmap.insert").bytes_out == n * (li + 1) * 4
+    assert log.by_op("hashmap.find").bytes_in == n * (lv + 1) * 4
+    assert log.by_op("hashmap.insert").bytes_in == n * 1 * 4
+    tot = log.total()
+    assert tot.bytes_out == n * ((lf + 1) + (li + 1)) * 4
+    assert tot.bytes_in == n * ((lv + 1) + 1) * 4
+    # PR 3 rectangular layout: every flow padded to the widest
+    assert tot.bytes_out < 2 * n * (max(lf, li) + 1) * 4
+    assert tot.bytes_in < 2 * n * max(lv + 1, 1) * 4
+
+
+def test_push_pop_ragged_bytes_exact_and_below_rectangular():
+    """Wide values make push the wide flow; pop's unit requests and the
+    value-width pop replies each ship their own exact widths."""
+    bk = get_backend(None)
+    lanes = 3                                   # 3-lane values
+    spec, st = q.queue_create(bk, 128, lanes, circular=True)
+    nv, npop = 32, 16
+    vals = jnp.arange(nv * lanes, dtype=jnp.uint32).reshape(nv, lanes)
+    with costs.recording() as log:
+        q.push_pop(bk, spec, st, vals, jnp.zeros(nv, jnp.int32), nv,
+                   npop, 0)
+    assert log.by_op("queue.push").bytes_out == nv * (lanes + 1) * 4
+    assert log.by_op("queue.pop").bytes_out == npop * (1 + 1) * 4
+    assert log.by_op("queue.push").bytes_in == 0     # fire-and-forget
+    assert log.by_op("queue.pop").bytes_in == npop * (lanes + 1 + 0) * 4
+    # rectangular: pop's unit requests would pay the push flow's width
+    assert log.total().bytes_out < (nv + npop) * (lanes + 1) * 4
+
+
+def test_bloom_insert_find_ragged_bytes_exact():
+    """Same-width flows: the ragged formula reduces to the rectangular
+    one — sum_f C_f*(L_f+1) words out, C_f*1 words back."""
+    bk = get_backend(None)
+    from repro.containers import bloom as bl
+    spec, st = bl.bloom_create(bk, 1 << 12, SDS((), jnp.uint32), k=4)
+    ins = jnp.arange(24, dtype=jnp.uint32) + 1
+    qry = jnp.arange(16, dtype=jnp.uint32) + 5
+    with costs.recording() as log:
+        bl.insert_find(bk, spec, st, ins, qry, 24, 16)
+    body = 3                                    # lblock + 2 bit-words
+    assert log.by_op("bloom.insert").bytes_out == 24 * (body + 1) * 4
+    assert log.by_op("bloom.find").bytes_out == 16 * (body + 1) * 4
+    assert log.by_op("bloom.insert").bytes_in == 24 * 1 * 4
+    assert log.by_op("bloom.find").bytes_in == 16 * 1 * 4
+
+
+def test_plan_commit_bytes_equal_sum_of_single_flow_routes():
+    """The acceptance criterion that makes fusion unconditionally
+    profitable: a fused mixed-width plan moves EXACTLY the bytes of its
+    flows' standalone route()/reply() lowerings — fusing saves rounds
+    and collectives, never costs wire."""
+    bk = get_backend(None)
+    rng = np.random.default_rng(21)
+    widths, caps, rls = (1, 2, 4), (8, 5, 9), (1, 0, 3)
+    pays = [jnp.asarray(rng.integers(0, 1 << 30, (12, w)), jnp.uint32)
+            for w in widths]
+    dest = jnp.zeros(12, jnp.int32)
+
+    with costs.recording() as log_f:
+        plan = ExchangePlan(name="plan")
+        hs = [plan.add(p, dest, c, reply_lanes=rl, op_name=f"f{i}")
+              for i, (p, c, rl) in enumerate(zip(pays, caps, rls))]
+        c = plan.commit(bk)
+        for h, rl in zip(hs, rls):
+            if rl:
+                c.set_reply(h, jnp.tile(c.view(h).payload[:, :1], (1, rl)))
+        c.finish(bk)
+    with costs.recording() as log_s:
+        for i, (p, cap, rl) in enumerate(zip(pays, caps, rls)):
+            res = route(bk, p, dest, cap, op_name=f"f{i}")
+            if rl:
+                reply(bk, res, jnp.tile(res.payload[:, :1], (1, rl)),
+                      orig_n=12, op_name=f"f{i}")
+    for i in range(3):
+        assert log_f.by_op(f"f{i}").bytes_out == \
+            log_s.by_op(f"f{i}").bytes_out
+        assert log_f.by_op(f"f{i}").bytes_in == log_s.by_op(f"f{i}").bytes_in
+    assert log_f.total().bytes_moved == log_s.total().bytes_moved
+    # ...while the collective counts are where fusion wins
+    assert log_f.total().collectives == 2
+    assert log_s.total().collectives == 3 + 2   # 3 routes + 2 replies
+
+
+def test_moe_dispatch_stats_ragged_bytes_exact():
+    """The motivating mixed-width plan: the 1-lane MoE stats flow rides
+    the token plan at 2 request words + 1 reply word per row instead of
+    the token flow's width — its wire cost is now independent of
+    d_model."""
+    import dataclasses
+    from repro.compat import make_mesh
+    from repro.configs import get_config, reduced
+    from repro.models import moe as moe_mod
+    from repro.models.sharding import Axes
+    import jax
+
+    cfg = reduced(get_config("arctic-480b"), d_model=32, vocab=256)
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, n_experts=8, top_k=2,
+                                     expert_d_ff=16),
+        moe_capacity_slack=8.0)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    params = moe_mod.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
+    with costs.recording() as log:
+        moe_mod.moe_apply(params, x, cfg, mesh, Axes.from_mesh(mesh))
+
+    b, t, k, e = 2, 8, cfg.moe.top_k, cfg.moe.n_experts
+    act_lanes = cfg.d_model                     # float32 payload
+    cap = max(1, int(b * t * k * cfg.moe_capacity_slack) + 1)
+    l_tok = act_lanes + 1                       # activations + expert id
+    assert log.by_op("moe.dispatch").bytes_out == cap * (l_tok + 1) * 4
+    assert log.by_op("moe.dispatch").bytes_in == cap * act_lanes * 4
+    assert log.by_op("moe.stats").bytes_out == e * 2 * 4
+    assert log.by_op("moe.stats").bytes_in == e * 1 * 4
+    # rectangular: stats rows were padded to the token flow's width
+    assert log.by_op("moe.stats").bytes_out < e * (l_tok + 1) * 4
 
 
 # ---------------------------------------------------------------------------
