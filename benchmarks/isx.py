@@ -19,14 +19,14 @@ import jax.numpy as jnp
 import numpy as np
 from jax import ShapeDtypeStruct as SDS
 
-from benchmarks.util import emit, time_fn
+from benchmarks.util import emit, resolve_transport, time_fn
 from repro.core import get_backend
 from repro.containers import queue as q
 
 N_KEYS = 1 << 16
 
 
-def bucket_sort(message_size: int, n_keys: int = N_KEYS):
+def bucket_sort(message_size: int, n_keys: int = N_KEYS, tr=None):
     """The paper's Fig. 3 program: buffer locally per destination, push
     full buckets, barrier, local sort."""
     bk = get_backend(None)
@@ -39,7 +39,7 @@ def bucket_sort(message_size: int, n_keys: int = N_KEYS):
         for i in range(n_msgs):
             st, _, _ = q.push(bk, spec, st,
                               keys[i * message_size:(i + 1) * message_size],
-                              dest, capacity=message_size)
+                              dest, capacity=message_size, transport=tr)
         bk.barrier()
         rows, got = q.local_drain(spec, st)
         return jnp.sort(jnp.where(got, rows, jnp.uint32(0xFFFFFFFF)))
@@ -47,7 +47,9 @@ def bucket_sort(message_size: int, n_keys: int = N_KEYS):
     return sort_fn, st0
 
 
-def run(smoke: bool = False, skew: str = "none"):
+def run(smoke: bool = False, skew: str = "none",
+        transport: str = "dense"):
+    tr, sfx = resolve_transport(transport)
     n_keys = 1 << 10 if smoke else N_KEYS
     sweep = (256,) if smoke else (256, 1024, 4096, 16384)
     check_msg = 256 if smoke else 4096
@@ -55,26 +57,28 @@ def run(smoke: bool = False, skew: str = "none"):
     keys = jnp.asarray(rng.integers(0, 1 << 28, n_keys), jnp.uint32)
     results = {}
     for msg in sweep:
-        fn, st0 = bucket_sort(msg, n_keys)
+        fn, st0 = bucket_sort(msg, n_keys, tr)
         t = time_fn(fn, st0, keys, warmup=1, iters=3)
         keys_per_s = n_keys / t
         results[f"isx_msg{msg}"] = t * 1e6
-        emit(f"isx_msg{msg}", t * 1e6, f"{keys_per_s/1e6:.2f}Mkeys/s")
+        emit(f"isx_msg{msg}{sfx}", t * 1e6, f"{keys_per_s/1e6:.2f}Mkeys/s")
     # correctness spot check
-    fn, st0 = bucket_sort(check_msg, n_keys)
+    fn, st0 = bucket_sort(check_msg, n_keys, tr)
     out = np.asarray(fn(st0, keys))[:n_keys]
     assert np.array_equal(out, np.sort(np.asarray(keys))), "sort wrong!"
 
     # --- skew arm: zipf-sized waves at mean-load wire capacity ---
     if skew == "zipf":
-        from benchmarks.util import (SKEW_PEERS as vp, bench_skew_arm,
-                                     mean_load_cap, zipf_wave_mask)
+        from benchmarks.util import (bench_skew_arm, mean_load_cap,
+                                     skew_retry_rounds, zipf_wave_mask)
         bk = get_backend(None)
         waves = 8
         wave = n_keys // waves
         zcap = mean_load_cap(wave)      # ceil: rounds x cap covers a wave
         valid = zipf_wave_mask(waves, wave, n_keys)
         n_skew = int(valid.sum())
+        rr = skew_retry_rounds(
+            [int(x) for x in np.asarray(valid.sum(axis=1))], zcap)
 
         def bench_skew(rounds, tag):
             spec, st0 = q.queue_create(bk, n_keys * 2, SDS((), jnp.uint32))
@@ -86,7 +90,8 @@ def run(smoke: bool = False, skew: str = "none"):
                 for i in range(waves):
                     st, _, d = q.push(
                         bk, spec, st, keys[i * wave:(i + 1) * wave], dest,
-                        capacity=zcap, valid=valid[i], max_rounds=rounds)
+                        capacity=zcap, valid=valid[i], max_rounds=rounds,
+                        transport=tr)
                     dropped = dropped + d
                 bk.barrier()
                 rows, got = q.local_drain(spec, st)
@@ -97,8 +102,8 @@ def run(smoke: bool = False, skew: str = "none"):
                            st0, keys,
                            derived="zipf waves @ mean-load capacity")
 
-        bench_skew(1, "isx_skew_drop")
-        bench_skew(vp, "isx_skew_retry")
+        bench_skew(1, "isx_skew_drop" + sfx)
+        bench_skew(rr, "isx_skew_retry" + sfx)
     return results
 
 

@@ -73,9 +73,10 @@ def run(smoke: bool = False, skew: str = "none"):
 
     # --- skew arm: counting at mean-load wire capacity ---
     if skew == "zipf":
-        from benchmarks.util import (SKEW_PEERS as vp, bench_skew_arm,
-                                     mean_load_cap)
+        from benchmarks.util import (bench_skew_arm, mean_load_cap,
+                                     skew_retry_rounds)
         zcap = mean_load_cap(n)      # ceil: rounds x cap covers n
+        rr = skew_retry_rounds([n], zcap)
 
         def bench_skew(rounds, tag):
             @jax.jit
@@ -91,7 +92,7 @@ def run(smoke: bool = False, skew: str = "none"):
             bench_skew_arm(count_skew, tag, rounds, n, results, items)
 
         bench_skew(1, "kmer_insert_skew_drop")
-        bench_skew(vp, "kmer_insert_skew_retry")
+        bench_skew(rr, "kmer_insert_skew_retry")
     return results
 
 

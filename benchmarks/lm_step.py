@@ -1,7 +1,21 @@
 """Framework-side benchmark: LM train/decode step throughput (reduced
-configs on CPU; the full-size numbers live in the dry-run roofline)."""
+configs on CPU; the full-size numbers live in the dry-run roofline).
+
+The ``--skew zipf`` arm exercises MoE dispatch under zipf-routed tokens
+(a rigged router bias concentrates every token's top-k on the first
+experts — the hottest expert histogram zipf routing can produce):
+
+  lm_moe_skew_drop    one dispatch round at uniform expert capacity:
+                      the hot experts overflow and tokens are dropped
+                      (counted via the stats flow's served counts)
+  lm_moe_skew_retry   ``exchange.suggest_rounds`` picks the dispatch
+                      round count from the observed expert_load
+                      trajectory; every token is served
+"""
 
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -15,11 +29,58 @@ from repro.models import lm
 from repro.models.sharding import Axes
 
 
-def run(smoke: bool = False):
+def _moe_skew_arm(results: dict, smoke: bool):
+    """MoE dispatch under maximal routing skew (ROADMAP item: lm_step
+    skew arm): drop-mode vs suggest_rounds-driven retry rounds."""
+    from benchmarks.util import bench_skew_arm
+    from repro.core import suggest_rounds
+    from repro.models import moe as moe_mod
+
+    b, t = (2, 16) if smoke else (4, 64)
+    cfg = reduced(get_config("arctic-480b"), d_model=32, vocab=256)
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, n_experts=8, top_k=2,
+                                     expert_d_ff=16,
+                                     bias_update_rate=0.01),
+        moe_capacity_slack=1.0)
+    mesh = make_test_mesh(1, 1)
+    axes = Axes.from_mesh(mesh)
+    params = moe_mod.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    e = cfg.moe.n_experts
+    # zipf-routed tokens: a dominant router bias pins every token's
+    # top-k on experts 0..k-1 — the degenerate zipf head
+    params["moe_bias"] = jnp.arange(e, 0, -1).astype(jnp.float32) * 100.0
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, t, cfg.d_model))
+    n_assign = b * t * cfg.moe.top_k
+    uniform_cap = max(1, n_assign // e)
+
+    def arm(rounds, tag):
+        cfg_r = dataclasses.replace(cfg, moe_dispatch_rounds=rounds)
+
+        @jax.jit
+        def step(params, x):
+            y, _, stats = moe_mod.moe_apply(params, x, cfg_r, mesh, axes)
+            served = stats["expert_load"].sum().astype(jnp.int32)
+            return y, jnp.int32(n_assign) - served
+
+        bench_skew_arm(step, tag, rounds, n_assign, results, params, x,
+                       derived="zipf-routed tokens @ uniform expert cap")
+
+    arm(1, "lm_moe_skew_drop")
+    # observed load trajectory: the drop arm's served counts understate
+    # the hot load, so feed the routing histogram itself (every token's
+    # k assignments land on the bias head)
+    hot_loads = [n_assign // cfg.moe.top_k] * 2
+    arm(suggest_rounds(hot_loads, uniform_cap), "lm_moe_skew_retry")
+
+
+def run(smoke: bool = False, skew: str = "none"):
     mesh = make_test_mesh(1, 1)
     axes = Axes.from_mesh(mesh)
     rng = jax.random.PRNGKey(0)
     results = {}
+    if skew == "zipf":
+        _moe_skew_arm(results, smoke)
     archs = ("stablelm-1.6b",) if smoke else \
         ("stablelm-1.6b", "arctic-480b", "rwkv6-1.6b")
     for arch in archs:

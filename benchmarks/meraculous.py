@@ -111,9 +111,12 @@ def run(smoke: bool = False, skew: str = "none"):
 
     # --- skew arm: buffered flush at mean-load wire capacity ---
     if skew == "zipf":
-        from benchmarks.util import (SKEW_PEERS as vp, bench_skew_arm,
-                                     mean_load_cap)
+        from benchmarks.util import (bench_skew_arm, mean_load_cap,
+                                     skew_retry_rounds)
         zcap = mean_load_cap(n)      # ceil: rounds x cap covers n
+        # worst observable bucket load is the whole batch (one hot
+        # owner); suggest_rounds turns it into the minimal cover
+        rr = skew_retry_rounds([n], zcap)
 
         def bench_skew(rounds, tag):
             @jax.jit
@@ -134,7 +137,7 @@ def run(smoke: bool = False, skew: str = "none"):
                            keys, next_base)
 
         bench_skew(1, "meraculous_build_skew_drop")
-        bench_skew(vp, "meraculous_build_skew_retry")
+        bench_skew(rr, "meraculous_build_skew_retry")
     return results
 
 

@@ -30,7 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import ShapeDtypeStruct as SDS
 
-from benchmarks.util import emit, time_fn, trace_costs
+from benchmarks.util import emit, resolve_transport, time_fn, trace_costs
 from repro.core import ConProm, Promise, get_backend
 from repro.containers import hashmap as hm
 from repro.containers import hashmap_buffer as hb
@@ -40,7 +40,9 @@ TABLE = 1 << 17
 WAVES = 8                      # fine-grained ops issue per-wave
 
 
-def run(smoke: bool = False, fused: bool = False, skew: str = "none"):
+def run(smoke: bool = False, fused: bool = False, skew: str = "none",
+        transport: str = "dense"):
+    tr, sfx = resolve_transport(transport)
     n_ops = 1 << 8 if smoke else N_OPS
     table = 1 << 11 if smoke else TABLE
     bk = get_backend(None)
@@ -68,7 +70,7 @@ def run(smoke: bool = False, fused: bool = False, skew: str = "none"):
             st, _ = hm.insert(bk, spec, st, keys[i * wave:(i + 1) * wave],
                               vals[i * wave:(i + 1) * wave], capacity=wave,
                               promise=ConProm.HashMap.find_insert,
-                              attempts=1)
+                              attempts=1, transport=tr)
         return st
 
     bench("hashmap_insert", insert_waves, st0, keys, vals)
@@ -83,7 +85,7 @@ def run(smoke: bool = False, fused: bool = False, skew: str = "none"):
         for i in range(WAVES):
             bst, _ = hb.insert(bspec, bst, keys[i * wave:(i + 1) * wave],
                                vals[i * wave:(i + 1) * wave])
-        bst, _ = hb.flush(bk, bspec, bst, capacity=n_ops)
+        bst, _ = hb.flush(bk, bspec, bst, capacity=n_ops, transport=tr)
         return bst
 
     bench("hashmap_insert_buffer", insert_buffered, bst0, keys, vals)
@@ -98,7 +100,7 @@ def run(smoke: bool = False, fused: bool = False, skew: str = "none"):
             st, v, f = hm.find(bk, spec, st, keys[i * wave:(i + 1) * wave],
                                capacity=wave,
                                promise=ConProm.HashMap.find_insert,
-                               attempts=1)
+                               attempts=1, transport=tr)
         return v, f
 
     @jax.jit
@@ -106,7 +108,7 @@ def run(smoke: bool = False, fused: bool = False, skew: str = "none"):
         for i in range(WAVES):
             _, v, f = hm.find(bk, spec, st, keys[i * wave:(i + 1) * wave],
                               capacity=wave, promise=ConProm.HashMap.find,
-                              attempts=1)
+                              attempts=1, transport=tr)
         return v, f
 
     @jax.jit
@@ -114,7 +116,7 @@ def run(smoke: bool = False, fused: bool = False, skew: str = "none"):
         for i in range(WAVES):
             _, v, f = hm.find(bk, spec, st, keys[i * wave:(i + 1) * wave],
                               capacity=wave, promise=ConProm.HashMap.find,
-                              attempts=2)
+                              attempts=2, transport=tr)
         return v, f
 
     bench("hashmap_find_atomic", find_atomic, st, keys)
@@ -136,7 +138,7 @@ def run(smoke: bool = False, fused: bool = False, skew: str = "none"):
                     sl = slice(i * wave, (i + 1) * wave)
                     st, _, _, _ = hm.find_insert(
                         bk, spec_f, st, fk[sl], ik[sl], iv[sl],
-                        capacity=wave, promise=promise)
+                        capacity=wave, promise=promise, transport=tr)
                 return st
 
             return rounds, st_f
@@ -153,11 +155,15 @@ def run(smoke: bool = False, fused: bool = False, skew: str = "none"):
 
     # --- skew arm: mean-load capacity, drop-mode vs carryover retries ---
     if skew == "zipf":
-        from benchmarks.util import (SKEW_PEERS as vp, bench_skew_arm,
-                                     mean_load_cap, zipf_wave_mask)
+        from benchmarks.util import (bench_skew_arm, mean_load_cap,
+                                     skew_retry_rounds, zipf_wave_mask)
         zcap = mean_load_cap(wave)
         zvalid = zipf_wave_mask(WAVES, wave, n_ops)
         n_skew = int(zvalid.sum())     # actual ops (hot waves saturate)
+        # observed trajectory: each wave's hot-block load; suggest_rounds
+        # picks R off the peak (ROADMAP adaptive rounds)
+        rr = skew_retry_rounds(
+            [int(x) for x in np.asarray(zvalid.sum(axis=1))], zcap)
 
         def bench_skew(rounds, tag):
             spec_s, st_s = fresh()
@@ -170,7 +176,8 @@ def run(smoke: bool = False, fused: bool = False, skew: str = "none"):
                     sl = slice(i * wave, (i + 1) * wave)
                     st, ok = hm.insert(bk, spec_s, st, keys[sl], vals[sl],
                                        capacity=zcap, valid=zvalid[i],
-                                       attempts=1, max_rounds=rounds)
+                                       attempts=1, max_rounds=rounds,
+                                       transport=tr)
                     okn = okn + ok.sum().astype(jnp.int32)
                     nval = nval + zvalid[i].sum().astype(jnp.int32)
                 return st, nval - okn       # failed == dropped-on-wire
@@ -179,26 +186,26 @@ def run(smoke: bool = False, fused: bool = False, skew: str = "none"):
                            st_s, keys, vals,
                            derived="zipf waves @ mean-load capacity")
 
-        bench_skew(1, "hashmap_insert_skew_drop")
-        bench_skew(vp, "hashmap_insert_skew_retry")
+        bench_skew(1, "hashmap_insert_skew_drop" + sfx)
+        bench_skew(rr, "hashmap_insert_skew_retry" + sfx)
 
-    emit("hashmap_insert", results["hashmap_insert"], "2A+W",
+    emit("hashmap_insert" + sfx, results["hashmap_insert"], "2A+W",
          cost=obs["hashmap_insert"], n_ops=n_ops)
-    emit("hashmap_insert_buffer", results["hashmap_insert_buffer"],
+    emit("hashmap_insert_buffer" + sfx, results["hashmap_insert_buffer"],
          f"speedup={results['hashmap_insert'] / results['hashmap_insert_buffer']:.2f}x",
          cost=obs["hashmap_insert_buffer"], n_ops=n_ops)
-    emit("hashmap_find_atomic", results["hashmap_find_atomic"], "2A+R",
+    emit("hashmap_find_atomic" + sfx, results["hashmap_find_atomic"], "2A+R",
          cost=obs["hashmap_find_atomic"], n_ops=n_ops)
-    emit("hashmap_find", results["hashmap_find"],
+    emit("hashmap_find" + sfx, results["hashmap_find"],
          f"speedup={results['hashmap_find_atomic'] / results['hashmap_find']:.2f}x",
          cost=obs["hashmap_find"], n_ops=n_ops)
-    emit("hashmap_find_2attempt", results["hashmap_find_2attempt"],
+    emit("hashmap_find_2attempt" + sfx, results["hashmap_find_2attempt"],
          "2 rounds/wave", cost=obs["hashmap_find_2attempt"], n_ops=n_ops)
     if fused:
-        emit("hashmap_find_insert_fused", results["hashmap_find_insert_fused"],
+        emit("hashmap_find_insert_fused" + sfx, results["hashmap_find_insert_fused"],
              "2 collectives/round-trip",
              cost=obs["hashmap_find_insert_fused"], n_ops=2 * n_ops)
-        emit("hashmap_find_insert_fine", results["hashmap_find_insert_fine"],
+        emit("hashmap_find_insert_fine" + sfx, results["hashmap_find_insert_fine"],
              "FINE oracle: 4 collectives",
              cost=obs["hashmap_find_insert_fine"], n_ops=2 * n_ops)
     return results

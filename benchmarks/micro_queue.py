@@ -30,7 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import ShapeDtypeStruct as SDS
 
-from benchmarks.util import emit, time_fn, trace_costs
+from benchmarks.util import emit, resolve_transport, time_fn, trace_costs
 from repro.core import ConProm, Promise, get_backend
 from repro.containers import queue as q
 
@@ -38,7 +38,9 @@ N_OPS = 1 << 14
 WAVES = 8
 
 
-def run(smoke: bool = False, fused: bool = False, skew: str = "none"):
+def run(smoke: bool = False, fused: bool = False, skew: str = "none",
+        transport: str = "dense"):
+    tr, sfx = resolve_transport(transport)
     n_ops = 1 << 8 if smoke else N_OPS
     bk = get_backend(None)
     rng = np.random.default_rng(1)
@@ -58,7 +60,8 @@ def run(smoke: bool = False, fused: bool = False, skew: str = "none"):
                 st, _, _ = q.push(bk, spec, st,
                                   vals[i * wave:(i + 1) * wave],
                                   dest[i * wave:(i + 1) * wave],
-                                  capacity=wave, promise=promise)
+                                  capacity=wave, promise=promise,
+                                  transport=tr)
             return st
 
         obs[tag] = trace_costs(pushes, st0, vals, dest)
@@ -79,7 +82,8 @@ def run(smoke: bool = False, fused: bool = False, skew: str = "none"):
         def pops(st):
             outs = []
             for _ in range(WAVES):
-                st, out, got = q.pop(bk, spec, st, wave, 0, promise=promise)
+                st, out, got = q.pop(bk, spec, st, wave, 0, promise=promise,
+                                     transport=tr)
                 outs.append(out)
             return st, outs
 
@@ -117,7 +121,7 @@ def run(smoke: bool = False, fused: bool = False, skew: str = "none"):
                     sl = slice(i * wave, (i + 1) * wave)
                     st, _, _, out, _ = q.push_pop(
                         bk, spec, st, vals[sl], dest[sl], wave, wave, 0,
-                        promise=promise)
+                        promise=promise, transport=tr)
                     outs.append(out)
                 return st, outs
 
@@ -131,11 +135,15 @@ def run(smoke: bool = False, fused: bool = False, skew: str = "none"):
 
     # --- skew arm: mean-load capacity, drop-mode vs carryover retries ---
     if skew == "zipf":
-        from benchmarks.util import (SKEW_PEERS as vp, bench_skew_arm,
-                                     mean_load_cap, zipf_wave_mask)
+        from benchmarks.util import (bench_skew_arm, mean_load_cap,
+                                     skew_retry_rounds, zipf_wave_mask)
         zcap = mean_load_cap(wave)
         valid = zipf_wave_mask(WAVES, wave, n_ops)         # (WAVES, wave)
         n_skew = int(valid.sum())      # actual ops (hot waves saturate)
+        # observed trajectory: the all-to-one hot bucket's load is each
+        # wave's valid count; suggest_rounds picks R off the peak
+        rr = skew_retry_rounds(
+            [int(x) for x in np.asarray(valid.sum(axis=1))], zcap)
 
         def bench_skew(rounds, tag):
             spec, st0 = q.queue_create(bk, n_ops * 2, SDS((), jnp.uint32))
@@ -147,7 +155,7 @@ def run(smoke: bool = False, fused: bool = False, skew: str = "none"):
                     sl = slice(i * wave, (i + 1) * wave)
                     st, _, d = q.push(bk, spec, st, vals[sl], dest[sl],
                                       capacity=zcap, valid=valid[i],
-                                      max_rounds=rounds)
+                                      max_rounds=rounds, transport=tr)
                     dropped = dropped + d
                 return st, dropped
 
@@ -155,19 +163,19 @@ def run(smoke: bool = False, fused: bool = False, skew: str = "none"):
                            st0, vals, dest,
                            derived="zipf waves @ mean-load capacity")
 
-        bench_skew(1, "fq_push_skew_drop")
-        bench_skew(vp, "fq_push_skew_retry")
+        bench_skew(1, "fq_push_skew_drop" + sfx)
+        bench_skew(rr, "fq_push_skew_retry" + sfx)
 
     for k in ("cq_push_pushpop", "cq_push_push", "fq_push",
               "cq_pop_pushpop", "cq_pop_pop", "fq_pop", "fq_local_pop"):
-        emit(k, results[k],
+        emit(k + sfx, results[k],
              "2A" if "pushpop" in k else ("A" if k.startswith("fq") else "2A"),
              cost=obs[k], n_ops=n_ops)
     if fused:
-        emit("cq_push_pop_fused", results["cq_push_pop_fused"],
+        emit("cq_push_pop_fused" + sfx, results["cq_push_pop_fused"],
              "2 collectives/wave", cost=obs["cq_push_pop_fused"],
              n_ops=2 * n_ops)
-        emit("cq_push_pop_fine", results["cq_push_pop_fine"],
+        emit("cq_push_pop_fine" + sfx, results["cq_push_pop_fine"],
              "FINE oracle: 3 collectives", cost=obs["cq_push_pop_fine"],
              n_ops=2 * n_ops)
     return results

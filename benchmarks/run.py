@@ -21,7 +21,13 @@ shows the collective-count reduction side by side with wall time.
 
 ``--skew zipf`` adds the skewed-traffic arms (drop-mode vs carryover
 retry rounds at mean-load capacity) to the modules that have them; the
-retry_rounds and dropped columns track skew tolerance over time.
+retry_rounds and dropped columns track skew tolerance over time.  The
+retry arms pick their round count with ``exchange.suggest_rounds`` over
+the observed wave loads.
+
+``--transport {dense,hier}`` re-runs the exchange-layer arms over the
+named physical transport (DESIGN.md section 1.7); hierarchical rows are
+suffixed ``_hier`` and the ``hops`` column shows the two-stage launches.
 """
 
 from __future__ import annotations
@@ -53,6 +59,13 @@ def main() -> None:
             sys.exit(f"--skew takes a distribution name (zipf), "
                      f"got {skew!r}")
         del args[i:i + 2]
+    transport = "dense"
+    if "--transport" in args:
+        i = args.index("--transport")
+        transport = args[i + 1] if i + 1 < len(args) else ""
+        if transport not in ("dense", "hier"):
+            sys.exit(f"--transport takes dense or hier, got {transport!r}")
+        del args[i:i + 2]
     args = [a for a in args if a not in ("--smoke", "--fused")]
     only = args[0] if args else None
     print(HEADER)
@@ -67,13 +80,17 @@ def main() -> None:
             kw["fused"] = True
         if skew != "none" and "skew" in params:
             kw["skew"] = skew
+        if transport != "dense" and "transport" in params:
+            kw["transport"] = transport
         try:
             if smoke and "smoke" not in params:
-                print(f"{name},SKIPPED,,,,,,,no smoke mode yet")
+                print(f"{name},SKIPPED,,,,,,,,no smoke mode yet")
+            elif transport != "dense" and "transport" not in params:
+                print(f"{name},SKIPPED,,,,,,,,no transport arm yet")
             else:
                 mod.run(**kw)
         except Exception as e:  # keep the harness going; report the row
-            print(f"{name},ERROR,,,,,,,{type(e).__name__}: {e}")
+            print(f"{name},ERROR,,,,,,,,{type(e).__name__}: {e}")
 
 
 if __name__ == "__main__":

@@ -38,13 +38,40 @@ def trace_costs(fn, *args, **kw):
 
 
 #: the one CSV schema every benchmark row follows (schema-checked by
-#: tests/test_benchmarks_smoke.py)
+#: tests/test_benchmarks_smoke.py).  ``hops`` counts physical exchange
+#: stages (1 per dense launch, 2 per hierarchical launch) so the
+#: ``--transport`` arms' extra stage shows up next to wall time.
 HEADER = ("name,us_per_call,collectives,bytes_moved,rounds,"
-          "rounds_per_op,retry_rounds,dropped,derived")
+          "rounds_per_op,retry_rounds,dropped,hops,derived")
+
+
+def resolve_transport(name: str):
+    """Shared ``--transport {dense,hier}`` plumbing: transport + tag.
+
+    Returns ``(transport, suffix)`` — the transport instance to thread
+    into container calls and the row-name suffix ("" for dense, so the
+    default arms keep their historical names).
+    """
+    from repro.core import make_transport
+    return make_transport(name), "" if name == "dense" else f"_{name}"
 
 #: the --skew arms' virtual peer count: ceil(wave / SKEW_PEERS) is the
 #: uniform per-bucket expectation ("mean-load capacity")
 SKEW_PEERS = 4
+
+
+def skew_retry_rounds(loads, capacity: int) -> int:
+    """The ``--skew`` retry arms' round pick (ROADMAP adaptive rounds).
+
+    Feeds the observed per-wave peak bucket loads into
+    ``exchange.suggest_rounds`` instead of hardcoding
+    :data:`SKEW_PEERS`: the arm runs exactly as many carryover rounds
+    as the hottest observed bucket needs at the given per-round
+    capacity, so the losslessness pins hold by construction and the
+    ``retry_rounds`` CSV column tracks the heuristic's actual pick.
+    """
+    from repro.core import suggest_rounds
+    return suggest_rounds(loads, capacity, limit=2 * SKEW_PEERS)
 
 
 def mean_load_cap(n: int) -> int:
@@ -111,8 +138,9 @@ def emit(name: str, us_per_call: float, derived: str = "",
     rr = "" if retry_rounds is None else str(retry_rounds)
     dr = "" if dropped is None else str(dropped)
     if cost is None:
-        print(f"{name},{us_per_call:.2f},,,,,{rr},{dr},{derived}")
+        print(f"{name},{us_per_call:.2f},,,,,{rr},{dr},,{derived}")
         return
     rpo = f"{cost.rounds / n_ops:.6f}" if n_ops else ""
     print(f"{name},{us_per_call:.2f},{cost.collectives},"
-          f"{cost.bytes_moved},{cost.rounds},{rpo},{rr},{dr},{derived}")
+          f"{cost.bytes_moved},{cost.rounds},{rpo},{rr},{dr},"
+          f"{cost.hops},{derived}")

@@ -97,6 +97,10 @@ class ArchConfig:
     # tolerate up to rounds x slack of the uniform load before any token
     # is dropped — skew tolerance without widening every round's wire
     moe_dispatch_rounds: int = 1
+    # physical collective layer for the dispatch exchange (DESIGN.md
+    # section 1.7): "dense" = one tiled all-to-all over the expert axis,
+    # "hier" = two-stage Pr x Pc exchange with sqrt(P) peers per hop
+    exchange_transport: str = "dense"
 
     sub_quadratic: bool = False      # eligible for long_500k
 

@@ -26,7 +26,7 @@ import jax.numpy as jnp
 
 from repro.core import costs
 from repro.core.backend import Backend
-from repro.core.exchange import ExchangePlan, reply, route
+from repro.core.exchange import ExchangePlan
 from repro.core.hashing import double_hash, hash_lanes
 from repro.core.object_container import Packer, packer_for
 from repro.core.promises import Promise, fine_grained, validate
@@ -77,43 +77,52 @@ def _words_of(spec: BloomSpec, items, valid):
 
 
 def _route_words(backend: Backend, spec: BloomSpec, items, valid, capacity,
-                 op_name: str, max_rounds: int = 1):
+                 op_name: str, max_rounds: int = 1, transport=None):
+    """Single-flow plan shipping ``[lblock | bit-words]`` rows; the
+    1-word answer reply rides the committed plan's inverse permutation
+    (through the chosen transport)."""
     n, body, owner, valid = _words_of(spec, items, valid)
-    res = route(backend, body, owner, capacity, valid=valid, op_name=op_name,
-                impl=spec.impl, max_rounds=max_rounds)
+    plan = ExchangePlan(name=op_name)
+    h = plan.add(body, owner, capacity, reply_lanes=1, valid=valid,
+                 op_name=op_name)
+    c = plan.commit(backend, impl=spec.impl, max_rounds=max_rounds,
+                    transport=transport)
+    res = c.view(h)
     rb = jnp.where(res.valid, res.payload[:, 0].astype(_I32), 0)
     rw = res.payload[:, 1:3]
-    return n, res, rb, rw
+    return n, c, h, res, rb, rw
 
 
 def insert(backend: Backend, spec: BloomSpec, state: BloomState,
            items, capacity: int, valid: jax.Array | None = None,
-           max_rounds: int = 1):
+           max_rounds: int = 1, transport=None):
     """Atomic insert; returns (state, already_present(N,)).
 
     ``already_present[i]`` is True iff every one of item i's k bits was
     set before item i's own insertion — first-inserter-wins across the
     whole machine and within the batch (paper's atomicity invariant).
     """
-    n, res, rb, rw = _route_words(backend, spec, items, valid, capacity,
-                                  "bloom.insert", max_rounds=max_rounds)
+    n, c, h, res, rb, rw = _route_words(
+        backend, spec, items, valid, capacity, "bloom.insert",
+        max_rounds=max_rounds, transport=transport)
     words, already = kops.bloom_insert(state.words, rb, rw, res.valid,
                                        impl=spec.impl)
-    back, _ = reply(backend, res, already.astype(_U32), n,
-                    op_name="bloom.insert")
+    c.set_reply(h, already.astype(_U32))
+    back, _ = c.finish(backend)[h]
     costs.record("bloom.insert", costs.Cost(A=1))
     return BloomState(words), back[:, 0] == 1
 
 
 def find(backend: Backend, spec: BloomSpec, state: BloomState,
          items, capacity: int, valid: jax.Array | None = None,
-         max_rounds: int = 1):
+         max_rounds: int = 1, transport=None):
     """Membership query; returns present(N,). Cost R."""
-    n, res, rb, rw = _route_words(backend, spec, items, valid, capacity,
-                                  "bloom.find", max_rounds=max_rounds)
+    n, c, h, res, rb, rw = _route_words(
+        backend, spec, items, valid, capacity, "bloom.find",
+        max_rounds=max_rounds, transport=transport)
     present = kops.bloom_find(state.words, rb, rw, res.valid, impl=spec.impl)
-    back, _ = reply(backend, res, present.astype(_U32), n,
-                    op_name="bloom.find")
+    c.set_reply(h, present.astype(_U32))
+    back, _ = c.finish(backend)[h]
     costs.record("bloom.find", costs.Cost(R=n))
     return back[:, 0] == 1
 
@@ -123,7 +132,8 @@ def insert_find(backend: Backend, spec: BloomSpec, state: BloomState,
                 ins_valid: jax.Array | None = None,
                 find_valid: jax.Array | None = None,
                 promise: Promise = Promise.NONE,
-                max_rounds: int = 1):
+                max_rounds: int = 1,
+                transport=None):
     """Fused insert + membership query sharing ONE exchange round trip.
 
     The insert is serialized before the find, so the query observes this
@@ -138,9 +148,10 @@ def insert_find(backend: Backend, spec: BloomSpec, state: BloomState,
     if fine_grained(promise):
         state, already = insert(backend, spec, state, ins_items,
                                 capacity_ins, valid=ins_valid,
-                                max_rounds=max_rounds)
+                                max_rounds=max_rounds, transport=transport)
         present = find(backend, spec, state, find_items, capacity_find,
-                       valid=find_valid, max_rounds=max_rounds)
+                       valid=find_valid, max_rounds=max_rounds,
+                       transport=transport)
         return state, already, present
 
     ni, body_i, owner_i, ins_valid = _words_of(spec, ins_items, ins_valid)
@@ -150,7 +161,8 @@ def insert_find(backend: Backend, spec: BloomSpec, state: BloomState,
                   valid=ins_valid, op_name="bloom.insert")
     hf = plan.add(body_f, owner_f, capacity_find, reply_lanes=1,
                   valid=find_valid, op_name="bloom.find")
-    c = plan.commit(backend, impl=spec.impl, max_rounds=max_rounds)
+    c = plan.commit(backend, impl=spec.impl, max_rounds=max_rounds,
+                    transport=transport)
     vi, vf = c.view(hi), c.view(hf)
 
     rb_i = jnp.where(vi.valid, vi.payload[:, 0].astype(_I32), 0)

@@ -37,7 +37,7 @@ import jax.numpy as jnp
 
 from repro.core import costs
 from repro.core.backend import Backend
-from repro.core.exchange import ExchangePlan, reply, route
+from repro.core.exchange import ExchangePlan
 from repro.core.hashing import hash_lanes
 from repro.core.object_container import Packer, packer_for
 from repro.core.promises import (Promise, find_only, fine_grained,
@@ -111,7 +111,8 @@ def insert(backend: Backend, spec: HashMapSpec, state: HashMapState,
            mode: int = kops.MODE_SET,
            attempts: int = 2,
            return_success: bool = True,
-           max_rounds: int = 1):
+           max_rounds: int = 1,
+           transport=None):
     """Insert a batch of (key, value) pairs.
 
     Returns (state, success(N,) | None).  With ``promise=local`` the keys
@@ -140,14 +141,20 @@ def insert(backend: Backend, spec: HashMapSpec, state: HashMapState,
     pending = valid
     success = jnp.zeros((n,), bool)
     new_state = state
+    # success replies ride the plan's inverse permutation (through the
+    # chosen transport); a fire-and-forget insert declares no reply
+    rl = 1 if (return_success or attempts > 1) else 0
     for a in range(max(1, attempts)):
         gblock = _block_of(spec, klanes, a)
         owner, lblock = _owner_local(spec, gblock)
         body = jnp.concatenate(
             [lblock.astype(_U32)[:, None], klanes, vlanes], axis=1)
-        res = route(backend, body, owner, capacity, valid=pending,
-                    op_name="hashmap.insert", impl=spec.impl,
-                    max_rounds=max_rounds)
+        plan = ExchangePlan(name="hashmap.insert")
+        h = plan.add(body, owner, capacity, reply_lanes=rl, valid=pending,
+                     op_name="hashmap.insert")
+        c = plan.commit(backend, impl=spec.impl, max_rounds=max_rounds,
+                        transport=transport)
+        res = c.view(h)
         rb = jnp.where(res.valid, res.payload[:, 0].astype(_I32), 0)
         rk = res.payload[:, 1:1 + spec.key_packer.lanes]
         rv = res.payload[:, 1 + spec.key_packer.lanes:]
@@ -164,9 +171,9 @@ def insert(backend: Backend, spec: HashMapSpec, state: HashMapState,
             tk, tv, st, rb, rk, rv, res.valid, mode, impl=spec.impl)
         new_state = HashMapState(tk, tv, st)
 
-        if return_success or attempts > 1:
-            back, _ = reply(backend, res, ok_here.astype(_U32), n,
-                            op_name="hashmap.insert")
+        if rl:
+            c.set_reply(h, ok_here.astype(_U32))
+            back, _ = c.finish(backend)[h]
             ok_src = (back[:, 0] == 1) & pending
             success = success | ok_src
             pending = pending & ~ok_src
@@ -179,7 +186,8 @@ def insert(backend: Backend, spec: HashMapSpec, state: HashMapState,
 
 def _find_speculative(backend: Backend, spec: HashMapSpec,
                       state: HashMapState, klanes, capacity: int,
-                      valid, atomic: bool, max_rounds: int = 1):
+                      valid, atomic: bool, max_rounds: int = 1,
+                      transport=None):
     """Dual-attempt find in ONE round trip (2 collectives, not 4).
 
     Both probe attempts are two *flows* of one :class:`ExchangePlan`:
@@ -208,7 +216,8 @@ def _find_speculative(backend: Backend, spec: HashMapSpec,
     h1 = plan.add(jnp.concatenate([lb1.astype(_U32)[:, None], klanes], axis=1),
                   owner1, capacity, reply_lanes=rl, valid=valid,
                   op_name="hashmap.find")
-    c = plan.commit(backend, impl=spec.impl, max_rounds=max_rounds)
+    c = plan.commit(backend, impl=spec.impl, max_rounds=max_rounds,
+                    transport=transport)
     v0, v1 = c.view(h0), c.view(h1)
 
     rb = jnp.concatenate([
@@ -248,7 +257,8 @@ def find(backend: Backend, spec: HashMapSpec, state: HashMapState,
          valid: jax.Array | None = None,
          attempts: int = 2,
          speculative: bool = True,
-         max_rounds: int = 1):
+         max_rounds: int = 1,
+         transport=None):
     """Find a batch of keys. Returns (state, values, found(N,)).
 
     State is returned because the fully-atomic path's read-bit dance
@@ -283,7 +293,8 @@ def find(backend: Backend, spec: HashMapSpec, state: HashMapState,
     atomic = not find_only(promise)
     if speculative and attempts == 2:
         return _find_speculative(backend, spec, state, klanes, capacity,
-                                 valid, atomic, max_rounds=max_rounds)
+                                 valid, atomic, max_rounds=max_rounds,
+                                 transport=transport)
     pending = valid
     found_all = jnp.zeros((n,), bool)
     vals_all = jnp.zeros((n, spec.val_packer.lanes), _U32)
@@ -291,9 +302,13 @@ def find(backend: Backend, spec: HashMapSpec, state: HashMapState,
         gblock = _block_of(spec, klanes, a)
         owner, lblock = _owner_local(spec, gblock)
         body = jnp.concatenate([lblock.astype(_U32)[:, None], klanes], axis=1)
-        res = route(backend, body, owner, capacity, valid=pending,
-                    op_name="hashmap.find", impl=spec.impl,
-                    max_rounds=max_rounds)
+        plan = ExchangePlan(name="hashmap.find")
+        h = plan.add(body, owner, capacity,
+                     reply_lanes=spec.val_packer.lanes + 1, valid=pending,
+                     op_name="hashmap.find")
+        c = plan.commit(backend, impl=spec.impl, max_rounds=max_rounds,
+                        transport=transport)
+        res = c.view(h)
         rb = jnp.where(res.valid, res.payload[:, 0].astype(_I32), 0)
         rk = res.payload[:, 1:]
         tk, tv, st = state
@@ -305,9 +320,9 @@ def find(backend: Backend, spec: HashMapSpec, state: HashMapState,
         if atomic:
             st = st.at[rb].add(_U32(0) - _READ_BIT, mode="drop")
             state = HashMapState(tk, tv, st)
-        body_back = jnp.concatenate(
-            [vlanes, found_here.astype(_U32)[:, None]], axis=1)
-        back, _ = reply(backend, res, body_back, n, op_name="hashmap.find")
+        c.set_reply(h, jnp.concatenate(
+            [vlanes, found_here.astype(_U32)[:, None]], axis=1))
+        back, _ = c.finish(backend)[h]
         got = (back[:, -1] == 1) & pending
         vals_all = jnp.where(got[:, None], back[:, :-1], vals_all)
         found_all = found_all | got
@@ -325,7 +340,8 @@ def find_insert(backend: Backend, spec: HashMapSpec, state: HashMapState,
                 find_valid: jax.Array | None = None,
                 ins_valid: jax.Array | None = None,
                 mode: int = kops.MODE_SET,
-                max_rounds: int = 1):
+                max_rounds: int = 1,
+                transport=None):
     """Fused find + insert sharing ONE exchange round trip.
 
     Under ``ConProm.HashMap.find_insert`` the two batches are promised
@@ -352,11 +368,12 @@ def find_insert(backend: Backend, spec: HashMapSpec, state: HashMapState,
     if fine_grained(promise):
         state, vals, found = find(backend, spec, state, find_keys, capacity,
                                   promise=promise, valid=find_valid,
-                                  attempts=1, max_rounds=max_rounds)
+                                  attempts=1, max_rounds=max_rounds,
+                                  transport=transport)
         state, ok = insert(backend, spec, state, ins_keys, ins_vals, capacity,
                            promise=promise, valid=ins_valid, mode=mode,
                            attempts=1, return_success=True,
-                           max_rounds=max_rounds)
+                           max_rounds=max_rounds, transport=transport)
         return state, vals, found, ok
 
     kf = spec.key_packer.pack(find_keys)
@@ -379,7 +396,8 @@ def find_insert(backend: Backend, spec: HashMapSpec, state: HashMapState,
                                   axis=1),
                   owner_i, capacity, reply_lanes=1,
                   valid=ins_valid, op_name="hashmap.insert")
-    c = plan.commit(backend, impl=spec.impl, max_rounds=max_rounds)
+    c = plan.commit(backend, impl=spec.impl, max_rounds=max_rounds,
+                    transport=transport)
     vf, vw = c.view(hf), c.view(hi)
 
     # find against the pre-insert table (the chosen serialization)

@@ -100,7 +100,8 @@ def insert(spec: HashMapBufferSpec, state: HashMapBufferState,
 
 
 def spill_flow(plan: ExchangePlan, spec: HashMapBufferSpec,
-               state: HashMapBufferState, capacity: int) -> int:
+               state: HashMapBufferState, capacity: int,
+               ring_reply: bool = False) -> int:
     """Register the staged buffer's queue push as a flow on ``plan``.
 
     The spill is exactly the FastQueue push it wraps, so it rides
@@ -111,9 +112,18 @@ def spill_flow(plan: ExchangePlan, spec: HashMapBufferSpec,
     exactly its own ``Lk+Lv+1`` words per row however wide the host
     plan's other flows are.  Pair with :func:`spill_apply` after
     ``plan.commit``.
+
+    ``ring_reply`` declares the 1-lane acceptance reply that closes the
+    ring-full loss path (DESIGN.md section 1.6, same contract as
+    ``queue.push(overflow="carry")``): :func:`spill_apply` stages the
+    owner's ``_append`` accept mask on it, and after the plan's
+    ``finish`` — the caller's, when the spill shares a plan —
+    :func:`spill_absorb` folds BOTH ring rejects and wire leftovers
+    back into the staging buffer.
     """
     live = jnp.arange(spec.buffer_cap, dtype=_I32) < state.buf_n[0]
     return plan.add(state.buf, state.buf_dest, capacity, valid=live,
+                    reply_lanes=1 if ring_reply else 0,
                     op_name="queue.push")
 
 
@@ -128,13 +138,26 @@ def spill_apply(backend: Backend, committed: CommittedPlan, handle: int,
     mask re-stages them at the front of the local buffer, to ride the
     next spill — the paper's re-insert-on-failed-fetch-and-add loop.
     The returned drop count then covers ring overflow only.
+
+    When the flow declared the ring reply (``spill_flow(...,
+    ring_reply=True)``) a carry spill stages the accept mask on the
+    plan instead and leaves the buffer untouched; the caller finishes
+    the plan (fused with its other flows' replies) and calls
+    :func:`spill_absorb`, after which ring rejects are re-staged too
+    and the drop count is zero.
     """
     view = committed.view(handle)
-    qstate, _, full_drop, _ = q._append(spec.queue_spec, state.queue,
-                                        view.payload, view.valid)
+    qstate, _, full_drop, accept = q._append(spec.queue_spec, state.queue,
+                                             view.payload, view.valid)
     a = q._amo_count(spec.queue_spec, ConProm.CircularQueue.push)
     costs.record("queue.push", costs.Cost(A=a, W=spec.buffer_cap))
     if overflow == "carry":
+        if committed.reply_lanes(handle) > 0:
+            # ring-full backpressure: the accept mask rides the plan's
+            # inverse permutation; the buffer stays intact until
+            # spill_absorb sees which rows actually landed
+            committed.set_reply(handle, accept.astype(_U32))
+            return state._replace(queue=qstate), jnp.int32(0)
         _, mask = committed.leftover(handle)
         # compact the carried rows to the buffer's front
         pos = jnp.cumsum(mask.astype(_I32)) - mask.astype(_I32)
@@ -149,37 +172,72 @@ def spill_apply(backend: Backend, committed: CommittedPlan, handle: int,
     return state, view.dropped + backend.psum(full_drop)
 
 
+def spill_absorb(outs: tuple, spec: HashMapBufferSpec,
+                 state: HashMapBufferState) -> HashMapBufferState:
+    """Requester-side close of a ring-reply carry spill.
+
+    ``outs`` is the finished plan's entry for the spill flow —
+    ``(accept_rows, answered)`` aligned with the staging buffer.  A row
+    landed iff it shipped AND the owner's ring accepted it; every other
+    live row (wire leftover or ring reject) compacts back to the front
+    of the buffer to ride the next spill — one mask covers both loss
+    paths, like ``queue.push(overflow="carry")``.
+    """
+    rows, answered = outs
+    live = jnp.arange(spec.buffer_cap, dtype=_I32) < state.buf_n[0]
+    landed = answered & (rows[:, 0] == 1) & live
+    mask = live & ~landed
+    pos = jnp.cumsum(mask.astype(_I32)) - mask.astype(_I32)
+    slot = jnp.where(mask, pos, spec.buffer_cap)
+    buf = jnp.zeros_like(state.buf).at[slot].set(state.buf, mode="drop")
+    buf_dest = jnp.zeros_like(state.buf_dest).at[slot].set(
+        state.buf_dest, mode="drop")
+    return state._replace(buf=buf, buf_dest=buf_dest,
+                          buf_n=mask.sum().astype(_I32)[None])
+
+
 def spill(backend: Backend, spec: HashMapBufferSpec,
           state: HashMapBufferState, capacity: int,
-          max_rounds: int = 1, overflow: str = "drop"):
+          max_rounds: int = 1, overflow: str = "drop",
+          transport=None):
     """Push staged items to the owners' FastQueues (paper: buffer full).
 
     Eager wrapper: a fresh single-flow plan around
-    :func:`spill_flow`/:func:`spill_apply`.
+    :func:`spill_flow`/:func:`spill_apply`.  With ``overflow="carry"``
+    the flow declares the ring reply, so the spill is lossless against
+    BOTH wire overflow and ring-full rejects (the drop count is then
+    zero — everything unlanded is re-staged in the returned buffer).
     """
     plan = ExchangePlan(name="queue.push")
-    h = spill_flow(plan, spec, state, capacity)
+    carrying = overflow == "carry"
+    h = spill_flow(plan, spec, state, capacity, ring_reply=carrying)
     committed = plan.commit(backend, max_rounds=max_rounds,
-                            overflow=overflow)
-    return spill_apply(backend, committed, h, spec, state,
-                       overflow=overflow)
+                            overflow=overflow, transport=transport)
+    state, dropped = spill_apply(backend, committed, h, spec, state,
+                                 overflow=overflow)
+    if carrying:
+        state = spill_absorb(committed.finish(backend)[h], spec, state)
+    return state, dropped
 
 
 def flush(backend: Backend, spec: HashMapBufferSpec,
           state: HashMapBufferState, capacity: int,
           mode: int = kops.MODE_SET,
-          max_rounds: int = 1, overflow: str = "drop"):
+          max_rounds: int = 1, overflow: str = "drop",
+          transport=None):
     """Spill + drain own queue with fast local inserts (paper flush()).
 
     Returns (state, dropped) — dropped counts route/ring/table overflow.
-    With ``overflow="carry"`` wire overflow is never dropped: leftover
-    items stay staged in the returned state's buffer (``buf_n > 0``) for
-    the caller's next flush cycle, so repeated flushes are lossless as
-    long as ring and table keep up; ``max_rounds`` shrinks the number of
-    cycles needed by retrying inside the spill itself.
+    With ``overflow="carry"`` neither wire overflow NOR ring-full
+    rejects are dropped: unlanded items stay staged in the returned
+    state's buffer (``buf_n > 0``) for the caller's next flush cycle,
+    so repeated flushes are lossless as long as the table keeps up;
+    ``max_rounds`` shrinks the number of cycles needed by retrying
+    inside the spill itself.
     """
     state, dropped = spill(backend, spec, state, capacity,
-                           max_rounds=max_rounds, overflow=overflow)
+                           max_rounds=max_rounds, overflow=overflow,
+                           transport=transport)
     backend.barrier()
 
     rows, got = q.local_drain(spec.queue_spec, state.queue)

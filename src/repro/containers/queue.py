@@ -33,7 +33,7 @@ import jax.numpy as jnp
 
 from repro.core import costs
 from repro.core.backend import Backend
-from repro.core.exchange import ExchangePlan, reply, route
+from repro.core.exchange import ExchangePlan, route
 from repro.core.object_container import Packer, packer_for
 from repro.core.promises import (Promise, fine_grained, fully_atomic_queue,
                                  validate)
@@ -87,7 +87,8 @@ def push(backend: Backend, spec: QueueSpec, state: QueueState,
          valid: jax.Array | None = None,
          promise: Promise = Promise.PUSH,
          max_rounds: int = 1,
-         overflow: str = "drop"):
+         overflow: str = "drop",
+         transport=None):
     """Push each value to the ring hosted on ``dest[i]``.
 
     Returns (state, pushed_here, dropped):
@@ -134,7 +135,7 @@ def push(backend: Backend, spec: QueueSpec, state: QueueState,
         plan = ExchangePlan(name="queue.push")
         h = plan.add(lanes, dest, capacity, reply_lanes=1, valid=valid,
                      op_name="queue.push")
-        c = plan.commit(backend, max_rounds=max_rounds)
+        c = plan.commit(backend, max_rounds=max_rounds, transport=transport)
         res = c.view(h)
         state, pushed, _, accept = _append(spec, state, res.payload,
                                            res.valid)
@@ -146,7 +147,8 @@ def push(backend: Backend, spec: QueueSpec, state: QueueState,
         return state, pushed, jnp.int32(0), valid & ~landed
 
     res = route(backend, lanes, dest, capacity, valid=valid,
-                op_name="queue.push", max_rounds=max_rounds)
+                op_name="queue.push", max_rounds=max_rounds,
+                transport=transport)
     state, pushed, full_drop, _ = _append(spec, state, res.payload,
                                           res.valid)
     a = _amo_count(spec, promise)
@@ -213,7 +215,8 @@ def _src_ranks(src: jax.Array | int, n: int) -> jax.Array:
 def pop(backend: Backend, spec: QueueSpec, state: QueueState,
         n: int, src: jax.Array | int,
         promise: Promise = Promise.POP,
-        max_rounds: int = 1):
+        max_rounds: int = 1,
+        transport=None):
     """Pop up to ``n`` items from the ring hosted on rank ``src``.
 
     Every rank issues its own request; the owner grants ranges in
@@ -226,11 +229,17 @@ def pop(backend: Backend, spec: QueueSpec, state: QueueState,
     if promise & Promise.LOCAL:
         return local_nonatomic_pop(spec, state, n)
 
-    # unit requests: one row per wanted item (per-(src,dst) capacity = n)
-    req = route(backend, jnp.zeros((n, 1), _U32), src, capacity=n,
-                op_name="queue.pop", max_rounds=max_rounds)
+    # unit requests: one row per wanted item (per-(src,dst) capacity = n);
+    # a single-flow plan so the grant reply rides the transport's exact
+    # inverse hop sequence (dense: the one inverse all-to-all)
+    plan = ExchangePlan(name="queue.pop")
+    h = plan.add(jnp.zeros((n, 1), _U32), src, n,
+                 reply_lanes=spec.lanes + 1, op_name="queue.pop")
+    c = plan.commit(backend, max_rounds=max_rounds, transport=transport)
+    req = c.view(h)
     new, body = _grant(spec, state, req.valid, promise)
-    out, _ = reply(backend, req, body, n, op_name="queue.pop")
+    c.set_reply(h, body)
+    out, _ = c.finish(backend)[h]
     got = out[:, -1] == 1
     values = spec.packer.unpack(out[:, :-1])
     a = _amo_count(spec, promise)
@@ -243,7 +252,9 @@ def push_pop(backend: Backend, spec: QueueSpec, state: QueueState,
              n: int, src: jax.Array | int,
              valid: jax.Array | None = None,
              promise: Promise = Promise.PUSH | Promise.POP,
-             max_rounds: int = 1):
+             max_rounds: int = 1,
+             overflow: str = "drop",
+             transport=None):
     """Fused push + pop sharing ONE exchange round trip.
 
     Under ``ConProm.CircularQueue.push_pop`` the two ops are promised
@@ -256,14 +267,37 @@ def push_pop(backend: Backend, spec: QueueSpec, state: QueueState,
     no matter how wide the pushed values are — fusing costs exactly the
     two ops' standalone bytes.  Returns
     ``(state, pushed, dropped, out_values, got)``.
+
+    ``overflow="carry"`` gives the fused push the same ring-full
+    backpressure as ``push(overflow="carry")`` (DESIGN.md section 1.6):
+    the push flow declares a 1-lane reply carrying the owner's
+    ``_append`` accept mask — it rides the pop's inverse all-to-all, so
+    the carry costs ZERO extra collectives here — and the return grows
+    to ``(state, pushed, dropped=0, out_values, got, carry)`` where
+    ``carry`` marks every valid item that never shipped or was refused
+    by a full ring.
     """
     validate(promise)
+    if overflow not in ("drop", "carry"):
+        raise ValueError(
+            f'queue.push_pop overflow must be "drop" or "carry", '
+            f"got {overflow!r}")
     if fine_grained(promise):
+        if overflow == "carry":
+            state, pushed, dropped, carry = push(
+                backend, spec, state, values, dest, capacity, valid=valid,
+                promise=promise, max_rounds=max_rounds, overflow="carry",
+                transport=transport)
+            state, out, got = pop(backend, spec, state, n, src,
+                                  promise=promise, max_rounds=max_rounds,
+                                  transport=transport)
+            return state, pushed, dropped, out, got, carry
         state, pushed, dropped = push(backend, spec, state, values, dest,
                                       capacity, valid=valid, promise=promise,
-                                      max_rounds=max_rounds)
+                                      max_rounds=max_rounds,
+                                      transport=transport)
         state, out, got = pop(backend, spec, state, n, src, promise=promise,
-                              max_rounds=max_rounds)
+                              max_rounds=max_rounds, transport=transport)
         return state, pushed, dropped, out, got
 
     lanes = spec.packer.pack(values)
@@ -271,16 +305,21 @@ def push_pop(backend: Backend, spec: QueueSpec, state: QueueState,
     if valid is None:
         valid = jnp.ones((nv,), bool)
     src = _src_ranks(src, n)
+    carrying = overflow == "carry"
 
     plan = ExchangePlan(name="queue.push_pop")
-    hp = plan.add(lanes, dest, capacity, valid=valid, op_name="queue.push")
+    hp = plan.add(lanes, dest, capacity, valid=valid,
+                  reply_lanes=1 if carrying else 0, op_name="queue.push")
     hq = plan.add(jnp.zeros((n, 1), _U32), src, n,
                   reply_lanes=spec.lanes + 1, op_name="queue.pop")
-    c = plan.commit(backend, max_rounds=max_rounds)
+    c = plan.commit(backend, max_rounds=max_rounds, transport=transport)
     vp, vq = c.view(hp), c.view(hq)
 
-    state, pushed, full_drop, _ = _append(spec, state, vp.payload, vp.valid)
+    state, pushed, full_drop, accept = _append(spec, state, vp.payload,
+                                               vp.valid)
     state, body = _grant(spec, state, vq.valid, promise)
+    if carrying:
+        c.set_reply(hp, accept.astype(_U32))
     c.set_reply(hq, body)
     outs = c.finish(backend)
     out, _ = outs[hq]
@@ -289,6 +328,11 @@ def push_pop(backend: Backend, spec: QueueSpec, state: QueueState,
     a = _amo_count(spec, promise)
     costs.record("queue.push", costs.Cost(A=a, W=nv))
     costs.record("queue.pop", costs.Cost(A=a, R=n))
+    if carrying:
+        outp, answered = outs[hp]
+        landed = answered & (outp[:, 0] == 1) & valid
+        return (state, pushed, jnp.int32(0), out_values, got,
+                valid & ~landed)
     dropped = vp.dropped + backend.psum(full_drop)
     return state, pushed, dropped, out_values, got
 

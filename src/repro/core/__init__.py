@@ -18,7 +18,10 @@ from repro.core.backend import Backend, SerialBackend, SpmdBackend, get_backend
 from repro.core.promises import ConProm, Promise
 from repro.core.pointers import GlobalPointer
 from repro.core.exchange import (ExchangeOverflowError, ExchangePlan,
-                                 RouteResult, carry_mask, reply, route)
+                                 RouteResult, carry_mask, reply, route,
+                                 suggest_rounds)
+from repro.core.transport import (DenseTransport, HierarchicalTransport,
+                                  Transport, make_transport)
 from repro.core import costs
 
 __all__ = [
@@ -35,5 +38,10 @@ __all__ = [
     "route",
     "reply",
     "RouteResult",
+    "suggest_rounds",
+    "Transport",
+    "DenseTransport",
+    "HierarchicalTransport",
+    "make_transport",
     "costs",
 ]

@@ -53,12 +53,22 @@ class Backend(abc.ABC):
         """Traced index of the calling rank (i32 scalar)."""
 
     @abc.abstractmethod
-    def all_to_all(self, x: jax.Array) -> jax.Array:
+    def all_to_all(self, x: jax.Array,
+                   groups: Sequence[Sequence[int]] | None = None) -> jax.Array:
         """Tiled all-to-all over axis 0.
 
         ``x`` has shape (nprocs * C, ...): rows [d*C:(d+1)*C] are sent to
         rank d; the result's rows [s*C:(s+1)*C] were received from rank s.
         Identity when nprocs == 1.
+
+        ``groups`` restricts the collective to a *sub-axis*: a static
+        partition of [0, nprocs) into equal-size groups (e.g. the rows or
+        columns of a Pr x Pc virtual factorization of the rank axis —
+        DESIGN.md section 1.7).  Then ``x`` has shape (G * C, ...) with G
+        the group size: block j goes to the j-th member of my group, and
+        the result's block j came from that member.  This is the paper's
+        "hierarchical team" primitive (DASH-style) expressed over one
+        flat communication axis.
         """
 
     @abc.abstractmethod
@@ -121,7 +131,7 @@ class SerialBackend(Backend):
     def rank(self) -> jax.Array:
         return jnp.int32(0)
 
-    def all_to_all(self, x: jax.Array) -> jax.Array:
+    def all_to_all(self, x: jax.Array, groups=None) -> jax.Array:
         return x
 
     def all_gather(self, x: jax.Array) -> jax.Array:
@@ -159,9 +169,16 @@ class SpmdBackend(Backend):
     def rank(self) -> jax.Array:
         return jax.lax.axis_index(self.axis).astype(jnp.int32)
 
-    def all_to_all(self, x: jax.Array) -> jax.Array:
+    def all_to_all(self, x: jax.Array, groups=None) -> jax.Array:
         if self._nprocs == 1:
             return x
+        if groups is not None:
+            groups = [list(g) for g in groups]
+            if all(len(g) == 1 for g in groups):
+                return x          # single-member groups: identity
+            return jax.lax.all_to_all(x, self.axis, split_axis=0,
+                                      concat_axis=0, tiled=True,
+                                      axis_index_groups=groups)
         return jax.lax.all_to_all(x, self.axis, split_axis=0, concat_axis=0,
                                   tiled=True)
 

@@ -41,6 +41,11 @@ class Cost:
     #                       aggregation argument, section 4.2)
     bytes_out: int = 0    # bytes in the request direction (requester->owner)
     bytes_in: int = 0     # bytes in the reply direction (owner->requester)
+    hops: int = 0         # TPU observable: physical exchange stages on the
+    #                       critical path — 1 per dense all-to-all launch,
+    #                       2 per hierarchical (two-stage) launch, so a
+    #                       cost log shows which transport moved the bytes
+    #                       (DESIGN.md section 1.7)
 
     def __add__(self, other: "Cost") -> "Cost":
         return Cost(
@@ -54,6 +59,7 @@ class Cost:
             self.rounds + other.rounds,
             self.bytes_out + other.bytes_out,
             self.bytes_in + other.bytes_in,
+            self.hops + other.hops,
         )
 
     def formula(self) -> str:

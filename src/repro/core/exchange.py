@@ -54,6 +54,17 @@ requester resolves slots to batch positions from purely local state
 captured at commit time; no binning, no argsort, and no src_pos lane
 in the reply direction.
 
+The *physical* movement behind commit/finish is pluggable (DESIGN.md
+section 1.7): the plan computes the logical exchange — the ONE binning
+pass, admission, ragged layout, send maps — and hands movement to a
+:class:`repro.core.transport.Transport`.  ``DenseTransport`` (the
+default) is the one-shot tiled all-to-all described above;
+``HierarchicalTransport`` factors the rank axis ``P = Pr x Pc`` and
+moves everything in two sqrt(P)-peer stages with a relay re-binning
+hop, bit-identical to dense whenever its stage capacities admit the
+dense-admitted traffic.  Containers thread a ``transport=`` knob;
+``None`` keeps the dense program byte-for-byte.
+
 Shapes and capacities are static; what happens beyond a flow's capacity
 is governed by the plan's ``overflow`` policy (DESIGN.md section 1.6).
 RDMA BCL retries a failed fetch-and-add; the static-shape analogue is
@@ -84,8 +95,9 @@ import jax.numpy as jnp
 
 from repro.core import costs
 from repro.core.backend import Backend
-from repro.core.object_container import ragged_offsets, scatter_rows
 from repro.core.promises import Promise, fine_grained, validate
+from repro.core.transport import (DENSE, FlowWire, RequestArgs, Transport,
+                                  make_transport)
 from repro.kernels import ops as kops
 
 _U32 = jnp.uint32
@@ -267,7 +279,8 @@ class ExchangePlan:
 
     def commit(self, backend: Backend, impl: str = "auto",
                max_rounds: int = 1,
-               overflow: str = "drop") -> "CommittedPlan":
+               overflow: str = "drop",
+               transport: Transport | str | None = None) -> "CommittedPlan":
         """Issue the request round: one fused all-to-all for all flows.
 
         ``max_rounds=R`` adds R-1 carryover retry rounds: retry round r
@@ -279,6 +292,12 @@ class ExchangePlan:
         :class:`ExchangeOverflowError` when counts are concrete), or
         ``"carry"`` (leftovers stay available via
         :meth:`CommittedPlan.leftover` for caller re-injection).
+        ``transport`` picks the physical collective layer (DESIGN.md
+        section 1.7): ``None``/``"dense"`` is the one-shot tiled
+        all-to-all, ``"hier"`` the two-stage Pr x Pc exchange; a
+        :class:`~repro.core.transport.Transport` instance passes
+        through.  The logical semantics — admission, owner layout,
+        drops, send maps — are transport-independent.
         """
         if not self._flows:
             raise ValueError("commit() on an empty ExchangePlan")
@@ -292,21 +311,33 @@ class ExchangePlan:
             raise ValueError(
                 f"overflow must be one of {OVERFLOW_POLICIES}, "
                 f"got {overflow!r}")
+        transport = make_transport(transport)
         self._committed = True
         if fine_grained(self.promise):
-            views = [route(backend, f.payload, f.dest, f.capacity,
-                           valid=f.valid, op_name=f.op_name, impl=impl,
-                           max_rounds=_flow_rounds(f, int(max_rounds)),
-                           overflow=overflow)
-                     for f in self._flows]
-            return CommittedPlan(self, views, sequential=True)
-        return self._commit_fused(backend, impl, int(max_rounds), overflow)
+            # sequential oracle: one single-flow plan per flow, in
+            # registration order; the sub-plans carry the replies so the
+            # oracle exercises the SAME transport end to end
+            subs = []
+            for f in self._flows:
+                p = ExchangePlan(name=f.op_name)
+                p.add(f.payload, f.dest, f.capacity,
+                      reply_lanes=f.reply_lanes, valid=f.valid,
+                      op_name=f.op_name)
+                subs.append(p.commit(
+                    backend, impl=impl,
+                    max_rounds=_flow_rounds(f, int(max_rounds)),
+                    overflow=overflow, transport=transport))
+            return CommittedPlan(self, [c.view(0) for c in subs],
+                                 sequential=True, subplans=subs)
+        return self._commit_fused(backend, impl, int(max_rounds), overflow,
+                                  transport)
 
     # -- fused lowering ---------------------------------------------------
 
     def _commit_fused(self, backend: Backend, impl: str,
                       max_rounds: int = 1,
-                      overflow: str = "drop") -> "CommittedPlan":
+                      overflow: str = "drop",
+                      transport: Transport = DENSE) -> "CommittedPlan":
         flows = self._flows
         nprocs = backend.nprocs()
         nflows = len(flows)
@@ -316,7 +347,6 @@ class ExchangePlan:
         # clamped to ceil(N_f/C_f) — exactly-sized flows never pay for
         # retry launches their buckets cannot use
         rounds_f = [_flow_rounds(f, rounds) for f in flows]
-        nrounds = max(rounds_f)
         # ragged wire: flow f's rows are exactly L_f + 1 words (payload
         # lanes + its own metadata lane) — no cross-flow padding
         roww = [f.lanes + 1 for f in flows]
@@ -330,7 +360,8 @@ class ExchangePlan:
         # composite (dest, flow) buckets.  Retry round r ships exactly
         # the items with within-bucket rank in [r*C_f, (r+1)*C_f) — a
         # pure mask over these same offsets, never a second pass.  The
-        # "exchange.bin" entry is how tests pin that invariant.
+        # "exchange.bin" entry is how tests pin that invariant (per-hop
+        # re-binning passes inside a transport record their own).
         costs.record("exchange.bin",
                      costs.Cost(local=int(dest_all.shape[0])))
         counts, offsets = kops.multi_bin_offsets(
@@ -340,18 +371,10 @@ class ExchangePlan:
         eff_arr = caps_arr * rounds_arr                # effective R_f*C_f
         ok = valid_all & (offsets < eff_arr[flow_id])
 
-        # reply layout: only replying flows get a word segment (compact
-        # ragged wire, exactly R_f words per row); segments span the
-        # EFFECTIVE capacity so the single inverse all-to-all answers
-        # every round's arrivals at once
-        replying = [fi for fi, f in enumerate(flows) if f.reply_lanes > 0]
-        rep_starts, wtot_rep = ragged_offsets(
-            [caps[fi] * rounds_f[fi] * flows[fi].reply_lanes
-             for fi in replying])
-        wseg_rep = dict(zip(replying, rep_starts))
-
-        # wire bodies and requester-local slot maps are built ONCE;
-        # retry rounds reuse them with different slot masks
+        # wire bodies and requester-local slot maps are built ONCE and
+        # are TRANSPORT-INDEPENDENT: admission comes from the one
+        # binning pass, so every transport ships the same items to the
+        # same dense owner slots
         bodies = []
         send_items, send_occs = [], []
         row0 = 0
@@ -379,52 +402,30 @@ class ExchangePlan:
                                            mode="drop"))
             row0 += f.n
 
-        # round r's all-to-all carries only the flows still retrying at
-        # r, each in its own ragged word segment of this round's
-        # (narrower) wire; the kernel turns the ONE binning pass's ranks
-        # into word slots for the items whose rank lands in the round's
-        # capacity window, and each flow packs its own row width
-        roww_arr = jnp.asarray(roww, _I32)
-        recvs, woffs_by_round = [], []
-        for r in range(nrounds):
-            live = [fi for fi in range(nflows) if rounds_f[fi] > r]
-            starts, w_r = ragged_offsets([caps[fi] * roww[fi]
-                                          for fi in live])
-            woff_map = dict(zip(live, starts))
-            woff_round = jnp.asarray(
-                [woff_map.get(fi, 0) for fi in range(nflows)], _I32)
-            slot_w = kops.ragged_slots(
-                dest_all, flow_id, offsets, valid_all, r, woff_round,
-                roww_arr, caps_arr, rounds_arr, w_r, nprocs * w_r,
-                impl=impl)
-            send = jnp.zeros((nprocs * w_r,), _U32)
-            row0 = 0
-            for fi, f in enumerate(flows):
-                if rounds_f[fi] > r:
-                    send = scatter_rows(send, slot_w[row0:row0 + f.n],
-                                        bodies[fi])
-                row0 += f.n
-            recvs.append(backend.all_to_all(send).reshape(nprocs, w_r))
-            woffs_by_round.append(woff_map)
+        # physical movement: the transport owns the launches, the wire
+        # words, and their cost attribution (DESIGN.md section 1.7)
+        plan_op = self.name or flows[0].op_name
+        specs = [FlowWire(caps[fi], rounds_f[fi], roww[fi],
+                          flows[fi].reply_lanes, flows[fi].n,
+                          flows[fi].op_name)
+                 for fi in range(nflows)]
+        segments, extra_drop, tctx = transport.request(
+            backend, RequestArgs(specs, bodies, dest_all, flow_id, offsets,
+                                 valid_all, plan_op, impl))
 
         # one psum covers every flow's overflow accounting; only rank
-        # >= R_f*C_f is a drop — earlier overflow was carried to a retry
+        # >= R_f*C_f is a drop — earlier overflow was carried to a retry.
+        # A transport with explicitly undersized stage capacities may
+        # drop admitted items too; those counts arrive psum'ed.
         over = jnp.maximum(counts - eff_arr[None, :], 0).sum(0)   # (F,)
         dropped = backend.psum(over).astype(_I32)
+        if extra_drop is not None:
+            dropped = dropped + extra_drop
 
         views = []
         for fi, f in enumerate(flows):
             cap_e = rounds_f[fi] * f.capacity
-            w = roww[fi]
-            # rounds concatenate per source: owner row s*(R*C_f) + o holds
-            # the rank-o arrival from rank s, exactly the single-round
-            # layout at capacity R*C_f; the flow's word segment reshapes
-            # straight to its own (rows, L_f+1) width
-            parts = [recvs[r][:, woffs_by_round[r][fi]:
-                              woffs_by_round[r][fi] + f.capacity * w]
-                     .reshape(nprocs, f.capacity, w)
-                     for r in range(rounds_f[fi])]
-            segment = jnp.stack(parts, axis=1).reshape(nprocs * cap_e, w)
+            segment = segments[fi]
             pay = segment[:, :f.lanes]
             meta_r = segment[:, f.lanes]
             out_valid = (meta_r & _VALID_BIT) != 0
@@ -434,50 +435,35 @@ class ExchangePlan:
                                      dropped[fi], cap_e,
                                      send_items[fi], send_occs[fi]))
 
-        # cost attribution: per-flow wire segments are ragged, so each
-        # flow's bytes are EXACT — its own capacity x its own row width,
-        # equal to the single-flow route() cost; the physical collective
-        # and its round once per launch, under the plan's op name —
-        # retry launches land under "<op>.retry" so skew tolerance is
-        # priced separately from the base round
-        plan_op = self.name or flows[0].op_name
-        for fi, f in enumerate(flows):
-            fb = nprocs * f.capacity * roww[fi] * 4
-            costs.record(f.op_name, costs.Cost(
-                bytes_moved=fb, bytes_out=fb))
-            if rounds_f[fi] > 1:
-                rb = fb * (rounds_f[fi] - 1)
-                costs.record(f"{f.op_name}.retry", costs.Cost(
-                    bytes_moved=rb, bytes_out=rb))
-        costs.record(plan_op, costs.Cost(collectives=1, rounds=1))
-        for _ in range(nrounds - 1):
-            costs.record(f"{plan_op}.retry",
-                         costs.Cost(collectives=1, rounds=1))
-
         if overflow == "raise-in-test":
             _raise_on_drops(flows, dropped)
 
         return CommittedPlan(self, views, sequential=False,
-                             reply_words=wtot_rep, reply_seg=wseg_rep)
+                             transport=transport, tctx=tctx)
 
 
 class CommittedPlan:
     """Request round issued; owner-side views available, replies pending."""
 
     def __init__(self, plan: ExchangePlan, views: list[RouteResult],
-                 sequential: bool, reply_words: int = 0,
-                 reply_seg: dict | None = None):
+                 sequential: bool, transport: Transport | None = None,
+                 tctx=None, subplans: list["CommittedPlan"] | None = None):
         self._plan = plan
         self._views = views
         self._sequential = sequential
-        self._reply_words = reply_words    # ragged reply words per block
-        self._reply_seg = reply_seg or {}  # flow -> segment's first word
+        self._transport = transport        # physical layer (fused path)
+        self._tctx = tctx                  # transport's reply context
+        self._subplans = subplans or []    # FINE: one sub-plan per flow
         self._replies: dict[int, jax.Array] = {}
         self._finished = False
 
     def view(self, handle: int) -> RouteResult:
         """Owner-side view of one flow (same layout as eager ``route``)."""
         return self._views[handle]
+
+    def reply_lanes(self, handle: int) -> int:
+        """Reply words per row one flow declared at ``add`` (0 = none)."""
+        return self._plan._flows[handle].reply_lanes
 
     def leftover(self, handle: int) -> tuple[jax.Array, jax.Array]:
         """Requester-side overflow carry for one flow.
@@ -536,57 +522,33 @@ class CommittedPlan:
             return {}
 
         if self._sequential:
+            # FINE oracle: each flow's reply is its own sub-plan finish,
+            # through the same transport as its request
             outs = {}
             for fi in replying:
-                f = flows[fi]
-                outs[fi] = reply(backend, self._views[fi], self._replies[fi],
-                                 f.n, op_name=f.op_name)
+                sub = self._subplans[fi]
+                sub.set_reply(0, self._replies[fi])
+                outs[fi] = sub.finish(backend)[0]
             return outs
 
-        nprocs = backend.nprocs()
-        wtot = self._reply_words
-        send = jnp.zeros((nprocs * wtot,), _U32)
-        for fi in replying:
-            f = flows[fi]
-            view = self._views[fi]
-            cap = view.capacity          # effective R*C_f (retry rounds)
-            rl = f.reply_lanes
-            rows = jnp.where(view.valid[:, None], self._replies[fi], 0)
-            # owner arrival row s*C_f + j  ->  words
-            # [s*wtot + seg_f + j*R_f, ... + R_f) — the flow's own ragged
-            # segment, exactly R_f words per reply
-            ar = jnp.arange(nprocs * cap, dtype=_I32)
-            base = (ar // cap) * wtot + self._reply_seg[fi] + (ar % cap) * rl
-            send = scatter_rows(send, base, rows)
+        # owner replies in arrival order, masked to real arrivals; the
+        # transport lands them back in the requesters' send slots
+        staged = {fi: jnp.where(self._views[fi].valid[:, None],
+                                self._replies[fi], 0)
+                  for fi in replying}
+        slots = self._transport.reply(backend, self._tctx, staged)
 
-        back = backend.all_to_all(send)
-
-        # the inverse all-to-all lands flow f's replies in its own word
-        # segment of each source block; slicing the segment recovers the
-        # flow-local slot layout, so the view's send maps resolve it
-        back2 = back.reshape(nprocs, wtot)
         outs = {}
         for fi in replying:
             f = flows[fi]
             view = self._views[fi]
-            cap = view.capacity
-            rl = f.reply_lanes
-            seg = back2[:, self._reply_seg[fi]:
-                        self._reply_seg[fi] + cap * rl]
-            seg = seg.reshape(nprocs * cap, rl)
+            seg = slots[fi]
             item = jnp.where(view.send_occ, view.send_item, f.n)
-            out = jnp.zeros((f.n, rl), _U32).at[item].set(seg, mode="drop")
+            out = jnp.zeros((f.n, f.reply_lanes), _U32).at[item].set(
+                seg, mode="drop")
             answered = jnp.zeros((f.n,), bool).at[item].set(
                 view.send_occ, mode="drop")
             outs[fi] = (out, answered)
-
-        plan_op = self._plan.name or flows[0].op_name
-        for fi in replying:
-            fb = (nprocs * self._views[fi].capacity
-                  * flows[fi].reply_lanes * 4)
-            costs.record(flows[fi].op_name, costs.Cost(
-                bytes_moved=fb, bytes_in=fb))
-        costs.record(plan_op, costs.Cost(collectives=1, rounds=1))
         return outs
 
 
@@ -626,7 +588,8 @@ def route(backend: Backend,
           op_name: str = "route",
           impl: str = "auto",
           max_rounds: int = 1,
-          overflow: str = "drop") -> RouteResult:
+          overflow: str = "drop",
+          transport: Transport | str | None = None) -> RouteResult:
     """Send each row of ``payload`` to rank ``dest[i]``; return owner view.
 
     Thin eager wrapper: a single-flow :class:`ExchangePlan`, committed
@@ -646,11 +609,16 @@ def route(backend: Backend,
              anything new
     overflow: residual policy beyond rank R*C — "drop" | "raise-in-test"
              | "carry" (pair with :func:`carry_mask` on the result)
+    transport: physical collective layer ("dense" default; see
+             DESIGN.md section 1.7).  Flows needing a reply through a
+             non-dense transport should use an :class:`ExchangePlan`
+             with ``reply_lanes`` declared — the standalone
+             :func:`reply` is the dense inverse all-to-all only.
     """
     plan = ExchangePlan(name=op_name)
     h = plan.add(payload, dest, capacity, valid=valid, op_name=op_name)
     return plan.commit(backend, impl=impl, max_rounds=max_rounds,
-                       overflow=overflow).view(h)
+                       overflow=overflow, transport=transport).view(h)
 
 
 def reply(backend: Backend,
@@ -675,7 +643,10 @@ def reply(backend: Backend,
     ``CommittedPlan.finish`` instead, which fuses every flow's replies
     into ONE such inverse permutation (calling ``reply`` on a fused view
     is semantically correct — the slot maps are flow-local — but launches
-    an unfused collective per flow).
+    an unfused collective per flow).  This helper is the DENSE inverse
+    permutation only: a plan committed over a non-dense transport must
+    reply through ``finish`` (declare ``reply_lanes`` on the flow), so
+    the reply rides the transport's exact inverse hop sequence.
     """
     if reply_payload.ndim == 1:
         reply_payload = reply_payload[:, None]
@@ -693,9 +664,34 @@ def reply(backend: Backend,
 
     wire_bytes = send.shape[0] * lanes * 4
     costs.record(op_name, costs.Cost(
-        collectives=1, rounds=1, bytes_moved=wire_bytes,
+        collectives=1, rounds=1, hops=1, bytes_moved=wire_bytes,
         bytes_in=wire_bytes))
     return out, answered
+
+
+def suggest_rounds(loads, capacity: int, slack: float = 1.0,
+                   limit: int = 16) -> int:
+    """Heuristic ``max_rounds`` from an observed load trajectory.
+
+    The retry-round analogue of :func:`exchange_capacity` (ROADMAP's
+    adaptive-rounds item): given the per-step observed PEAK
+    (dest, flow)-bucket loads of recent batches — e.g. ``max
+    bucket count`` or ``max expert_load`` readings — pick the smallest
+    R whose effective capacity ``R * capacity`` covers the hottest
+    bucket seen, times ``slack``.  ``loads`` is a scalar or any
+    iterable of scalars (ints, numpy, or concrete jax scalars); the
+    result clamps to ``[1, limit]`` so a pathological trajectory cannot
+    demand unbounded launches.  Callers with no trajectory yet pass the
+    uniform expectation and get 1.
+    """
+    if capacity <= 0:
+        raise ValueError(f"capacity must be positive, got {capacity}")
+    try:
+        peak = max((int(x) for x in loads), default=0)
+    except TypeError:
+        peak = int(loads)
+    need = -(-int(peak * slack) // int(capacity)) if peak > 0 else 1
+    return max(1, min(int(limit), need))
 
 
 def exchange_capacity(n_per_rank: int, nprocs: int, slack: float = 1.25) -> int:

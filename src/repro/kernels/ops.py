@@ -325,6 +325,26 @@ def ragged_slots(bins, flow, offsets, valid, rnd: int, word_off, row_words,
                      sentinel).astype(_I32)
 
 
+def stage_slots(bins, flow, offsets, valid, word_off, row_words, caps,
+                live, wtot: int, sentinel: int, impl: str = "auto"):
+    """Per-stage ragged word slots for a transport hop (DESIGN.md §1.7).
+
+    The hierarchical transport re-bins items per hop — by destination
+    *column* at the source, by destination *row* at the relay — and
+    packs each hop's wire with the same ragged offset-table math as the
+    fused plan wire.  This is :func:`ragged_slots` with no retry-round
+    window: item i of flow ``f`` gets word ``bins[i]*wtot + word_off[f]
+    + offsets[i]*row_words[f]`` iff it is valid, its stage rank is
+    below the stage capacity ``caps[f]``, and ``live[f]`` marks the
+    flow as riding this hop; everything else gets ``sentinel``.  Both
+    the jnp path and the Pallas kernel are the existing ``ragged_slots``
+    lowerings (round 0, per-flow "rounds" = the live mask), so the hop
+    adds zero new kernel surface and still no argsort.
+    """
+    return ragged_slots(bins, flow, offsets, valid, 0, word_off, row_words,
+                        caps, live, wtot, sentinel, impl=impl)
+
+
 # --------------------------------------------------------------------------
 # flash attention
 # --------------------------------------------------------------------------

@@ -35,6 +35,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.backend import SpmdBackend
 from repro.core.exchange import ExchangePlan
+from repro.core.transport import make_transport
 from repro.models.sharding import Axes
 from repro.compat import shard_map
 
@@ -160,9 +161,12 @@ def moe_apply(params, x, cfg, mesh: Mesh, axes: Axes):
     Returns ``(y, aux, stats)``: the aux load-balance loss plus a stats
     dict with ``expert_load`` — the true global post-capacity
     served-token count per expert (E,), delivered by the stats flow that
-    rides the dispatch plan's collectives.  This is the observability
-    signal DeepSeek-style bias routing (``moe_bias``) updates from; it
-    costs zero extra collectives.
+    rides the dispatch plan's collectives — and ``dispatch_dropped``,
+    the global count of token copies the exchange wire could not admit
+    (the trajectory ``exchange.suggest_rounds`` reads to pick
+    ``cfg.moe_dispatch_rounds``).  This is the observability signal
+    DeepSeek-style bias routing (``moe_bias``) updates from; it costs
+    zero extra collectives.
     """
     mo = cfg.moe
     b, t, d = x.shape
@@ -194,6 +198,8 @@ def moe_apply(params, x, cfg, mesh: Mesh, axes: Axes):
     e_loc = -(-e // nm)
     seq_split = t % nm == 0 and nm > 1
     _expert_ffn = _make_expert_ffn(cfg)
+    # physical collective layer for the dispatch plan (DESIGN.md §1.7)
+    transport = make_transport(cfg.exchange_transport)
 
     def dispatch_dedup(xl, idxl, wl, wg, wi, wo_):
         """One exchange row per (token, distinct owner rank): the owner
@@ -234,7 +240,8 @@ def moe_apply(params, x, cfg, mesh: Mesh, axes: Axes):
                          reply_lanes=act_lanes, valid=first.reshape(-1),
                          op_name="moe.dispatch")
         h_st = _stats_flow(plan, e, e_loc)
-        c = plan.commit(bk, max_rounds=cfg.moe_dispatch_rounds)
+        c = plan.commit(bk, max_rounds=cfg.moe_dispatch_rounds,
+                        transport=transport)
         res = c.view(h_tok)
 
         m = res.payload.shape[0]
@@ -270,7 +277,8 @@ def moe_apply(params, x, cfg, mesh: Mesh, axes: Axes):
         load = outs[h_st][0][:, 0].astype(_F32)[None]          # (1, e)
         yk = _unpack_act(out_lanes, bf16).reshape(n_tok, k, d)
         # weights applied at owner
-        return yk.sum(axis=1).reshape(bl, tl, d), load
+        return (yk.sum(axis=1).reshape(bl, tl, d), load,
+                res.dropped[None])
 
     def dispatch(xl, idxl, wl, wg, wi, wo_):
         # xl (b_loc, t_loc, D); idxl/wl (b_loc, t_loc, K) — PER-DEVICE
@@ -296,7 +304,8 @@ def moe_apply(params, x, cfg, mesh: Mesh, axes: Axes):
         h_tok = plan.add(payload, dest, cap, reply_lanes=act_lanes,
                          op_name="moe.dispatch")
         h_st = _stats_flow(plan, e, e_loc)
-        c = plan.commit(bk, max_rounds=cfg.moe_dispatch_rounds)
+        c = plan.commit(bk, max_rounds=cfg.moe_dispatch_rounds,
+                        transport=transport)
         res = c.view(h_tok)
 
         rows = _unpack_act(res.payload[:, :act_lanes], bf16)
@@ -322,7 +331,8 @@ def moe_apply(params, x, cfg, mesh: Mesh, axes: Axes):
         load = outs[h_st][0][:, 0].astype(_F32)[None]           # (1, e)
         yk = _unpack_act(out_lanes, bf16)                       # (n, D)
         yk = yk.reshape(bl, tl, k, d)
-        return jnp.einsum("btkd,btk->btd", yk, wl.astype(_F32)), load
+        return (jnp.einsum("btkd,btk->btd", yk, wl.astype(_F32)), load,
+                res.dropped[None])
 
     din = axes.data
     if seq_split:
@@ -332,17 +342,21 @@ def moe_apply(params, x, cfg, mesh: Mesh, axes: Axes):
         in_x = P(din, None, None)
         in_i = P(din, None, None)
     espec = lambda *rest: P(axes.model, *rest)
-    y, load = shard_map(
+    y, load, drops = shard_map(
         dispatch, mesh=mesh,
         in_specs=(in_x, in_i, in_i,
                   espec(None, None), espec(None, None), espec(None, None)),
-        out_specs=(in_x, P(din, None)),
+        out_specs=(in_x, P(din, None), P(din)),
         check_vma=False,   # replication over 'model' holds by construction
     )(x, top_idx.astype(_I32), top_w,
       params["experts"]["w_gate"], params["experts"]["w_in"],
       params["experts"]["w_out"])
     y = y.astype(x.dtype)
     expert_load = load.sum(axis=0)        # (E,) summed over data shards
+    # wire drops of the token flow (already global over the model axis);
+    # summed over data shards — the skew observability signal the
+    # suggest_rounds heuristic and the --skew benchmarks read
+    dispatch_dropped = drops.sum()
 
     # ---- always-on paths ----
     from repro.models.layers import mlp
@@ -350,4 +364,5 @@ def moe_apply(params, x, cfg, mesh: Mesh, axes: Axes):
         y = y + mlp(params["shared"], x, cfg.activation)
     if "dense" in params:
         y = y + mlp(params["dense"], x, cfg.activation)
-    return y, aux, {"expert_load": expert_load}
+    return y, aux, {"expert_load": expert_load,
+                    "dispatch_dropped": dispatch_dropped}

@@ -204,6 +204,110 @@ def main():
           int(np.asarray(zdrop8).sum()) == 0 and
           sorted(rec.tolist()) == sorted(np.asarray(zvals).tolist()))
 
+    # ---- hierarchical transport == dense on a 2-D factorization ----
+    # the full container battery (hashmap find/insert/find_insert, queue
+    # push/pop/push_pop, bloom insert_find, a raw retry plan) over the
+    # two-stage Pr x Pc exchange must be bit-identical to the dense
+    # one-shot all-to-all (DESIGN.md section 1.7)
+    from repro.core import HierarchicalTransport, costs as _costs
+
+    def transport_battery(transport):
+        def body(keys, vals, fk, ik, iv, qv, qd, p3, d3):
+            bk = get_backend("bcl")
+            spec, st = hm.hashmap_create(bk, 8192, SDS((), jnp.uint32),
+                                         SDS((), jnp.uint32), block_size=16)
+            st, ins_ok = hm.insert(bk, spec, st, keys, vals, capacity=NLOC,
+                                   transport=transport)
+            st, fv, ff = hm.find(bk, spec, st, fk, capacity=NLOC,
+                                 transport=transport)
+            st, v, f, ok = hm.find_insert(
+                bk, spec, st, fk, ik, iv, capacity=NLOC,
+                promise=ConProm.HashMap.find_insert, transport=transport)
+            qspec, qst = q.queue_create(bk, 512, SDS((), jnp.uint32),
+                                        circular=True)
+            nbr = (jax.lax.axis_index("bcl") + 1) % PROCS
+            qst, pushed, dropped, out, got = q.push_pop(
+                bk, qspec, qst, qv, qd, 32, 24, nbr,
+                promise=ConProm.CircularQueue.push_pop,
+                transport=transport)
+            qst, pv, pg = q.pop(bk, qspec, qst, 8, nbr,
+                                transport=transport)
+            bspec, bst = bl.bloom_create(bk, 1 << 14, SDS((), jnp.uint32),
+                                         k=4)
+            bst, already, present = bl.insert_find(
+                bk, bspec, bst, qv, fk, 64, NLOC, transport=transport)
+            # raw plan with carryover retry rounds (max_rounds > 1)
+            plan = ExchangePlan(name="retry3")
+            h3 = plan.add(p3, d3, 8, reply_lanes=2, op_name="retry3")
+            c = plan.commit(bk, max_rounds=3, transport=transport)
+            c.set_reply(h3, c.view(h3).payload[:, :2] + 9)
+            o3 = c.finish(bk)[h3]
+            v3 = c.view(h3)
+            return (ins_ok, fv, ff, v, f, ok, pushed[None], dropped[None],
+                    out, got, pv, pg, already, present, st.status,
+                    bst.words, o3[0], o3[1], v3.payload, v3.valid,
+                    v3.dropped[None])
+
+        return jax.jit(shard_map(body, mesh=mesh, in_specs=(P("bcl"),) * 9,
+                                 out_specs=(P("bcl"),) * 21))
+
+    tb_args = fi_args + (rg_args[1], rg_args[3])
+    got_dense = transport_battery(None)(*tb_args)
+    for pr, pc in ((2, 4), (4, 2)):
+        got_hier = transport_battery(HierarchicalTransport(pr, pc))(*tb_args)
+        check(f"exchange.hier_equals_dense_8rank_{pr}x{pc}",
+              all(np.array_equal(np.asarray(a), np.asarray(b))
+                  for a, b in zip(got_dense, got_hier)))
+
+    # ---- per-hop byte attribution + the sparse-destination wire pin ----
+    # every rank sends all n items to ONE rank ((r+1) % 8): per-stage
+    # loads are 8, so explicit stage caps (8, 8) are lossless while the
+    # dense wire must pad EVERY (src, dst) pair to the hottest bucket.
+    # 4-lane rows: hier = Pc*c1*(L+2) + Pr*c2*(L+2) = 48*6 words/rank,
+    # dense = P*C*(L+1) = 64*5 — the two-stage wire is strictly below.
+    n_sp, lanes_sp = 8, 4
+    sp_pay = jnp.asarray(
+        np.random.default_rng(5).integers(0, 1 << 19,
+                                          (PROCS * n_sp, lanes_sp)),
+        jnp.uint32)
+
+    def sparse_push(transport):
+        def body(pay):
+            bk = get_backend("bcl")
+            dest = jnp.full((n_sp,), (jax.lax.axis_index("bcl") + 1)
+                            % PROCS, jnp.int32)
+            res = route(bk, pay, dest, capacity=n_sp, op_name="sp",
+                        transport=transport)
+            return res.payload, res.valid, res.dropped[None]
+
+        with _costs.recording() as log:
+            out = jax.jit(shard_map(body, mesh=mesh,
+                                    in_specs=(P("bcl"),),
+                                    out_specs=(P("bcl"),) * 3))(sp_pay)
+        return out, log
+
+    hier_sp = HierarchicalTransport(2, 4, stage_caps={"sp": (8, 8)})
+    (dp, dv, dd), dlog = sparse_push(None)
+    (hp, hv, hd), hlog = sparse_push(hier_sp)
+    check("exchange.hier_sparse_results_equal",
+          np.array_equal(np.asarray(dp), np.asarray(hp))
+          and np.array_equal(np.asarray(dv), np.asarray(hv))
+          and int(np.asarray(hd).sum()) == 0)
+    dense_words = PROCS * n_sp * (lanes_sp + 1)
+    hier_words = (4 * 8 + 2 * 8) * (lanes_sp + 2)
+    c_d, c_h = dlog.by_op("sp"), hlog.by_op("sp")
+    c_rel = hlog.by_op("sp.relay")
+    check("exchange.hier_hop_bytes_exact",
+          c_h.bytes_out == 4 * 8 * (lanes_sp + 2) * 4
+          and c_rel.bytes_out == 2 * 8 * (lanes_sp + 2) * 4
+          and c_h.hops == 2 and c_h.collectives == 2
+          and c_d.hops == 1 and c_d.collectives == 1)
+    check("exchange.hier_sparse_wire_below_dense",
+          c_h.bytes_out + c_rel.bytes_out < c_d.bytes_out
+          and hier_words < dense_words
+          and c_h.bytes_out + c_rel.bytes_out == hier_words * 4
+          and c_d.bytes_out == dense_words * 4)
+
     # ---- bloom: distributed atomicity of duplicate insertion ----
     def bloomdup(items):
         bk = get_backend("bcl")

@@ -92,6 +92,53 @@ def test_app_skew_arms_smoke(capsys):
         assert cols[6] != "" and cols[7] != "", ln     # retry_rounds,dropped
 
 
+def test_lm_moe_skew_arm_smoke(capsys):
+    """The lm_step --skew zipf arm (MoE dispatch under zipf-routed
+    tokens): the drop arm loses tokens at uniform expert capacity, the
+    suggest_rounds-driven retry arm serves every token, and both rows
+    follow the shared CSV schema (retry_rounds + dropped columns)."""
+    from benchmarks import lm_step
+    from benchmarks.util import HEADER
+    ncols = len(HEADER.split(","))
+    results = {}
+    lm_step._moe_skew_arm(results, smoke=True)
+    assert results["lm_moe_skew_drop_dropped"] > 0
+    assert results["lm_moe_skew_retry_dropped"] == 0
+    rows = [ln for ln in capsys.readouterr().out.strip().splitlines()
+            if ln.startswith("lm_moe_skew_")]
+    assert len(rows) == 2
+    for ln in rows:
+        cols = ln.split(",")
+        assert len(cols) == ncols, ln
+        assert cols[6] != "" and cols[7] != "", ln     # retry_rounds,dropped
+    # the retry arm's round count came from the heuristic, not a constant
+    retry_row = [ln for ln in rows if "retry" in ln][0]
+    assert int(retry_row.split(",")[6]) > 1
+
+
+def test_micro_transport_arm_smoke(capsys):
+    """The --transport hier arm: micro benchmarks run the exchange over
+    the two-stage transport, rows are suffixed _hier, and the hops
+    column shows the extra stage (2 per launch where dense logs 1)."""
+    from benchmarks import micro_queue
+    from benchmarks.util import HEADER
+    ncols = len(HEADER.split(","))
+    r = micro_queue.run(smoke=True, transport="hier")
+    for k in ("fq_push", "fq_pop", "fq_local_pop"):
+        assert r[k] > 0, k
+    rows = [ln for ln in capsys.readouterr().out.strip().splitlines()
+            if "," in ln]
+    hier_rows = [ln for ln in rows if ln.split(",")[0].endswith("_hier")]
+    assert hier_rows, "no _hier rows emitted"
+    for ln in hier_rows:
+        cols = ln.split(",")
+        assert len(cols) == ncols, ln
+    fq = [ln.split(",") for ln in hier_rows
+          if ln.startswith("fq_push_hier,")][0]
+    # 8 waves x 2 hops/launch (collectives == hops for pure requests)
+    assert int(fq[8]) == int(fq[2]) and int(fq[8]) == 16
+
+
 def test_smoke_costs_pin_round_reduction():
     """The benchmark-side cost observables see the fused exchange."""
     from benchmarks.util import trace_costs

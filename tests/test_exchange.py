@@ -9,7 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import costs, get_backend, route
+from repro.core import costs, get_backend, route, suggest_rounds
 from repro.core.exchange import exchange_capacity, reply
 
 
@@ -76,6 +76,29 @@ def test_capacity_heuristic():
     assert exchange_capacity(1024, 1) == 1024
     c = exchange_capacity(1024, 16)
     assert c >= 64 and c <= 1024
+
+
+def test_suggest_rounds_heuristic():
+    """The adaptive-rounds pick (ROADMAP): smallest R whose effective
+    capacity R*C covers the hottest observed bucket load."""
+    # scalar and trajectory forms
+    assert suggest_rounds(0, 8) == 1
+    assert suggest_rounds(8, 8) == 1
+    assert suggest_rounds(9, 8) == 2
+    assert suggest_rounds([3, 10, 40], 8) == 5
+    # slack inflates the peak before covering it
+    assert suggest_rounds([40], 8, slack=1.5) == 8
+    # clamp: a pathological trajectory cannot demand unbounded launches
+    assert suggest_rounds([10_000], 4, limit=6) == 6
+    with pytest.raises(ValueError, match="capacity"):
+        suggest_rounds([4], 0)
+    # the pick actually covers: route at that R is lossless
+    bk = get_backend(None)
+    n, cap = 40, 6
+    r = suggest_rounds([n], cap)
+    res = route(bk, jnp.arange(n, dtype=jnp.uint32),
+                jnp.zeros(n, jnp.int32), capacity=cap, max_rounds=r)
+    assert int(res.dropped) == 0
 
 
 @pytest.mark.parametrize("dests,ncopies", [

@@ -244,6 +244,57 @@ def test_ragged_fused_plans_equal_fine_over_flow_mixes(data):
         assert np.array_equal(np.asarray(af), np.asarray(as_))
 
 
+@given(st.data())
+@settings(max_examples=15, deadline=None)
+def test_hierarchical_transport_equals_dense_over_flow_mixes(data):
+    """HierarchicalTransport == DenseTransport over random flow mixes:
+    1-4 flows of lane widths 1..4, reply widths 0..3, random validity,
+    capacities, and carryover retry rounds 1..3 — owner views, replies,
+    answered masks, and drop counts are bit-identical, so the two-stage
+    movement is pure physical re-routing, never a semantic change.  (The
+    8-rank 2-D mesh version, with random destinations, runs in
+    tests/spmd_check.py as ``exchange.hier_equals_dense_8rank``.)"""
+    from repro.core import HierarchicalTransport
+    bk = get_backend(None)
+    nflows = data.draw(st.integers(1, 4), label="nflows")
+    rounds = data.draw(st.integers(1, 3), label="rounds")
+    flows = []
+    for i in range(nflows):
+        n = data.draw(st.integers(1, 20), label=f"n{i}")
+        lanes = data.draw(st.integers(1, 4), label=f"lanes{i}")
+        cap = data.draw(st.integers(1, n + 4), label=f"cap{i}")
+        rl = data.draw(st.integers(0, 3), label=f"rl{i}")
+        pay = jnp.asarray(
+            data.draw(st.lists(st.integers(0, 1 << 19),
+                               min_size=n * lanes, max_size=n * lanes),
+                      label=f"pay{i}"), jnp.uint32).reshape(n, lanes)
+        valid = jnp.asarray(
+            data.draw(st.lists(st.booleans(), min_size=n, max_size=n),
+                      label=f"valid{i}"))
+        flows.append((pay, valid, cap, rl))
+
+    def run(transport):
+        plan = ExchangePlan(name="mix")
+        hs = [plan.add(p, jnp.zeros(p.shape[0], jnp.int32), cap,
+                       reply_lanes=rl, valid=v, op_name=f"f{i}")
+              for i, (p, v, cap, rl) in enumerate(flows)]
+        c = plan.commit(bk, max_rounds=rounds, transport=transport)
+        for h, (p, v, cap, rl) in zip(hs, flows):
+            if rl:
+                c.set_reply(h, jnp.tile(
+                    c.view(h).payload[:, :1] * 3 + h + 1, (1, rl)))
+        fin = c.finish(bk)
+        return ([tuple(c.view(h)) for h in hs], sorted(fin.items()))
+
+    dense = run(None)
+    hier = run(HierarchicalTransport())
+    assert _tree_equal(dense[0], hier[0])
+    for (hd, (od, ad)), (hh, (oh, ah)) in zip(dense[1], hier[1]):
+        assert hd == hh
+        assert np.array_equal(np.asarray(od), np.asarray(oh))
+        assert np.array_equal(np.asarray(ad), np.asarray(ah))
+
+
 @given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=2,
                 max_size=64))
 @settings(max_examples=20, deadline=None)

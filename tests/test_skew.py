@@ -361,6 +361,86 @@ def test_queue_push_carry_covers_wire_and_ring_overflow():
     assert int(carry_l.sum()) == n - ring
 
 
+def test_pin_push_pop_ring_full_carry_lossless():
+    """Ring-full carry parity for the FUSED schedule (ROADMAP item):
+    push_pop(overflow="carry") ships the owner's accept mask back on a
+    1-lane reply riding the pop's inverse all-to-all — re-injecting the
+    carried rows drains losslessly, and the fused schedule matches the
+    FINE sequential oracle's carry mask exactly."""
+    bk = get_backend(None)
+    n, ring = 48, 16
+    vals = jnp.arange(n, dtype=jnp.uint32) + 1
+    dest = jnp.zeros(n, jnp.int32)
+    spec, st0 = q.queue_create(bk, ring, SDS((), jnp.uint32), circular=True)
+
+    st, got = st0, []
+    carry = jnp.ones(n, bool)
+    for want in (n - ring, n - 2 * ring, 0):
+        st, pushed, dropped, out, gm, carry = q.push_pop(
+            bk, spec, st, vals, dest, n, ring, 0, valid=carry,
+            overflow="carry")
+        assert int(dropped) == 0
+        assert int(carry.sum()) == want
+        got += np.asarray(out)[np.asarray(gm)].tolist()
+    # pops interleave with pushes: everything lands exactly once
+    assert sorted(got) == np.asarray(vals).tolist()
+
+    # fused == FINE on the whole 6-tuple (carry mask included)
+    def run(extra):
+        st1, *rest = q.push_pop(
+            bk, spec, st0, vals, dest, n, 8, 0,
+            promise=Promise.PUSH | Promise.POP | extra, overflow="carry")
+        return tuple(st1) + tuple(rest)
+
+    for a, b in zip(run(Promise.NONE), run(Promise.FINE)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+    # the carry reply rides the pop's collective: still 2, not 3
+    with costs.recording() as log:
+        q.push_pop(bk, spec, st0, vals, dest, n, 8, 0, overflow="carry")
+    assert log.total().collectives == 2
+    with pytest.raises(ValueError, match="overflow"):
+        q.push_pop(bk, spec, st0, vals, dest, n, 8, 0, overflow="retry")
+
+
+def test_pin_spill_ring_full_carry_lossless():
+    """Ring-full carry parity for the buffer spill (ROADMAP item): a
+    carry spill declares the 1-lane ring reply, so ring rejects re-stage
+    in the buffer instead of dropping — repeated spill+drain cycles are
+    lossless even when the owner ring is smaller than the spill."""
+    bk = get_backend(None)
+    mspec, mst = hm.hashmap_create(bk, 2048, SDS((), jnp.uint32),
+                                   SDS((), jnp.uint32), block_size=16)
+    ring = 16
+    bspec, bst = hb.create(bk, mspec, mst, queue_capacity=ring,
+                           buffer_cap=64)
+    keys = jnp.arange(48, dtype=jnp.uint32) + 1
+    bst, _ = hb.insert(bspec, bst, keys, keys * 3)
+
+    # wire admits everything (capacity 64) — the ring is the bottleneck;
+    # drop-mode spill would lose 32 here, carry re-stages them
+    staged = []
+    for _ in range(3):
+        bst, dropped = hb.spill(bk, bspec, bst, capacity=64,
+                                overflow="carry")
+        assert int(dropped) == 0
+        staged.append(int(bst.buf_n[0]))
+        # owner drains its ring into the table (flush's local half)
+        rows, gotm = q.local_drain(bspec.queue_spec, bst.queue)
+        qst = bst.queue._replace(head=bst.queue.tail)
+        ms = bspec.map_spec
+        mst2, ok = hm.insert(
+            bk, ms, bst.map, ms.key_packer.unpack(rows[:, :1]),
+            ms.val_packer.unpack(rows[:, 1:]), capacity=1,
+            promise=Promise.INSERT | Promise.LOCAL, valid=gotm)
+        assert bool(ok[np.asarray(gotm)].all())
+        bst = bst._replace(map=mst2, queue=qst)
+    assert staged == [32, 16, 0]       # ring-full rejects re-staged
+    _, v, found = hm.find(bk, mspec, bst.map, keys, capacity=48)
+    assert bool(found.all())
+    assert np.array_equal(np.asarray(v), np.asarray(keys) * 3)
+
+
 def test_buffer_flush_carry_is_lossless_across_cycles():
     """hashmap_buffer.flush(overflow="carry"): wire leftovers re-stage
     instead of dropping; bounded cycles drain them all."""

@@ -366,6 +366,110 @@ def test_moe_dispatch_stats_ragged_bytes_exact():
 
 
 # ---------------------------------------------------------------------------
+# transports: dense-vs-hierarchical pins (DESIGN.md section 1.7)
+# ---------------------------------------------------------------------------
+
+def test_dense_default_records_one_hop_per_launch():
+    """The hops observable: every dense launch is one physical stage —
+    request and reply each record hops=1 under the op."""
+    bk = get_backend(None)
+    n = 16
+    with costs.recording() as log:
+        req = route(bk, jnp.zeros((n, 1), jnp.uint32),
+                    jnp.zeros(n, jnp.int32), capacity=n, op_name="op")
+        reply(bk, req, req.payload[:, :1], orig_n=n, op_name="op")
+    c = log.by_op("op")
+    assert c.hops == 2 and c.collectives == 2
+    assert log.by_op("op.relay").bytes_moved == 0   # dense has no relay
+
+
+def test_hier_transport_hop_and_byte_pins_serial():
+    """HierarchicalTransport per-hop attribution, exact (1x1
+    factorization on the serial backend: c1 = min(Pr*C, N), c2 =
+    Pc*min(C, N), rows carry ONE extra hop lane):
+
+      request: op       = Pc * c1 * (L+2) * 4 bytes out
+               op.relay = Pr * c2 * (L+2) * 4 bytes out
+      reply:   op       = Pc * c1 * R * 4 bytes in
+               op.relay = Pr * c2 * R * 4 bytes in
+
+    and each direction is 2 collectives / 2 rounds / 2 hops."""
+    from repro.core import ExchangePlan, HierarchicalTransport
+    bk = get_backend(None)
+    n, cap, lanes, rl = 12, 16, 3, 2
+    c1 = min(1 * cap, n)                 # 12
+    c2 = 1 * min(cap, n)                 # 12
+    with costs.recording() as log:
+        plan = ExchangePlan(name="op")
+        h = plan.add(jnp.zeros((n, lanes), jnp.uint32),
+                     jnp.zeros(n, jnp.int32), cap, reply_lanes=rl,
+                     op_name="op")
+        c = plan.commit(bk, transport=HierarchicalTransport())
+        c.set_reply(h, c.view(h).payload[:, :rl])
+        c.finish(bk)
+    w1 = lanes + 2                       # payload + meta + hop lane
+    cop, crel = log.by_op("op"), log.by_op("op.relay")
+    assert cop.bytes_out == 1 * c1 * w1 * 4
+    assert crel.bytes_out == 1 * c2 * w1 * 4
+    assert cop.bytes_in == 1 * c1 * rl * 4
+    assert crel.bytes_in == 1 * c2 * rl * 4
+    assert cop.collectives == 4 and cop.rounds == 4 and cop.hops == 4
+    assert crel.collectives == 0         # relay records bytes only
+
+
+def test_hier_transport_matches_dense_serial():
+    """Containers over transport="hier" are bit-identical to dense on
+    the serial backend (the 8-rank 2-D mesh version runs in
+    spmd_check.py); the hier run burns extra binning passes (2 per hop
+    pair) but the SAME logical admission."""
+    from repro.core import HierarchicalTransport
+    bk = get_backend(None)
+    hier = HierarchicalTransport()
+    spec, st = hm.hashmap_create(bk, 512, SDS((), jnp.uint32),
+                                 SDS((), jnp.uint32), block_size=8)
+    keys = jnp.arange(40, dtype=jnp.uint32) * 7 + 1
+    d_st, d_ok = hm.insert(bk, spec, st, keys, keys * 3, capacity=40)
+    h_st, h_ok = hm.insert(bk, spec, st, keys, keys * 3, capacity=40,
+                           transport=hier)
+    assert np.array_equal(np.asarray(d_ok), np.asarray(h_ok))
+    for a, b in zip(d_st, h_st):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    d = hm.find(bk, spec, d_st, keys, capacity=40)
+    h = hm.find(bk, spec, h_st, keys, capacity=40, transport=hier)
+    for a, b in zip(d[1:], h[1:]):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_hier_transport_guards():
+    """Factorization and hop-lane bounds fail loudly, named usefully."""
+    from repro.core import ExchangePlan, HierarchicalTransport
+    bk = get_backend(None)
+    plan = ExchangePlan(name="op")
+    plan.add(jnp.zeros((4, 1), jnp.uint32), jnp.zeros(4, jnp.int32), 4,
+             op_name="op")
+    with pytest.raises(ValueError, match="factor"):
+        plan.commit(bk, transport=HierarchicalTransport(3, 5))
+    plan2 = ExchangePlan(name="op")
+    plan2.add(jnp.zeros((4, 1), jnp.uint32), jnp.zeros(4, jnp.int32),
+              1 << 21, op_name="op")
+    with pytest.raises(ValueError, match="hop lane"):
+        plan2.commit(bk, transport=HierarchicalTransport())
+
+
+def test_make_transport_knob():
+    from repro.core import (DenseTransport, HierarchicalTransport,
+                            make_transport)
+    assert make_transport(None) is make_transport("dense")
+    assert isinstance(make_transport("dense"), DenseTransport)
+    t = make_transport("hier", 2, 4)
+    assert isinstance(t, HierarchicalTransport)
+    assert t._factor(8) == (2, 4)
+    assert make_transport(t) is t
+    with pytest.raises(ValueError, match="transport"):
+        make_transport("mesh3d")
+
+
+# ---------------------------------------------------------------------------
 # fused reply == oracle alignment
 # ---------------------------------------------------------------------------
 
