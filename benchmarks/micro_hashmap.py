@@ -16,6 +16,12 @@ at mean-load wire capacity):
   insert_skew_drop    drop-mode: overflowed inserts fail (counted)
   insert_skew_retry   carryover retry rounds: every insert lands
 
+The ``--faults`` arm (DESIGN.md section 1.8) inserts through a
+FaultInjectingTransport with a seeded corrupt spec under the integrity
+checksum, re-sends the unacked inserts over a clean wire, and probes a
+degraded commit; the lost_bytes / recovered / unreachable columns
+report the loss, the heal, and the dead-rank mask.
+
 Reported as microseconds per operation (amortized over the batch) plus
 the collective/bytes/rounds observables and rounds_per_op, so the
 paper's relative claims (buffer >> insert; find 2-3x over find_atomic)
@@ -41,7 +47,7 @@ WAVES = 8                      # fine-grained ops issue per-wave
 
 
 def run(smoke: bool = False, fused: bool = False, skew: str = "none",
-        transport: str = "dense"):
+        transport: str = "dense", faults: bool = False):
     tr, sfx = resolve_transport(transport)
     n_ops = 1 << 8 if smoke else N_OPS
     table = 1 << 11 if smoke else TABLE
@@ -188,6 +194,43 @@ def run(smoke: bool = False, fused: bool = False, skew: str = "none",
 
         bench_skew(1, "hashmap_insert_skew_drop" + sfx)
         bench_skew(rr, "hashmap_insert_skew_retry" + sfx)
+
+    # --- faults arm: seeded corruption healed by integrity + re-send ---
+    if faults:
+        from repro.core import FaultInjectingTransport, FaultSpec, costs
+        fspec = FaultSpec(seed=7, corrupt=((0, 0, 0),))
+        ftr = FaultInjectingTransport(tr, fspec)
+        spec_f, st_f = fresh()
+
+        @jax.jit
+        def faulty_insert(st, keys, vals):
+            # first shot over the faulty fabric: checksum-failed arrivals
+            # never ack, so their inserts come back unsuccessful
+            st, ok1 = hm.insert(bk, spec_f, st, keys, vals,
+                                capacity=n_ops, attempts=1, transport=ftr,
+                                integrity=True)
+            lost = (~ok1).sum().astype(jnp.int32)
+            # heal: re-send exactly the unacked inserts over a clean wire
+            st, ok2 = hm.insert(bk, spec_f, st, keys, vals,
+                                capacity=n_ops, valid=~ok1, attempts=1,
+                                transport=tr, integrity=True)
+            return st, lost, ok2.sum().astype(jnp.int32)
+
+        with costs.recording() as flog:
+            out = faulty_insert(st_f, keys, vals)
+            # degraded-commit probe: rank 0 declared dead at admission
+            hm.insert(bk, spec_f, out[0], keys[:8], vals[:8], capacity=8,
+                      attempts=1, dead_ranks=(0,))
+            jax.block_until_ready(out)
+        lost_items = int(out[1])
+        row_bytes = 4 * (1 + spec_f.key_packer.lanes
+                         + spec_f.val_packer.lanes + 1)  # body + meta lane
+        t = time_fn(faulty_insert, st_f, keys, vals, warmup=1, iters=3)
+        emit("hashmap_insert_faults" + sfx, t / n_ops * 1e6,
+             "seeded corrupt + clean re-send + degraded probe",
+             cost=flog.total(), n_ops=n_ops,
+             lost_bytes=lost_items * row_bytes, recovered=int(out[2]),
+             unreachable=int(flog.total().unreachable))
 
     emit("hashmap_insert" + sfx, results["hashmap_insert"], "2A+W",
          cost=obs["hashmap_insert"], n_ops=n_ops)

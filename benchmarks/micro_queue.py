@@ -18,6 +18,12 @@ bucket the paper's aggregation can produce):
   fq_push_skew_retry            carryover retry rounds: zero drops at
                                 the same per-round capacity
 
+The ``--faults`` arm (DESIGN.md section 1.8) pushes through a
+FaultInjectingTransport with a seeded corrupt spec under the integrity
+checksum, heals the invalidated arrivals with a carry re-push, and
+probes a degraded commit; the lost_bytes / recovered / unreachable
+columns report the loss, the heal, and the dead-rank mask.
+
 Each row carries the collective/bytes/rounds observables (and
 rounds_per_op) of one jitted call so exchange-layer regressions show up
 next to wall time.
@@ -39,7 +45,7 @@ WAVES = 8
 
 
 def run(smoke: bool = False, fused: bool = False, skew: str = "none",
-        transport: str = "dense"):
+        transport: str = "dense", faults: bool = False):
     tr, sfx = resolve_transport(transport)
     n_ops = 1 << 8 if smoke else N_OPS
     bk = get_backend(None)
@@ -165,6 +171,43 @@ def run(smoke: bool = False, fused: bool = False, skew: str = "none",
 
         bench_skew(1, "fq_push_skew_drop" + sfx)
         bench_skew(rr, "fq_push_skew_retry" + sfx)
+
+    # --- faults arm: seeded corruption healed by integrity + carry ---
+    if faults:
+        from repro.core import FaultInjectingTransport, FaultSpec, costs
+        fspec = FaultSpec(seed=7, corrupt=((0, 0, 0),))
+        ftr = FaultInjectingTransport(tr, fspec)
+        spec_f, st_f = q.queue_create(bk, n_ops * 2, SDS((), jnp.uint32))
+
+        @jax.jit
+        def faulty_push(st, vals, dest):
+            # first shot over the faulty fabric: the corrupted segment's
+            # arrivals fail their checksum, get no ack, land in carry
+            st, _, _, carry = q.push(
+                bk, spec_f, st, vals, dest, capacity=n_ops,
+                overflow="carry", transport=ftr, integrity=True)
+            # heal: re-inject exactly the carried rows over a clean wire
+            st, _, _, carry2 = q.push(
+                bk, spec_f, st, vals, dest, capacity=n_ops, valid=carry,
+                overflow="carry", transport=tr, integrity=True)
+            return st, carry.sum().astype(jnp.int32), \
+                carry2.sum().astype(jnp.int32)
+
+        with costs.recording() as flog:
+            out = faulty_push(st_f, vals, dest)
+            # degraded-commit probe: rank 0 declared dead at admission
+            q.push(bk, spec_f, out[0], vals[:8], dest[:8], capacity=8,
+                   dead_ranks=(0,))
+            jax.block_until_ready(out)
+        lost_items = int(out[1])
+        recovered = lost_items - int(out[2])
+        row_bytes = 4 * (spec_f.lanes + 1)       # payload + meta lane
+        t = time_fn(faulty_push, st_f, vals, dest, warmup=1, iters=3)
+        emit("fq_push_faults" + sfx, t / n_ops * 1e6,
+             "seeded corrupt + carry heal + degraded probe",
+             cost=flog.total(), n_ops=n_ops,
+             lost_bytes=lost_items * row_bytes, recovered=recovered,
+             unreachable=int(flog.total().unreachable))
 
     for k in ("cq_push_pushpop", "cq_push_push", "fq_push",
               "cq_pop_pushpop", "cq_pop_pop", "fq_pop", "fq_local_pop"):

@@ -28,6 +28,12 @@ the observed wave loads.
 ``--transport {dense,hier}`` re-runs the exchange-layer arms over the
 named physical transport (DESIGN.md section 1.7); hierarchical rows are
 suffixed ``_hier`` and the ``hops`` column shows the two-stage launches.
+
+``--faults`` adds the fault-injection arms (DESIGN.md section 1.8) to
+the modules that have them: a seeded FaultSpec corrupts wire segments
+under the integrity checksum, the carry retry heals the loss, and a
+degraded commit masks a dead rank — the lost_bytes / recovered /
+unreachable columns track the robustness observables over time.
 """
 
 from __future__ import annotations
@@ -51,6 +57,7 @@ def main() -> None:
     args = [a for a in sys.argv[1:]]
     smoke = "--smoke" in args
     fused = "--fused" in args
+    faults = "--faults" in args
     skew = "none"
     if "--skew" in args:
         i = args.index("--skew")
@@ -66,7 +73,7 @@ def main() -> None:
         if transport not in ("dense", "hier"):
             sys.exit(f"--transport takes dense or hier, got {transport!r}")
         del args[i:i + 2]
-    args = [a for a in args if a not in ("--smoke", "--fused")]
+    args = [a for a in args if a not in ("--smoke", "--fused", "--faults")]
     only = args[0] if args else None
     print(HEADER)
     for name, mod in mods.items():
@@ -82,15 +89,17 @@ def main() -> None:
             kw["skew"] = skew
         if transport != "dense" and "transport" in params:
             kw["transport"] = transport
+        if faults and "faults" in params:
+            kw["faults"] = True
         try:
             if smoke and "smoke" not in params:
-                print(f"{name},SKIPPED,,,,,,,,no smoke mode yet")
+                print(f"{name},SKIPPED,,,,,,,,,,,no smoke mode yet")
             elif transport != "dense" and "transport" not in params:
-                print(f"{name},SKIPPED,,,,,,,,no transport arm yet")
+                print(f"{name},SKIPPED,,,,,,,,,,,no transport arm yet")
             else:
                 mod.run(**kw)
         except Exception as e:  # keep the harness going; report the row
-            print(f"{name},ERROR,,,,,,,,{type(e).__name__}: {e}")
+            print(f"{name},ERROR,,,,,,,,,,,{type(e).__name__}: {e}")
 
 
 if __name__ == "__main__":

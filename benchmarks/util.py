@@ -42,7 +42,8 @@ def trace_costs(fn, *args, **kw):
 #: stages (1 per dense launch, 2 per hierarchical launch) so the
 #: ``--transport`` arms' extra stage shows up next to wall time.
 HEADER = ("name,us_per_call,collectives,bytes_moved,rounds,"
-          "rounds_per_op,retry_rounds,dropped,hops,derived")
+          "rounds_per_op,retry_rounds,dropped,hops,"
+          "lost_bytes,recovered,unreachable,derived")
 
 
 def resolve_transport(name: str):
@@ -124,7 +125,9 @@ def bench_skew_arm(fn, tag: str, rounds: int, n_ops: int, results: dict,
 
 def emit(name: str, us_per_call: float, derived: str = "",
          cost=None, n_ops: int | None = None,
-         retry_rounds: int | None = None, dropped: int | None = None):
+         retry_rounds: int | None = None, dropped: int | None = None,
+         lost_bytes: int | None = None, recovered: int | None = None,
+         unreachable: int | None = None):
     """CSV row following :data:`HEADER`.
 
     ``rounds_per_op`` (rounds amortized over ``n_ops`` data-structure
@@ -134,13 +137,26 @@ def emit(name: str, us_per_call: float, derived: str = "",
     track skew tolerance: the ``--skew`` arms report how many carryover
     rounds they ran and how many items still fell off the wire, so the
     perf trajectory covers skewed traffic, not just uniform.
+    ``lost_bytes``/``recovered``/``unreachable`` are the ``--faults``
+    arms' observables (DESIGN.md section 1.8): wire bytes invalidated by
+    injected faults, items healed by the integrity+carry retry, and dead
+    destination ranks masked by a degraded commit; cost rows default the
+    lost_bytes/unreachable columns from the recorded Cost fields.
     """
     rr = "" if retry_rounds is None else str(retry_rounds)
     dr = "" if dropped is None else str(dropped)
+    lb = "" if lost_bytes is None else str(lost_bytes)
+    rc = "" if recovered is None else str(recovered)
+    un = "" if unreachable is None else str(unreachable)
     if cost is None:
-        print(f"{name},{us_per_call:.2f},,,,,{rr},{dr},,{derived}")
+        print(f"{name},{us_per_call:.2f},,,,,{rr},{dr},,"
+              f"{lb},{rc},{un},{derived}")
         return
+    if lost_bytes is None:
+        lb = str(cost.lost_bytes)
+    if unreachable is None:
+        un = str(cost.unreachable)
     rpo = f"{cost.rounds / n_ops:.6f}" if n_ops else ""
     print(f"{name},{us_per_call:.2f},{cost.collectives},"
           f"{cost.bytes_moved},{cost.rounds},{rpo},{rr},{dr},"
-          f"{cost.hops},{derived}")
+          f"{cost.hops},{lb},{rc},{un},{derived}")

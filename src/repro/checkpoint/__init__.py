@@ -1,5 +1,6 @@
-from repro.checkpoint.ckpt import (save_checkpoint, restore_checkpoint,
-                                   latest_step, CheckpointManager)
+from repro.checkpoint.ckpt import (CheckpointCorruptError, CheckpointManager,
+                                   all_steps, latest_step,
+                                   restore_checkpoint, save_checkpoint)
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
-           "CheckpointManager"]
+           "all_steps", "CheckpointManager", "CheckpointCorruptError"]

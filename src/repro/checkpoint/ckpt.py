@@ -30,15 +30,27 @@ import os
 import re
 import shutil
 import threading
+import zipfile
+import zlib
 from typing import Any
 
 import jax
 import numpy as np
 
 
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint directory failed its integrity check on restore."""
+
+
 def _flatten(tree):
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     return leaves, treedef
+
+
+def _leaf_checksums(arrays: dict[str, np.ndarray]) -> dict[str, int]:
+    """crc32 over each leaf's raw bytes (shape/dtype pinned by index.json)."""
+    return {k: zlib.crc32(np.ascontiguousarray(v).tobytes())
+            for k, v in arrays.items()}
 
 
 def save_checkpoint(directory: str, step: int, tree: Any,
@@ -68,6 +80,10 @@ def save_checkpoint(directory: str, step: int, tree: Any,
     np.savez(os.path.join(tmp, "arr_0.npz"), **arrays)
     with open(os.path.join(tmp, "index.json"), "w") as f:
         json.dump(index, f)
+    # integrity sidecar: per-leaf crc32 verified on restore, so a torn or
+    # bit-rotted checkpoint is detected instead of silently restored
+    with open(os.path.join(tmp, "checksums.json"), "w") as f:
+        json.dump(_leaf_checksums(arrays), f)
 
     if os.path.exists(final):
         shutil.rmtree(final)
@@ -83,15 +99,38 @@ def restore_checkpoint(directory: str, step: int | None, like: Any,
     ``like`` supplies the treedef (and dtype casts if they changed);
     ``shardings`` (optional tree of NamedSharding) supports elastic
     restore onto a different mesh.
+
+    Every leaf is verified against the ``checksums.json`` sidecar
+    written by :func:`save_checkpoint`; a torn file, truncated archive,
+    or bit-rotted array raises :class:`CheckpointCorruptError` rather
+    than restoring silently-wrong state.  (Checkpoints predating the
+    sidecar restore unverified.)
     """
     if step is None:
         step = latest_step(directory)
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {directory}")
     path = os.path.join(directory, f"step_{step:09d}")
-    with open(os.path.join(path, "index.json")) as f:
-        index = json.load(f)
-    data = np.load(os.path.join(path, "arr_0.npz"))
+    try:
+        with open(os.path.join(path, "index.json")) as f:
+            index = json.load(f)
+        data = np.load(os.path.join(path, "arr_0.npz"))
+        arrays = {k: data[k] for k in data.files}
+    except (OSError, ValueError, KeyError, json.JSONDecodeError,
+            zipfile.BadZipFile, zlib.error) as e:
+        raise CheckpointCorruptError(
+            f"checkpoint {path} is unreadable: {e}") from e
+    ck_path = os.path.join(path, "checksums.json")
+    if os.path.exists(ck_path):
+        with open(ck_path) as f:
+            want = json.load(f)
+        got = _leaf_checksums(arrays)
+        bad = sorted(k for k in want if got.get(k) != want[k])
+        if bad or set(want) != set(got):
+            raise CheckpointCorruptError(
+                f"checkpoint {path} failed integrity check "
+                f"(leaves {bad or sorted(set(want) ^ set(got))})")
+    data = arrays
 
     leaves_like, treedef = _flatten(like)
     if index["n_leaves"] != len(leaves_like):
@@ -111,11 +150,16 @@ def restore_checkpoint(directory: str, step: int | None, like: Any,
     return tree, step
 
 
-def latest_step(directory: str) -> int | None:
+def all_steps(directory: str) -> list[int]:
+    """Published checkpoint steps under ``directory``, ascending."""
     if not os.path.isdir(directory):
-        return None
-    steps = [int(m.group(1)) for d in os.listdir(directory)
-             if (m := re.fullmatch(r"step_(\d+)", d))]
+        return []
+    return sorted(int(m.group(1)) for d in os.listdir(directory)
+                  if (m := re.fullmatch(r"step_(\d+)", d)))
+
+
+def latest_step(directory: str) -> int | None:
+    steps = all_steps(directory)
     return max(steps) if steps else None
 
 
@@ -160,5 +204,23 @@ class CheckpointManager:
             self._thread = None
 
     def restore_latest(self, like, shardings=None):
+        """Restore the newest INTACT checkpoint.
+
+        A corrupt newest step (torn write that still got published,
+        bit rot) falls back to the next-newest step that passes its
+        integrity check, so one bad directory never bricks recovery.
+        Raises the newest step's :class:`CheckpointCorruptError` only
+        when every retained checkpoint is corrupt.
+        """
         self.wait()
-        return restore_checkpoint(self.directory, None, like, shardings)
+        steps = all_steps(self.directory)
+        if not steps:
+            raise FileNotFoundError(f"no checkpoints under {self.directory}")
+        first_err: CheckpointCorruptError | None = None
+        for step in reversed(steps):
+            try:
+                return restore_checkpoint(self.directory, step, like,
+                                          shardings)
+            except CheckpointCorruptError as e:
+                first_err = first_err or e
+        raise first_err

@@ -112,7 +112,9 @@ def insert(backend: Backend, spec: HashMapSpec, state: HashMapState,
            attempts: int = 2,
            return_success: bool = True,
            max_rounds: int = 1,
-           transport=None):
+           transport=None,
+           dead_ranks=None,
+           integrity: bool = False):
     """Insert a batch of (key, value) pairs.
 
     Returns (state, success(N,) | None).  With ``promise=local`` the keys
@@ -120,6 +122,14 @@ def insert(backend: Backend, spec: HashMapSpec, state: HashMapState,
     HashMapBuffer flush path (paper Table 3b).  ``max_rounds`` adds
     carryover retry rounds to each exchange, absorbing skewed key
     distributions (hot blocks) without inflating ``capacity``.
+
+    ``dead_ranks``/``integrity`` forward to :meth:`ExchangePlan.commit`
+    (DESIGN.md section 1.8).  Items owned by a dead rank are masked at
+    admission and simply stay unsuccessful (``success`` False) — a
+    multi-``attempts`` insert retries them against their rehash block,
+    which may land on a live rank.  With ``integrity=True`` a
+    checksum-failed arrival never acks, so the requester sees it as
+    unsuccessful and the attempt loop re-sends it.
     """
     validate(promise)
     klanes = spec.key_packer.pack(keys)
@@ -153,7 +163,8 @@ def insert(backend: Backend, spec: HashMapSpec, state: HashMapState,
         h = plan.add(body, owner, capacity, reply_lanes=rl, valid=pending,
                      op_name="hashmap.insert")
         c = plan.commit(backend, impl=spec.impl, max_rounds=max_rounds,
-                        transport=transport)
+                        transport=transport, dead_ranks=dead_ranks,
+                        integrity=integrity)
         res = c.view(h)
         rb = jnp.where(res.valid, res.payload[:, 0].astype(_I32), 0)
         rk = res.payload[:, 1:1 + spec.key_packer.lanes]
@@ -187,7 +198,8 @@ def insert(backend: Backend, spec: HashMapSpec, state: HashMapState,
 def _find_speculative(backend: Backend, spec: HashMapSpec,
                       state: HashMapState, klanes, capacity: int,
                       valid, atomic: bool, max_rounds: int = 1,
-                      transport=None):
+                      transport=None, dead_ranks=None,
+                      integrity: bool = False):
     """Dual-attempt find in ONE round trip (2 collectives, not 4).
 
     Both probe attempts are two *flows* of one :class:`ExchangePlan`:
@@ -217,7 +229,8 @@ def _find_speculative(backend: Backend, spec: HashMapSpec,
                   owner1, capacity, reply_lanes=rl, valid=valid,
                   op_name="hashmap.find")
     c = plan.commit(backend, impl=spec.impl, max_rounds=max_rounds,
-                    transport=transport)
+                    transport=transport, dead_ranks=dead_ranks,
+                    integrity=integrity)
     v0, v1 = c.view(h0), c.view(h1)
 
     rb = jnp.concatenate([
@@ -258,7 +271,9 @@ def find(backend: Backend, spec: HashMapSpec, state: HashMapState,
          attempts: int = 2,
          speculative: bool = True,
          max_rounds: int = 1,
-         transport=None):
+         transport=None,
+         dead_ranks=None,
+         integrity: bool = False):
     """Find a batch of keys. Returns (state, values, found(N,)).
 
     State is returned because the fully-atomic path's read-bit dance
@@ -294,7 +309,8 @@ def find(backend: Backend, spec: HashMapSpec, state: HashMapState,
     if speculative and attempts == 2:
         return _find_speculative(backend, spec, state, klanes, capacity,
                                  valid, atomic, max_rounds=max_rounds,
-                                 transport=transport)
+                                 transport=transport, dead_ranks=dead_ranks,
+                                 integrity=integrity)
     pending = valid
     found_all = jnp.zeros((n,), bool)
     vals_all = jnp.zeros((n, spec.val_packer.lanes), _U32)
@@ -307,7 +323,8 @@ def find(backend: Backend, spec: HashMapSpec, state: HashMapState,
                      reply_lanes=spec.val_packer.lanes + 1, valid=pending,
                      op_name="hashmap.find")
         c = plan.commit(backend, impl=spec.impl, max_rounds=max_rounds,
-                        transport=transport)
+                        transport=transport, dead_ranks=dead_ranks,
+                        integrity=integrity)
         res = c.view(h)
         rb = jnp.where(res.valid, res.payload[:, 0].astype(_I32), 0)
         rk = res.payload[:, 1:]
@@ -341,7 +358,9 @@ def find_insert(backend: Backend, spec: HashMapSpec, state: HashMapState,
                 ins_valid: jax.Array | None = None,
                 mode: int = kops.MODE_SET,
                 max_rounds: int = 1,
-                transport=None):
+                transport=None,
+                dead_ranks=None,
+                integrity: bool = False):
     """Fused find + insert sharing ONE exchange round trip.
 
     Under ``ConProm.HashMap.find_insert`` the two batches are promised
@@ -369,11 +388,13 @@ def find_insert(backend: Backend, spec: HashMapSpec, state: HashMapState,
         state, vals, found = find(backend, spec, state, find_keys, capacity,
                                   promise=promise, valid=find_valid,
                                   attempts=1, max_rounds=max_rounds,
-                                  transport=transport)
+                                  transport=transport, dead_ranks=dead_ranks,
+                                  integrity=integrity)
         state, ok = insert(backend, spec, state, ins_keys, ins_vals, capacity,
                            promise=promise, valid=ins_valid, mode=mode,
                            attempts=1, return_success=True,
-                           max_rounds=max_rounds, transport=transport)
+                           max_rounds=max_rounds, transport=transport,
+                           dead_ranks=dead_ranks, integrity=integrity)
         return state, vals, found, ok
 
     kf = spec.key_packer.pack(find_keys)
@@ -397,7 +418,8 @@ def find_insert(backend: Backend, spec: HashMapSpec, state: HashMapState,
                   owner_i, capacity, reply_lanes=1,
                   valid=ins_valid, op_name="hashmap.insert")
     c = plan.commit(backend, impl=spec.impl, max_rounds=max_rounds,
-                    transport=transport)
+                    transport=transport, dead_ranks=dead_ranks,
+                    integrity=integrity)
     vf, vw = c.view(hf), c.view(hi)
 
     # find against the pre-insert table (the chosen serialization)
@@ -452,6 +474,31 @@ def local_entries(spec: HashMapSpec, state: HashMapState):
     keys = spec.key_packer.unpack(state.tkeys.reshape(nb * b, -1))
     vals = spec.val_packer.unpack(state.tvals.reshape(nb * b, -1))
     return keys, vals, occ
+
+
+def export_state(spec: HashMapSpec, state: HashMapState) -> dict:
+    """This rank's table shard as a checkpointable pytree (plain dict).
+
+    The dict rides ``checkpoint.save_checkpoint`` unchanged; after a
+    rank loss a survivor restores the dead rank's shard with
+    :func:`restore_state` and re-inserts its live entries
+    (``local_entries`` of the restored shard) through an ordinary
+    ``insert`` — the re-injection path of DESIGN.md section 1.8.
+    """
+    return {"tkeys": state.tkeys, "tvals": state.tvals,
+            "status": state.status}
+
+
+def restore_state(spec: HashMapSpec, exported: dict) -> HashMapState:
+    """Rebuild a HashMapState shard from :func:`export_state` output."""
+    tk = jnp.asarray(exported["tkeys"], _U32)
+    want = (spec.nblocks_local, spec.block_size, spec.key_packer.lanes)
+    if tk.shape != want:
+        raise ValueError(
+            f"hashmap.restore_state: tkeys shape {tk.shape} does not "
+            f"match spec {want}")
+    return HashMapState(tk, jnp.asarray(exported["tvals"], _U32),
+                        jnp.asarray(exported["status"], _U32))
 
 
 def resize(backend: Backend, spec: HashMapSpec, state: HashMapState,

@@ -88,7 +88,9 @@ def push(backend: Backend, spec: QueueSpec, state: QueueState,
          promise: Promise = Promise.PUSH,
          max_rounds: int = 1,
          overflow: str = "drop",
-         transport=None):
+         transport=None,
+         dead_ranks=None,
+         integrity: bool = False):
     """Push each value to the ring hosted on ``dest[i]``.
 
     Returns (state, pushed_here, dropped):
@@ -111,6 +113,14 @@ def push(backend: Backend, spec: QueueSpec, state: QueueState,
     fire-and-forget push normally skips.  A LOCAL push honors the same
     4-tuple contract straight from its local accept mask, with zero
     collectives.
+
+    ``dead_ranks``/``integrity`` pass straight to
+    :meth:`ExchangePlan.commit` (DESIGN.md section 1.8): items bound for
+    a dead rank are masked at admission (reappearing in ``carry`` so a
+    caller can re-target them), and with ``integrity=True`` arrivals
+    whose wire segment fails its checksum are invalidated — under
+    ``overflow="carry"`` such items never receive an accept ack, so the
+    carry mask re-injects them and a retry heals transient corruption.
     """
     validate(promise)
     if overflow not in ("drop", "carry"):
@@ -135,7 +145,8 @@ def push(backend: Backend, spec: QueueSpec, state: QueueState,
         plan = ExchangePlan(name="queue.push")
         h = plan.add(lanes, dest, capacity, reply_lanes=1, valid=valid,
                      op_name="queue.push")
-        c = plan.commit(backend, max_rounds=max_rounds, transport=transport)
+        c = plan.commit(backend, max_rounds=max_rounds, transport=transport,
+                        dead_ranks=dead_ranks, integrity=integrity)
         res = c.view(h)
         state, pushed, _, accept = _append(spec, state, res.payload,
                                            res.valid)
@@ -148,7 +159,8 @@ def push(backend: Backend, spec: QueueSpec, state: QueueState,
 
     res = route(backend, lanes, dest, capacity, valid=valid,
                 op_name="queue.push", max_rounds=max_rounds,
-                transport=transport)
+                transport=transport, dead_ranks=dead_ranks,
+                integrity=integrity)
     state, pushed, full_drop, _ = _append(spec, state, res.payload,
                                           res.valid)
     a = _amo_count(spec, promise)
@@ -216,7 +228,9 @@ def pop(backend: Backend, spec: QueueSpec, state: QueueState,
         n: int, src: jax.Array | int,
         promise: Promise = Promise.POP,
         max_rounds: int = 1,
-        transport=None):
+        transport=None,
+        dead_ranks=None,
+        integrity: bool = False):
     """Pop up to ``n`` items from the ring hosted on rank ``src``.
 
     Every rank issues its own request; the owner grants ranges in
@@ -235,7 +249,8 @@ def pop(backend: Backend, spec: QueueSpec, state: QueueState,
     plan = ExchangePlan(name="queue.pop")
     h = plan.add(jnp.zeros((n, 1), _U32), src, n,
                  reply_lanes=spec.lanes + 1, op_name="queue.pop")
-    c = plan.commit(backend, max_rounds=max_rounds, transport=transport)
+    c = plan.commit(backend, max_rounds=max_rounds, transport=transport,
+                    dead_ranks=dead_ranks, integrity=integrity)
     req = c.view(h)
     new, body = _grant(spec, state, req.valid, promise)
     c.set_reply(h, body)
@@ -254,7 +269,9 @@ def push_pop(backend: Backend, spec: QueueSpec, state: QueueState,
              promise: Promise = Promise.PUSH | Promise.POP,
              max_rounds: int = 1,
              overflow: str = "drop",
-             transport=None):
+             transport=None,
+             dead_ranks=None,
+             integrity: bool = False):
     """Fused push + pop sharing ONE exchange round trip.
 
     Under ``ConProm.CircularQueue.push_pop`` the two ops are promised
@@ -287,17 +304,22 @@ def push_pop(backend: Backend, spec: QueueSpec, state: QueueState,
             state, pushed, dropped, carry = push(
                 backend, spec, state, values, dest, capacity, valid=valid,
                 promise=promise, max_rounds=max_rounds, overflow="carry",
-                transport=transport)
+                transport=transport, dead_ranks=dead_ranks,
+                integrity=integrity)
             state, out, got = pop(backend, spec, state, n, src,
                                   promise=promise, max_rounds=max_rounds,
-                                  transport=transport)
+                                  transport=transport, dead_ranks=dead_ranks,
+                                  integrity=integrity)
             return state, pushed, dropped, out, got, carry
         state, pushed, dropped = push(backend, spec, state, values, dest,
                                       capacity, valid=valid, promise=promise,
                                       max_rounds=max_rounds,
-                                      transport=transport)
+                                      transport=transport,
+                                      dead_ranks=dead_ranks,
+                                      integrity=integrity)
         state, out, got = pop(backend, spec, state, n, src, promise=promise,
-                              max_rounds=max_rounds, transport=transport)
+                              max_rounds=max_rounds, transport=transport,
+                              dead_ranks=dead_ranks, integrity=integrity)
         return state, pushed, dropped, out, got
 
     lanes = spec.packer.pack(values)
@@ -312,7 +334,8 @@ def push_pop(backend: Backend, spec: QueueSpec, state: QueueState,
                   reply_lanes=1 if carrying else 0, op_name="queue.push")
     hq = plan.add(jnp.zeros((n, 1), _U32), src, n,
                   reply_lanes=spec.lanes + 1, op_name="queue.pop")
-    c = plan.commit(backend, max_rounds=max_rounds, transport=transport)
+    c = plan.commit(backend, max_rounds=max_rounds, transport=transport,
+                    dead_ranks=dead_ranks, integrity=integrity)
     vp, vq = c.view(hp), c.view(hq)
 
     state, pushed, full_drop, accept = _append(spec, state, vp.payload,
@@ -362,6 +385,31 @@ def local_drain(spec: QueueSpec, state: QueueState):
     idx = (state.head[0] + take) % spec.capacity
     rows = jnp.where(got[:, None], state.data[idx], 0)
     return spec.packer.unpack(rows), got
+
+
+def export_state(spec: QueueSpec, state: QueueState) -> dict:
+    """This rank's ring as a checkpointable pytree (plain dict of arrays).
+
+    The dict rides ``checkpoint.save_checkpoint`` unchanged; a survivor
+    restores a dead rank's shard with :func:`restore_state` and
+    re-injects its live rows (``local_drain`` of the restored state)
+    through an ordinary ``push`` — the recovery path of DESIGN.md
+    section 1.8.
+    """
+    return {"data": state.data, "head": state.head, "tail": state.tail,
+            "tail_ready": state.tail_ready, "head_ready": state.head_ready}
+
+
+def restore_state(spec: QueueSpec, exported: dict) -> QueueState:
+    """Rebuild a QueueState from :func:`export_state` output."""
+    data = jnp.asarray(exported["data"], _U32)
+    if data.shape != (spec.capacity, spec.lanes):
+        raise ValueError(
+            f"queue.restore_state: data shape {data.shape} does not match "
+            f"spec (capacity={spec.capacity}, lanes={spec.lanes})")
+    as_i32 = lambda k: jnp.asarray(exported[k], _I32).reshape((1,))
+    return QueueState(data, as_i32("head"), as_i32("tail"),
+                      as_i32("tail_ready"), as_i32("head_ready"))
 
 
 def resize(backend: Backend, spec: QueueSpec, state: QueueState,

@@ -22,6 +22,7 @@ from repro.core.exchange import (ExchangeOverflowError, ExchangePlan,
                                  suggest_rounds)
 from repro.core.transport import (DenseTransport, HierarchicalTransport,
                                   Transport, make_transport)
+from repro.core.faults import FaultInjectingTransport, FaultSpec
 from repro.core import costs
 
 __all__ = [
@@ -43,5 +44,7 @@ __all__ = [
     "DenseTransport",
     "HierarchicalTransport",
     "make_transport",
+    "FaultSpec",
+    "FaultInjectingTransport",
     "costs",
 ]

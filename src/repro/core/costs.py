@@ -46,6 +46,10 @@ class Cost:
     #                       2 per hierarchical (two-stage) launch, so a
     #                       cost log shows which transport moved the bytes
     #                       (DESIGN.md section 1.7)
+    lost_bytes: int = 0   # wire bytes admitted toward destinations known
+    #                       to be dead at commit time (degraded commits,
+    #                       DESIGN.md section 1.8); static upper bound
+    unreachable: int = 0  # dead destination ranks masked at admission
 
     def __add__(self, other: "Cost") -> "Cost":
         return Cost(
@@ -60,6 +64,8 @@ class Cost:
             self.bytes_out + other.bytes_out,
             self.bytes_in + other.bytes_in,
             self.hops + other.hops,
+            self.lost_bytes + other.lost_bytes,
+            self.unreachable + other.unreachable,
         )
 
     def formula(self) -> str:

@@ -107,6 +107,11 @@ _I32 = jnp.int32
 _VALID_BIT = jnp.uint32(1 << 31)
 _POS_MASK = jnp.uint32((1 << 31) - 1)
 
+#: salt added to every wire checksum word so an intact-but-empty window
+#: (stored = SALT + 0) is distinguishable from a zeroed/lost segment
+#: (stored = 0, checksum row's own meta lane also zeroed)
+_CK_SALT = jnp.uint32(0x9E3779B9)
+
 #: legal ``overflow=`` policies (DESIGN.md section 1.6)
 OVERFLOW_POLICIES = ("drop", "raise-in-test", "carry")
 
@@ -140,6 +145,15 @@ class RouteResult(NamedTuple):
     send_occ  (P*C,) bool  — requester-local send-slot occupancy; the
                              reply path's ``answered`` comes from here,
                              not from the wire
+    lost      () i32       — items shipped but NOT surviving arrival
+                             (global): wire windows whose integrity
+                             check failed, plus anything a faulty or
+                             under-provisioned transport lost in
+                             flight.  Always 0 unless the plan was
+                             committed with ``integrity=True``
+                             (DESIGN.md section 1.8); such items are
+                             healed by the caller's ack-driven carry
+                             path, never silently consumed
     """
 
     payload: jax.Array
@@ -150,6 +164,7 @@ class RouteResult(NamedTuple):
     capacity: int
     send_item: jax.Array
     send_occ: jax.Array
+    lost: jax.Array | int = 0
 
 
 @dataclasses.dataclass
@@ -280,7 +295,9 @@ class ExchangePlan:
     def commit(self, backend: Backend, impl: str = "auto",
                max_rounds: int = 1,
                overflow: str = "drop",
-               transport: Transport | str | None = None) -> "CommittedPlan":
+               transport: Transport | str | None = None,
+               dead_ranks: tuple[int, ...] | None = None,
+               integrity: bool = False) -> "CommittedPlan":
         """Issue the request round: one fused all-to-all for all flows.
 
         ``max_rounds=R`` adds R-1 carryover retry rounds: retry round r
@@ -298,6 +315,20 @@ class ExchangePlan:
         :class:`~repro.core.transport.Transport` instance passes
         through.  The logical semantics — admission, owner layout,
         drops, send maps — are transport-independent.
+
+        Degraded operation (DESIGN.md section 1.8): ``dead_ranks`` is a
+        static tuple of ranks known to be down; traffic addressed to
+        them is masked at admission and handed back as carry-compatible
+        leftovers (:meth:`CommittedPlan.unreachable`) instead of being
+        shipped into the void, with ``unreachable``/``lost_bytes``
+        observables recorded in :mod:`repro.core.costs`.
+        ``integrity=True`` appends a synthetic checksum flow to the
+        wire (one u32 word per (dest, round, flow) window, riding the
+        same launches); windows whose checksum fails verification on
+        arrival are invalidated wholesale and surfaced as the per-flow
+        ``lost`` count on the views, so corruption feeds the caller's
+        ack/carry retry path instead of poisoning owner state.  Both
+        default off, leaving the wire byte-identical to a plain commit.
         """
         if not self._flows:
             raise ValueError("commit() on an empty ExchangePlan")
@@ -311,6 +342,12 @@ class ExchangePlan:
             raise ValueError(
                 f"overflow must be one of {OVERFLOW_POLICIES}, "
                 f"got {overflow!r}")
+        dead = tuple(sorted({int(d) for d in (dead_ranks or ())}))
+        for d in dead:
+            if not 0 <= d < backend.nprocs():
+                raise ValueError(
+                    f"dead_ranks names rank {d}, outside the "
+                    f"{backend.nprocs()}-rank axis")
         transport = make_transport(transport)
         self._committed = True
         if fine_grained(self.promise):
@@ -326,18 +363,22 @@ class ExchangePlan:
                 subs.append(p.commit(
                     backend, impl=impl,
                     max_rounds=_flow_rounds(f, int(max_rounds)),
-                    overflow=overflow, transport=transport))
+                    overflow=overflow, transport=transport,
+                    dead_ranks=dead, integrity=integrity))
             return CommittedPlan(self, [c.view(0) for c in subs],
-                                 sequential=True, subplans=subs)
+                                 sequential=True, subplans=subs,
+                                 dead_ranks=dead)
         return self._commit_fused(backend, impl, int(max_rounds), overflow,
-                                  transport)
+                                  transport, dead, integrity)
 
     # -- fused lowering ---------------------------------------------------
 
     def _commit_fused(self, backend: Backend, impl: str,
                       max_rounds: int = 1,
                       overflow: str = "drop",
-                      transport: Transport = DENSE) -> "CommittedPlan":
+                      transport: Transport = DENSE,
+                      dead_ranks: tuple[int, ...] = (),
+                      integrity: bool = False) -> "CommittedPlan":
         flows = self._flows
         nprocs = backend.nprocs()
         nflows = len(flows)
@@ -355,6 +396,17 @@ class ExchangePlan:
         valid_all = jnp.concatenate([f.valid for f in flows])
         flow_id = jnp.concatenate([
             jnp.full((f.n,), fi, _I32) for fi, f in enumerate(flows)])
+
+        # degraded commit (DESIGN.md section 1.8): traffic toward dead
+        # ranks is masked BEFORE admission, so such items never take a
+        # send slot — they keep their flow-level validity and surface as
+        # carry-compatible leftovers / unreachable() rows instead of
+        # shipping into the void (or counting as capacity drops)
+        if dead_ranks:
+            alive = jnp.ones_like(valid_all)
+            for d in dead_ranks:
+                alive = alive & (dest_all != d)
+            valid_all = valid_all & alive
 
         # ONE binning pass for every flow AND every retry round:
         # composite (dest, flow) buckets.  Retry round r ships exactly
@@ -409,18 +461,108 @@ class ExchangePlan:
                           flows[fi].reply_lanes, flows[fi].n,
                           flows[fi].op_name)
                  for fi in range(nflows)]
+
+        if dead_ranks:
+            # static degraded-commit observables: how many destinations
+            # were masked and the worst-case wire bytes their buckets
+            # would have carried (per requesting rank)
+            lb = sum(len(dead_ranks) * rounds_f[fi] * caps[fi]
+                     * roww[fi] * 4 for fi in range(nflows))
+            costs.record(plan_op, costs.Cost(unreachable=len(dead_ranks),
+                                             lost_bytes=lb))
+
+        send_dest, send_flow = dest_all, flow_id
+        send_off, send_valid = offsets, valid_all
+        ck_rmax = 0
+        if integrity:
+            # synthetic checksum flow (DESIGN.md section 1.8): ONE u32
+            # checksum word (+ meta lane) certifying each (dest, round,
+            # flow) wire window, riding the SAME launches as the data.
+            # Row d*R*F + r*F + f has the analytic within-bucket rank
+            # r*F + f at capacity F, so the flow needs no second binning
+            # pass; the stored word is SALT + sum of the window's row
+            # hashes (u32 wraparound), which the owner recomputes from
+            # the arrival segment.
+            ck_rmax = max(rounds_f)
+            ck_vals = []
+            row0 = 0
+            for fi, f in enumerate(flows):
+                h = kops.mix_rows(bodies[fi], impl=impl)
+                rf, cf = rounds_f[fi], caps[fi]
+                okf = ok[row0:row0 + f.n]
+                seg = jnp.where(
+                    okf, f.dest * rf + offsets[row0:row0 + f.n] // cf,
+                    nprocs * rf).astype(_I32)
+                sums = jax.ops.segment_sum(
+                    h, seg, num_segments=nprocs * rf + 1)[:-1] \
+                    .reshape(nprocs, rf).astype(_U32)
+                if rf < ck_rmax:
+                    sums = jnp.pad(sums, ((0, 0), (0, ck_rmax - rf)))
+                ck_vals.append(sums)
+                row0 += f.n
+            ck_lane = (_CK_SALT + jnp.stack(ck_vals, axis=2)).reshape(-1)
+            n_ck = nprocs * ck_rmax * nflows
+            ck_meta = _VALID_BIT | jnp.arange(n_ck, dtype=_U32)
+            bodies.append(jnp.stack([ck_lane, ck_meta], axis=1))
+            specs.append(FlowWire(nflows, ck_rmax, 2, 0, n_ck,
+                                  "exchange.integrity"))
+            ar = jnp.arange(n_ck, dtype=_I32)
+            send_dest = jnp.concatenate(
+                [dest_all, ar // (ck_rmax * nflows)])
+            send_flow = jnp.concatenate(
+                [flow_id, jnp.full((n_ck,), nflows, _I32)])
+            send_off = jnp.concatenate([offsets, ar % (ck_rmax * nflows)])
+            send_valid = jnp.concatenate(
+                [valid_all, jnp.ones((n_ck,), bool)])
+
         segments, extra_drop, tctx = transport.request(
-            backend, RequestArgs(specs, bodies, dest_all, flow_id, offsets,
-                                 valid_all, plan_op, impl))
+            backend, RequestArgs(specs, bodies, send_dest, send_flow,
+                                 send_off, send_valid, plan_op, impl))
 
         # one psum covers every flow's overflow accounting; only rank
         # >= R_f*C_f is a drop — earlier overflow was carried to a retry.
         # A transport with explicitly undersized stage capacities may
         # drop admitted items too; those counts arrive psum'ed.
         over = jnp.maximum(counts - eff_arr[None, :], 0).sum(0)   # (F,)
-        dropped = backend.psum(over).astype(_I32)
+        lost = None
+        good_by_flow: list[jax.Array] = []
+        if integrity:
+            # owner-side verification: recompute each (src, round)
+            # window's hash sum from the arrival segment and compare to
+            # the stored checksum word.  A failed window (corrupt word,
+            # zeroed segment, transport loss) invalidates ALL its
+            # arrivals — corrupted items re-enter via the caller's
+            # ack/carry retry path instead of being consumed.  The lost
+            # count is global sent-minus-survived, folded into the same
+            # psum as the overflow counts.
+            ck_seg = segments[nflows]
+            ck_ok3 = ((ck_seg[:, 1] & _VALID_BIT) != 0) \
+                .reshape(nprocs, ck_rmax, nflows)
+            ck_val3 = ck_seg[:, 0].reshape(nprocs, ck_rmax, nflows)
+            sent, surv = [], []
+            row0 = 0
+            for fi, f in enumerate(flows):
+                rf, cf = rounds_f[fi], caps[fi]
+                comp = kops.mix_rows(segments[fi], impl=impl) \
+                    .reshape(nprocs, rf, cf).sum(axis=2, dtype=_U32)
+                good = (ck_ok3[:, :rf, fi]
+                        & (ck_val3[:, :rf, fi] == _CK_SALT + comp))
+                good_rows = jnp.repeat(good.reshape(-1), cf)
+                good_by_flow.append(good_rows)
+                sent.append(ok[row0:row0 + f.n].sum().astype(_I32))
+                meta_f = segments[fi][:, f.lanes]
+                alive = ((meta_f & _VALID_BIT) != 0) & good_rows
+                surv.append(alive.sum().astype(_I32))
+                row0 += f.n
+            red = backend.psum(jnp.concatenate(
+                [over, jnp.stack(sent), jnp.stack(surv)])).astype(_I32)
+            dropped = red[:nflows]
+            lost = jnp.maximum(red[nflows:2 * nflows]
+                               - red[2 * nflows:], 0)
+        else:
+            dropped = backend.psum(over).astype(_I32)
         if extra_drop is not None:
-            dropped = dropped + extra_drop
+            dropped = dropped + extra_drop[:nflows]
 
         views = []
         for fi, f in enumerate(flows):
@@ -429,17 +571,22 @@ class ExchangePlan:
             pay = segment[:, :f.lanes]
             meta_r = segment[:, f.lanes]
             out_valid = (meta_r & _VALID_BIT) != 0
+            if integrity:
+                out_valid = out_valid & good_by_flow[fi]
             out_src_pos = (meta_r & _POS_MASK).astype(_I32)
             src_rank = jnp.repeat(jnp.arange(nprocs, dtype=_I32), cap_e)
             views.append(RouteResult(pay, out_valid, src_rank, out_src_pos,
                                      dropped[fi], cap_e,
-                                     send_items[fi], send_occs[fi]))
+                                     send_items[fi], send_occs[fi],
+                                     lost[fi] if lost is not None
+                                     else jnp.int32(0)))
 
         if overflow == "raise-in-test":
             _raise_on_drops(flows, dropped)
 
         return CommittedPlan(self, views, sequential=False,
-                             transport=transport, tctx=tctx)
+                             transport=transport, tctx=tctx,
+                             dead_ranks=dead_ranks)
 
 
 class CommittedPlan:
@@ -447,13 +594,15 @@ class CommittedPlan:
 
     def __init__(self, plan: ExchangePlan, views: list[RouteResult],
                  sequential: bool, transport: Transport | None = None,
-                 tctx=None, subplans: list["CommittedPlan"] | None = None):
+                 tctx=None, subplans: list["CommittedPlan"] | None = None,
+                 dead_ranks: tuple[int, ...] = ()):
         self._plan = plan
         self._views = views
         self._sequential = sequential
         self._transport = transport        # physical layer (fused path)
         self._tctx = tctx                  # transport's reply context
         self._subplans = subplans or []    # FINE: one sub-plan per flow
+        self._dead_ranks = tuple(dead_ranks or ())
         self._replies: dict[int, jax.Array] = {}
         self._finished = False
 
@@ -480,6 +629,25 @@ class CommittedPlan:
         """
         f = self._plan._flows[handle]
         return f.payload, carry_mask(self._views[handle], f.valid)
+
+    def unreachable(self, handle: int) -> tuple[jax.Array, jax.Array]:
+        """Rows addressed to a dead rank (``commit(dead_ranks=...)``).
+
+        Returns ``(payload, mask)`` in the flow's ORIGINAL batch
+        coordinates, exactly like :meth:`leftover` — and every
+        unreachable row is also IN that leftover mask, since masking at
+        admission means it never took a send slot.  This narrower view
+        lets recovery code separate "re-inject verbatim next cycle"
+        (capacity overflow) from "re-route after the mesh heals" (the
+        owner is gone; after ``elastic.plan_remesh`` re-homes the key
+        space, these rows are re-inserted against the new owner map).
+        Purely local state; zero collectives.
+        """
+        f = self._plan._flows[handle]
+        mask = jnp.zeros((f.n,), bool)
+        for d in self._dead_ranks:
+            mask = mask | (f.dest == d)
+        return f.payload, f.valid & mask
 
     def set_reply(self, handle: int, rows: jax.Array) -> None:
         """Stage per-request replies for one flow.
@@ -589,7 +757,9 @@ def route(backend: Backend,
           impl: str = "auto",
           max_rounds: int = 1,
           overflow: str = "drop",
-          transport: Transport | str | None = None) -> RouteResult:
+          transport: Transport | str | None = None,
+          dead_ranks: tuple[int, ...] | None = None,
+          integrity: bool = False) -> RouteResult:
     """Send each row of ``payload`` to rank ``dest[i]``; return owner view.
 
     Thin eager wrapper: a single-flow :class:`ExchangePlan`, committed
@@ -614,11 +784,14 @@ def route(backend: Backend,
              non-dense transport should use an :class:`ExchangePlan`
              with ``reply_lanes`` declared — the standalone
              :func:`reply` is the dense inverse all-to-all only.
+    dead_ranks / integrity: degraded-operation knobs, forwarded to
+             :meth:`ExchangePlan.commit` (DESIGN.md section 1.8).
     """
     plan = ExchangePlan(name=op_name)
     h = plan.add(payload, dest, capacity, valid=valid, op_name=op_name)
     return plan.commit(backend, impl=impl, max_rounds=max_rounds,
-                       overflow=overflow, transport=transport).view(h)
+                       overflow=overflow, transport=transport,
+                       dead_ranks=dead_ranks, integrity=integrity).view(h)
 
 
 def reply(backend: Backend,

@@ -1,0 +1,202 @@
+"""Deterministic fault injection for the exchange stack (DESIGN.md §1.8).
+
+BCL's portability story assumes the communication substrate delivers
+every word; real fabrics do not.  This module lets tests and benchmarks
+subject the *unmodified* exchange engine to the three failure classes
+that matter for distributed containers:
+
+  kill      a rank goes silent: every word it would have contributed to
+            a collective arrives as zero on every peer (and stays zero
+            for all later launches) — the SPMD analogue of a node loss.
+
+  drop      one (launch, src, dst) wire segment is lost in flight: the
+            destination block of ``src``'s send buffer is zeroed for
+            exactly that collective launch.
+
+  corrupt   one word of one (launch, src, dst) segment is bit-flipped
+            in flight (XOR with a seed-derived mask at a seed-derived
+            word index).
+
+Faults are **seeded and trace-time deterministic**: a :class:`FaultSpec`
+names launches by their index in program order (the ``n``-th
+``all_to_all`` issued through the wrapped transport), sources and
+destinations by rank, and derives corrupted word positions from the
+seed by integer hashing — no wall-clock randomness, so a faulty program
+is jit-stable, reproducible, and resumable.
+
+:class:`FaultInjectingTransport` wraps ANY :class:`Transport` (dense or
+hierarchical): it forwards ``request``/``reply`` to the inner transport
+but hands it a :class:`_FaultyBackend` whose ``all_to_all`` mutates the
+send buffer before the real collective.  The inner transport's wire
+format, cost attribution, and slot bookkeeping are untouched — faults
+happen strictly "on the wire", which is exactly where the integrity
+machinery (checksum lane, ``lost`` accounting, ack-driven carry) must
+catch them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.backend import Backend
+from repro.core.transport import Transport
+
+_U32 = jnp.uint32
+
+#: Knuth multiplicative constants for the word/bit position hash.
+_H1 = 2654435761
+_H2 = 1013904223
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """Seeded, deterministic description of injected wire faults.
+
+    ``launch`` indices count ``all_to_all`` calls issued through the
+    wrapping transport, in program order, starting at 0 (a dense
+    request round is one launch; a hierarchical request round is two;
+    replies follow).  ``src``/``dst`` are block indices of that launch's
+    send buffer — global ranks for a full-axis collective, group-local
+    positions for a grouped (hierarchical sub-axis) collective.
+    """
+
+    seed: int = 0
+    #: ranks whose sends are zeroed from ``kill_from_launch`` onwards
+    kill_ranks: tuple[int, ...] = ()
+    kill_from_launch: int = 0
+    #: (launch, src, dst) wire segments dropped whole
+    drop: tuple[tuple[int, int, int], ...] = ()
+    #: (launch, src, dst) wire segments with one bit-flipped word
+    corrupt: tuple[tuple[int, int, int], ...] = ()
+
+    def word_and_mask(self, launch: int, src: int, dst: int,
+                      block_words: int) -> tuple[int, int]:
+        """Seed-derived (word index, XOR mask) for a corrupt fault."""
+        h = (self.seed * _H1 + launch * _H2 + src * 97 + dst * 31)
+        wi = h % max(block_words, 1)
+        bit = (h // max(block_words, 1)) % 32
+        return wi, 1 << bit
+
+
+class _FaultyBackend(Backend):
+    """Backend proxy that mutates ``all_to_all`` sends per a FaultSpec.
+
+    Every other primitive forwards untouched: faults model the data
+    fabric, not the control collectives (psum/all_gather) that carry
+    the engine's own bookkeeping.
+    """
+
+    def __init__(self, inner: Backend, spec: FaultSpec,
+                 launch_counter: list[int]):
+        self._inner = inner
+        self._spec = spec
+        self._launch = launch_counter
+        self.axis = inner.axis
+
+    # -- forwarded primitives -------------------------------------------
+    def nprocs(self) -> int:
+        return self._inner.nprocs()
+
+    def rank(self) -> jax.Array:
+        return self._inner.rank()
+
+    def all_gather(self, x: jax.Array) -> jax.Array:
+        return self._inner.all_gather(x)
+
+    def psum(self, x: jax.Array) -> jax.Array:
+        return self._inner.psum(x)
+
+    def pmax(self, x: jax.Array) -> jax.Array:
+        return self._inner.pmax(x)
+
+    def ppermute(self, x, perm):
+        return self._inner.ppermute(x, perm)
+
+    def barrier(self) -> None:
+        return self._inner.barrier()
+
+    # -- the faulty wire ------------------------------------------------
+    def all_to_all(self, x: jax.Array,
+                   groups: Sequence[Sequence[int]] | None = None
+                   ) -> jax.Array:
+        launch = self._launch[0]
+        self._launch[0] = launch + 1
+        x = self._mutate(x, groups, launch)
+        return self._inner.all_to_all(x, groups)
+
+    def _mutate(self, x: jax.Array, groups, launch: int) -> jax.Array:
+        spec = self._spec
+        nblocks = (len(groups[0]) if groups is not None
+                   else self._inner.nprocs())
+        if nblocks < 1 or x.shape[0] % nblocks:
+            return x          # degenerate layout: nothing to target
+        rank = self._inner.rank()
+
+        # kill: this rank's whole send zeroes out, permanently
+        if spec.kill_ranks and launch >= spec.kill_from_launch:
+            dead = jnp.zeros((), bool)
+            for k in spec.kill_ranks:
+                dead = dead | (rank == k)
+            x = jnp.where(dead, jnp.zeros_like(x), x)
+
+        drops = [(s, d) for (l, s, d) in spec.drop if l == launch]
+        flips = [(s, d) for (l, s, d) in spec.corrupt if l == launch]
+        if not drops and not flips:
+            return x
+
+        shape = x.shape
+        blocks = x.reshape(nblocks, -1)
+        block_words = blocks.shape[1]
+        for src, dst in drops:
+            if not 0 <= dst < nblocks:
+                continue
+            hit = blocks.at[dst].set(jnp.zeros_like(blocks[dst]))
+            blocks = jnp.where(rank == src, hit, blocks)
+        for src, dst in flips:
+            if not 0 <= dst < nblocks:
+                continue
+            wi, mask = spec.word_and_mask(launch, src, dst, block_words)
+            flipped = blocks[dst, wi] ^ jnp.asarray(mask, blocks.dtype)
+            hit = blocks.at[dst, wi].set(flipped)
+            blocks = jnp.where(rank == src, hit, blocks)
+        return blocks.reshape(shape)
+
+
+class FaultInjectingTransport(Transport):
+    """Wrap any transport so its collectives traverse a faulty fabric.
+
+    The launch counter is trace-time state shared between request and
+    reply phases; it counts ``all_to_all`` calls since construction (or
+    the last :meth:`reset`), so a :class:`FaultSpec`'s launch indices
+    address a specific collective of a specific jitted program — build
+    one wrapper per program (or ``reset()`` between traces) to keep the
+    numbering deterministic.
+    """
+
+    def __init__(self, inner: Transport, spec: FaultSpec):
+        self.inner = inner
+        self.spec = spec
+        self.name = inner.name
+        self._launch = [0]
+
+    def reset(self) -> None:
+        """Restart launch numbering (call between independent traces)."""
+        self._launch[0] = 0
+
+    @property
+    def launches(self) -> int:
+        """Collective launches traced through this wrapper so far."""
+        return self._launch[0]
+
+    def _wrap(self, backend: Backend) -> Backend:
+        return _FaultyBackend(backend, self.spec, self._launch)
+
+    def request(self, backend: Backend, args) -> tuple[list, Any, Any]:
+        return self.inner.request(self._wrap(backend), args)
+
+    def reply(self, backend: Backend, ctx, staged):
+        return self.inner.reply(self._wrap(backend), ctx, staged)

@@ -17,6 +17,7 @@ from jax.experimental import pallas as pl
 
 _I32 = jnp.int32
 _F32 = jnp.float32
+_U32 = jnp.uint32
 
 
 def _interpret() -> bool:
@@ -181,6 +182,45 @@ def ragged_slots(bins: jax.Array, flow: jax.Array, offsets: jax.Array,
       word_off.astype(_I32), row_words.astype(_I32), caps.astype(_I32),
       rounds.astype(_I32))
     return slots[:m]
+
+
+def _row_mix_kernel(rows_ref, out_ref, *, lanes: int):
+    """Per-row wire-checksum hash: weighted lane sum + fmix32 avalanche.
+
+    All arithmetic is wrapping u32 so the kernel is bit-identical to the
+    jnp lowering in ``kernels/ops.py::mix_rows`` (the sender and owner
+    sides of an integrity-checked exchange must agree exactly).
+    """
+    rows = rows_ref[...].astype(_U32)                    # (TM, L)
+    mult = (_U32(0x9E3779B1)
+            * (jax.lax.broadcasted_iota(_U32, (1, lanes), 1) * _U32(2)
+               + _U32(1)))
+    h = jnp.sum(rows * mult, axis=1, dtype=_U32)
+    h = h ^ (h >> 16)
+    h = h * _U32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * _U32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    out_ref[...] = h
+
+
+def row_mix(rows: jax.Array, tile: int = 2048) -> jax.Array:
+    """Per-row u32 hash of a lane matrix; oracle: ops.mix_rows jnp path."""
+    m, lanes = rows.shape
+    pad = (-m) % tile
+    if pad:
+        rows = jnp.pad(rows, ((0, pad), (0, 0)))
+    mp = rows.shape[0]
+    kern = functools.partial(_row_mix_kernel, lanes=lanes)
+    out = pl.pallas_call(
+        kern,
+        grid=(mp // tile,),
+        in_specs=[pl.BlockSpec((tile, lanes), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((mp,), _U32),
+        interpret=_interpret(),
+    )(rows.astype(_U32))
+    return out[:m]
 
 
 def histogram(bins: jax.Array, nbins: int, valid: jax.Array | None = None,

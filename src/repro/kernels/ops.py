@@ -346,6 +346,41 @@ def stage_slots(bins, flow, offsets, valid, word_off, row_words, caps,
 
 
 # --------------------------------------------------------------------------
+# wire integrity: per-row mixing hash
+# --------------------------------------------------------------------------
+
+def mix_rows(rows: jax.Array, impl: str = "auto") -> jax.Array:
+    """Per-row u32 mixing hash of a lane matrix (wire checksums).
+
+    ``rows`` is (N, L) u32 (the exchange wire's payload + meta lanes);
+    returns (N,) u32.  Lane ``l`` is weighted by the odd multiplier
+    ``0x9E3779B1 * (2l + 1)`` (mod 2^32), the weighted sum is finished
+    with the murmur3 fmix32 avalanche — all in wrapping u32 arithmetic,
+    bit-identical across impls and platforms so sender and owner sides
+    of an integrity-checked exchange (DESIGN.md section 1.8) agree.
+    An all-zero row hashes to 0 (fmix32(0) == 0), so summing hashes
+    over a wire window skips empty slots for free.
+    """
+    impl = _resolve(impl)
+    if rows.ndim == 1:
+        rows = rows[:, None]
+    if impl == "pallas":
+        from repro.kernels import binning
+        return binning.row_mix(rows)
+    rows = rows.astype(_U32)
+    lanes = rows.shape[1]
+    mult = (_U32(0x9E3779B1)
+            * (jnp.arange(lanes, dtype=_U32) * _U32(2) + _U32(1)))
+    h = jnp.sum(rows * mult[None, :], axis=1, dtype=_U32)
+    h = h ^ (h >> 16)
+    h = h * _U32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * _U32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    return h
+
+
+# --------------------------------------------------------------------------
 # flash attention
 # --------------------------------------------------------------------------
 

@@ -29,6 +29,7 @@ from repro.data.tokens import TokenStream
 from repro.launch.mesh import make_test_mesh
 from repro.launch.steps import (batch_shardings, init_state, make_train_step,
                                 train_shardings)
+from repro.runtime.elastic import plan_remesh
 from repro.runtime.ft import FaultToleranceManager, StragglerDetector
 
 
@@ -82,8 +83,33 @@ def main(argv=None):
             if ckpt:
                 ckpt.wait()   # drain in-flight async save, like a real
                 #               preemption handler would before exiting
-            print(f"[ft] injected failure at step {step}; "
-                  "restart this command to resume from the checkpoint")
+            # drive the production recovery state machine with the kill:
+            # node 0 goes silent, every survivor keeps heartbeating, and
+            # the detector's decision selects the restart step + remesh
+            killed = 0
+            now = time.time()
+            for node in range(max(n_dev, 1)):
+                if node != killed:
+                    ft.heartbeat(node, now)
+            ckpt_step = (latest_step(args.ckpt_dir) or 0) if ckpt else 0
+            dec = ft.tick(now + ft.interval * ft.timeout_beats,
+                          last_ckpt_step=ckpt_step)
+            print(f"[ft] injected failure at step {step}: "
+                  f"node {killed} silent -> decision {dec}")
+            if dec.failed_nodes and not dec.promoted_spares:
+                survivors = max(n_dev, 1) - len(dec.failed_nodes)
+                try:
+                    plan = plan_remesh(tuple(mesh.axis_names),
+                                       tuple(mesh.devices.shape), survivors)
+                    print(f"[ft] remesh plan: {plan.old_shape} -> "
+                          f"{plan.new_shape} (dropped "
+                          f"{plan.dropped_devices}, batch/shard x"
+                          f"{plan.batch_per_shard_scale:.2f})")
+                except ValueError as e:
+                    print(f"[ft] remesh impossible: {e}")
+            print(f"[ft] restart this command to resume from step "
+                  f"{dec.restart_step}; the survivors re-inject the dead "
+                  "rank's checkpointed container shards on restore")
             return 17
         hb = time.time()
         batch_np = stream.next_batch()

@@ -97,6 +97,10 @@ class FaultToleranceManager:
                           if s.health == NodeHealth.SPARE), None)
             if spare is not None:
                 spare.health = NodeHealth.HEALTHY
+                # a spare has never heartbeated; without a fresh stamp the
+                # very next tick would see gap = now - 0 and re-fail it
+                spare.last_heartbeat = now
+                spare.missed = 0
                 promoted.append(spare.node_id)
         # any failure => deterministic restart from the last checkpoint;
         # with spares the world size is unchanged, otherwise elastic.
@@ -142,5 +146,7 @@ class StragglerDetector:
 
     def _persistent(self, node_id: int) -> bool:
         vals = sorted(v for v in self.ewma if v > 0)
+        if not vals:
+            return False     # cold start: no observations, nothing is slow
         med = vals[len(vals) // 2]
         return self.ewma[node_id] > 1.5 * med

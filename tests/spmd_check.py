@@ -451,6 +451,213 @@ def main():
     ok_shard = got["w"].sharding.mesh.shape["data"] == 4
     check("elastic.reshard_on_restore", ok_val and ok_shard and step == 3)
 
+    # ---- chaos battery: kill / corrupt / checkpoint-recover (§1.8) ----
+    # A rank dies mid-run.  The battery drives the full recovery story:
+    # phase A builds containers and checkpoints their exported state;
+    # phase B keeps running against the dead rank (degraded commit +
+    # fault-injected wire + integrity checksums) and pins EXACTLY which
+    # inserts ack; the FT control plane detects the silence, plans the
+    # remesh, and does not re-fail anyone on the next tick; recovery
+    # restores every shard from the checkpoint (the survivors re-inject
+    # the dead rank's shard) and replays the killed batch — the final
+    # container state is bit-identical to a run where nothing died.
+    from repro.core import FaultInjectingTransport, FaultSpec, make_transport
+    from repro.core.hashing import hash_lanes
+    from repro.containers.hashmap import (export_state as hm_export,
+                                          restore_state as hm_restore)
+    from repro.containers.queue import (export_state as q_export,
+                                        restore_state as q_restore)
+    from repro.runtime.elastic import plan_remesh
+    from repro.runtime.ft import FaultToleranceManager
+
+    KILLED = 3
+    crng = np.random.default_rng(3)
+    cperm = crng.permutation(1 << 20)
+    b1k = jnp.asarray(cperm[:PROCS * NLOC], jnp.uint32)
+    b2k = jnp.asarray(cperm[PROCS * NLOC:2 * PROCS * NLOC], jnp.uint32)
+    b1v, b2v = b1k * 11 + 3, b2k * 11 + 3
+    qv1 = jnp.asarray(crng.integers(0, 1 << 30, PROCS * 48), jnp.uint32)
+    qd1 = jnp.asarray(crng.integers(0, PROCS, PROCS * 48), jnp.int32)
+    qv2 = jnp.asarray(crng.integers(0, 1 << 30, PROCS * 48), jnp.uint32)
+    qd2 = jnp.asarray(crng.integers(0, PROCS, PROCS * 48), jnp.int32)
+
+    def hm_fresh(bk):
+        return hm.hashmap_create(bk, 8192, SDS((), jnp.uint32),
+                                 SDS((), jnp.uint32), block_size=16)
+
+    def phase_a(k1, v1, qv, qd):
+        bk = get_backend("bcl")
+        spec, st = hm_fresh(bk)
+        st, ok = hm.insert(bk, spec, st, k1, v1, capacity=NLOC)
+        qspec, qst = q.queue_create(bk, 512, SDS((), jnp.uint32))
+        qst, _, qdrop = q.push(bk, qspec, qst, qv, qd, capacity=96)
+        ex, qex = hm_export(spec, st), q_export(qspec, qst)
+        return (ok, qdrop[None], ex["tkeys"], ex["tvals"], ex["status"],
+                qex["data"], qex["head"], qex["tail"], qex["tail_ready"],
+                qex["head_ready"])
+
+    a = jax.jit(shard_map(phase_a, mesh=mesh, in_specs=(P("bcl"),) * 4,
+                          out_specs=(P("bcl"),) * 10))(b1k, b1v, qv1, qd1)
+    check("chaos.phase_a_clean", bool(np.asarray(a[0]).all())
+          and int(np.asarray(a[1]).sum()) == 0)
+    ck_tree = {"hm": {"tkeys": a[2], "tvals": a[3], "status": a[4]},
+               "q": {"data": a[5], "head": a[6], "tail": a[7],
+                     "tail_ready": a[8], "head_ready": a[9]}}
+
+    # phase B: rank KILLED dies.  Its memory is gone, its wire sends
+    # arrive as zeros (FaultSpec kill), and the plan is committed
+    # degraded (dead_ranks).  The integrity checksums turn the zeroed
+    # segments into invalid arrivals instead of silent garbage, so the
+    # ack mask is EXACT: an insert succeeded iff neither its source nor
+    # its attempt-0 owner is the dead rank.
+    ktr = FaultInjectingTransport(make_transport("dense"),
+                                  FaultSpec(seed=11, kill_ranks=(KILLED,)))
+
+    def phase_b(tk, tv, stt, k2, v2):
+        bk = get_backend("bcl")
+        spec, _ = hm_fresh(bk)
+        dead = jax.lax.axis_index("bcl") == KILLED
+        st = hm.HashMapState(
+            jnp.where(dead, jnp.zeros_like(tk), tk),
+            jnp.where(dead, jnp.zeros_like(tv), tv),
+            jnp.where(dead, jnp.zeros_like(stt), stt))
+        st, ok2 = hm.insert(bk, spec, st, k2, v2, capacity=NLOC,
+                            attempts=1, transport=ktr,
+                            dead_ranks=(KILLED,), integrity=True)
+        return ok2
+
+    ok2 = jax.jit(shard_map(phase_b, mesh=mesh, in_specs=(P("bcl"),) * 5,
+                            out_specs=P("bcl")))(a[2], a[3], a[4], b2k, b2v)
+    g0 = np.asarray(hash_lanes(b2k[:, None], seed=1)) % 512
+    owner0 = g0 // 64                       # 512 blocks, 64 per rank
+    src = np.repeat(np.arange(PROCS), NLOC)
+    expect_ok = (src != KILLED) & (owner0 != KILLED)
+    check("chaos.kill_acks_exact",
+          np.array_equal(np.asarray(ok2), expect_ok)
+          and int((~expect_ok).sum()) > 0)
+
+    # the FT control plane sees the silence, plans recovery, and the
+    # promoted world is stable on the next tick
+    ftm = FaultToleranceManager(n_nodes=PROCS, heartbeat_interval=1.0,
+                                timeout_beats=2)
+    for nd in range(PROCS):
+        ftm.heartbeat(nd, 0.0)
+    for nd in range(PROCS):
+        if nd != KILLED:
+            ftm.heartbeat(nd, 2.5)
+    dec = ftm.tick(2.5, last_ckpt_step=1)
+    check("chaos.ft_detects_kill",
+          dec.action == "restart" and dec.failed_nodes == [KILLED]
+          and dec.restart_step == 1)
+    rplan = plan_remesh(("data", "model"), (PROCS, 1), PROCS - 1)
+    check("chaos.remesh_plan",
+          rplan.new_shape == (PROCS - 1, 1) and rplan.dropped_devices == 0
+          and abs(rplan.batch_per_shard_scale - PROCS / (PROCS - 1)) < 1e-9)
+    for nd in range(PROCS):
+        if nd != KILLED:
+            ftm.heartbeat(nd, 3.0)
+    check("chaos.no_refail_next_tick",
+          ftm.tick(3.1, last_ckpt_step=1).action == "none")
+
+    # recovery: restore every shard from the checkpoint (survivors
+    # re-inject the dead rank's shard via restore_state), replay the
+    # killed batch, and compare against the fault-free reference
+    with tempfile.TemporaryDirectory() as td:
+        save_checkpoint(td, dec.restart_step, ck_tree)
+        like = jax.tree_util.tree_map(jnp.zeros_like, ck_tree)
+        got_ck, rstep = restore_checkpoint(td, None, like)
+    check("chaos.ckpt_roundtrip", rstep == dec.restart_step)
+
+    def recover(tk, tv, stt, qdata, qh, qt, qtr_, qhr, k2, v2, qv, qd):
+        bk = get_backend("bcl")
+        spec, _ = hm_fresh(bk)
+        st = hm_restore(spec, {"tkeys": tk, "tvals": tv, "status": stt})
+        qspec, _ = q.queue_create(bk, 512, SDS((), jnp.uint32))
+        qst = q_restore(qspec, {"data": qdata, "head": qh, "tail": qt,
+                                "tail_ready": qtr_, "head_ready": qhr})
+        st, ok = hm.insert(bk, spec, st, k2, v2, capacity=NLOC)
+        qst, _, qdrop = q.push(bk, qspec, qst, qv, qd, capacity=96)
+        ex, qex = hm_export(spec, st), q_export(qspec, qst)
+        return (ok, qdrop[None], ex["tkeys"], ex["tvals"], ex["status"],
+                qex["data"], qex["head"], qex["tail"])
+
+    def reference(k1, v1, k2, v2, qva, qda, qvb, qdb):
+        bk = get_backend("bcl")
+        spec, st = hm_fresh(bk)
+        st, _ = hm.insert(bk, spec, st, k1, v1, capacity=NLOC)
+        st, _ = hm.insert(bk, spec, st, k2, v2, capacity=NLOC)
+        qspec, qst = q.queue_create(bk, 512, SDS((), jnp.uint32))
+        qst, _, _ = q.push(bk, qspec, qst, qva, qda, capacity=96)
+        qst, _, _ = q.push(bk, qspec, qst, qvb, qdb, capacity=96)
+        ex, qex = hm_export(spec, st), q_export(qspec, qst)
+        return (ex["tkeys"], ex["tvals"], ex["status"],
+                qex["data"], qex["head"], qex["tail"])
+
+    rec = jax.jit(shard_map(recover, mesh=mesh, in_specs=(P("bcl"),) * 12,
+                            out_specs=(P("bcl"),) * 8))(
+        jnp.asarray(got_ck["hm"]["tkeys"]), jnp.asarray(got_ck["hm"]["tvals"]),
+        jnp.asarray(got_ck["hm"]["status"]), jnp.asarray(got_ck["q"]["data"]),
+        jnp.asarray(got_ck["q"]["head"]), jnp.asarray(got_ck["q"]["tail"]),
+        jnp.asarray(got_ck["q"]["tail_ready"]),
+        jnp.asarray(got_ck["q"]["head_ready"]),
+        b2k, b2v, qv2, qd2)
+    ref = jax.jit(shard_map(reference, mesh=mesh, in_specs=(P("bcl"),) * 8,
+                            out_specs=(P("bcl"),) * 6))(
+        b1k, b1v, b2k, b2v, qv1, qd1, qv2, qd2)
+    check("chaos.recovery_replay_clean", bool(np.asarray(rec[0]).all())
+          and int(np.asarray(rec[1]).sum()) == 0)
+    check("chaos.recovered_bit_identical",
+          all(np.array_equal(np.asarray(x), np.asarray(y))
+              for x, y in zip(rec[2:], ref)))
+
+    # ---- corruption: integrity + carry heals, no-retry loses loudly ----
+    cspec = FaultSpec(seed=7, corrupt=((0, 2, 5),))
+    lrng = np.random.default_rng(3)
+    lv = jnp.asarray(lrng.integers(0, 1 << 30, PROCS * 64), jnp.uint32)
+    ld = jnp.asarray(lrng.integers(0, PROCS, PROCS * 64), jnp.int32)
+
+    # no-retry arm: the corrupted segment's items are LOST, and the lost
+    # counter accounts for every one of them — never silent
+    ltr = FaultInjectingTransport(make_transport("dense"), cspec)
+
+    def corrupt_lose(pay, dst):
+        bk = get_backend("bcl")
+        res = route(bk, pay, dst, capacity=64, op_name="lose",
+                    transport=ltr, integrity=True)
+        return (res.valid.sum()[None], res.lost[None], res.dropped[None])
+
+    arr, lost, drp = jax.jit(shard_map(
+        corrupt_lose, mesh=mesh, in_specs=(P("bcl"),) * 2,
+        out_specs=(P("bcl"),) * 3))(lv[:, None], ld)
+    n_lost = int(np.asarray(lost)[0])
+    check("chaos.corrupt_lost_accounted",
+          n_lost > 0 and int(np.asarray(drp).sum()) == 0
+          and int(np.asarray(arr).sum()) + n_lost == PROCS * 64)
+
+    # heal arm: same fault under overflow="carry" — the unacked items
+    # ride the carry mask into a re-push and NOTHING is lost
+    htr = FaultInjectingTransport(make_transport("dense"), cspec)
+
+    def corrupt_heal(vals_, dst):
+        bk = get_backend("bcl")
+        qspec, qst = q.queue_create(bk, 1024, SDS((), jnp.uint32))
+        qst, _, _, carry = q.push(bk, qspec, qst, vals_, dst, capacity=64,
+                                  max_rounds=2, overflow="carry",
+                                  transport=htr, integrity=True)
+        qst, _, _, carry2 = q.push(bk, qspec, qst, vals_, dst, capacity=64,
+                                   valid=carry, overflow="carry",
+                                   transport=htr, integrity=True)
+        rows, got = q.local_drain(qspec, qst)
+        return carry.sum()[None], carry2.sum()[None], rows, got
+
+    c1, c2, hrows, hgot = jax.jit(shard_map(
+        corrupt_heal, mesh=mesh, in_specs=(P("bcl"),) * 2,
+        out_specs=(P("bcl"),) * 4))(lv, ld)
+    healed = np.asarray(hrows)[np.asarray(hgot)]
+    check("chaos.corrupt_carry_heals",
+          int(np.asarray(c1).sum()) > 0 and int(np.asarray(c2).sum()) == 0
+          and sorted(healed.tolist()) == sorted(np.asarray(lv).tolist()))
+
     print("ALL SPMD CHECKS PASSED")
 
 

@@ -116,6 +116,34 @@ def test_lm_moe_skew_arm_smoke(capsys):
     assert int(retry_row.split(",")[6]) > 1
 
 
+def test_micro_faults_arms_smoke(capsys):
+    """The --faults arms (DESIGN.md section 1.8): seeded corruption under
+    the integrity checksum loses items (never silently), the carry /
+    re-send heal recovers every one of them, the degraded-commit probe
+    reports its dead rank, and the rows carry the lost_bytes / recovered
+    / unreachable columns of the shared CSV schema."""
+    from benchmarks import micro_hashmap, micro_queue
+    from benchmarks.util import HEADER
+    ncols = len(HEADER.split(","))
+    micro_queue.run(smoke=True, faults=True)
+    micro_hashmap.run(smoke=True, faults=True)
+    rows = [ln for ln in capsys.readouterr().out.strip().splitlines()
+            if "," in ln]
+    for ln in rows:
+        assert len(ln.split(",")) == ncols, ln
+    fault_rows = [ln for ln in rows if "_faults" in ln.split(",")[0]]
+    assert len(fault_rows) == 2
+    for ln in fault_rows:
+        cols = ln.split(",")
+        # lost_bytes, recovered, unreachable: filled, and non-trivial —
+        # the injected corruption really invalidated wire bytes, the
+        # heal pass really recovered items, the probe really masked a
+        # dead rank
+        assert int(cols[9]) > 0, ln
+        assert int(cols[10]) > 0, ln
+        assert int(cols[11]) == 1, ln
+
+
 def test_micro_transport_arm_smoke(capsys):
     """The --transport hier arm: micro benchmarks run the exchange over
     the two-stage transport, rows are suffixed _hier, and the hops

@@ -169,6 +169,52 @@ class TestCheckpoint:
             restore_checkpoint(str(tmp_path), 1,
                                {"x": jnp.zeros(4), "y": jnp.zeros(2)})
 
+    def test_corrupt_leaf_detected(self, tmp_path):
+        from repro.checkpoint import CheckpointCorruptError
+        tree = {"x": jnp.arange(16)}
+        save_checkpoint(str(tmp_path), 1, tree)
+        # bit-rot the array archive in place
+        npz = os.path.join(str(tmp_path), "step_000000001", "arr_0.npz")
+        data = bytearray(open(npz, "rb").read())
+        data[len(data) // 2] ^= 0xFF
+        open(npz, "wb").write(bytes(data))
+        with pytest.raises(CheckpointCorruptError):
+            restore_checkpoint(str(tmp_path), 1, tree)
+
+    def test_torn_checkpoint_detected(self, tmp_path):
+        from repro.checkpoint import CheckpointCorruptError
+        tree = {"x": jnp.arange(16)}
+        save_checkpoint(str(tmp_path), 1, tree)
+        npz = os.path.join(str(tmp_path), "step_000000001", "arr_0.npz")
+        data = open(npz, "rb").read()
+        open(npz, "wb").write(data[:len(data) // 2])    # truncated write
+        with pytest.raises(CheckpointCorruptError):
+            restore_checkpoint(str(tmp_path), 1, tree)
+
+    def test_restore_latest_falls_back_to_intact(self, tmp_path):
+        """A corrupt newest checkpoint never bricks recovery: the manager
+        restores the newest step that passes its integrity check."""
+        from repro.checkpoint import CheckpointCorruptError, CheckpointManager
+        tree5 = {"x": jnp.full((8,), 5)}
+        tree9 = {"x": jnp.full((8,), 9)}
+        save_checkpoint(str(tmp_path), 5, tree5)
+        save_checkpoint(str(tmp_path), 9, tree9)
+        npz = os.path.join(str(tmp_path), "step_000000009", "arr_0.npz")
+        data = bytearray(open(npz, "rb").read())
+        data[len(data) // 2] ^= 0xFF
+        open(npz, "wb").write(bytes(data))
+        mgr = CheckpointManager(str(tmp_path))
+        got, step = mgr.restore_latest({"x": jnp.zeros(8, jnp.int32)})
+        assert step == 5
+        assert np.array_equal(np.asarray(got["x"]), np.full(8, 5))
+        # both corrupt -> the newest step's error surfaces
+        npz5 = os.path.join(str(tmp_path), "step_000000005", "arr_0.npz")
+        data = bytearray(open(npz5, "rb").read())
+        data[len(data) // 2] ^= 0xFF
+        open(npz5, "wb").write(bytes(data))
+        with pytest.raises(CheckpointCorruptError):
+            mgr.restore_latest({"x": jnp.zeros(8, jnp.int32)})
+
 
 class TestFaultTolerance:
     def test_failure_declared_after_timeout(self):
@@ -195,6 +241,30 @@ class TestFaultTolerance:
         dec = ft.tick(now=3.0, last_ckpt_step=7)
         assert dec.failed_nodes == [2]
         assert dec.promoted_spares == [3]
+        assert ft.nodes[3].health == NodeHealth.HEALTHY
+
+    def test_promoted_spare_survives_next_tick(self):
+        """Regression: promotion must stamp the spare's heartbeat.
+
+        A spare has never heartbeated (last_heartbeat=0.0); if promotion
+        leaves that stamp, the very next tick sees a huge gap and
+        instantly re-fails the node it just promoted."""
+        ft = FaultToleranceManager(n_nodes=4, n_spares=1,
+                                   heartbeat_interval=1.0, timeout_beats=2)
+        for n in range(3):
+            ft.heartbeat(n, now=0.0)
+        ft.heartbeat(0, now=3.0)
+        ft.heartbeat(1, now=3.0)
+        dec = ft.tick(now=3.0, last_ckpt_step=7)
+        assert dec.promoted_spares == [3]
+        assert ft.nodes[3].last_heartbeat == 3.0
+        assert ft.nodes[3].missed == 0
+        # the promoted node keeps heartbeating like everyone else
+        ft.heartbeat(0, now=3.5)
+        ft.heartbeat(1, now=3.5)
+        ft.heartbeat(3, now=3.5)
+        dec2 = ft.tick(now=3.6, last_ckpt_step=8)
+        assert dec2.action == "none"
         assert ft.nodes[3].health == NodeHealth.HEALTHY
 
     def test_suspect_recovers(self):
@@ -226,6 +296,18 @@ class TestStraggler:
                 sd.observe(n, 1.0 + rng.random() * 0.01)
         assert sd.stragglers() == []
 
+    def test_cold_start_safe(self):
+        """Regression: mitigation/_persistent on a fresh detector (no
+        observations at all) must not crash on the empty EWMA list."""
+        sd = StragglerDetector(n_nodes=4)
+        assert sd.stragglers() == []
+        assert sd._persistent(0) is False       # empty EWMA: safe default
+        assert sd.mitigation(0) == "rebalance_data"
+        # one lone observation: still no median crash, no straggler
+        sd.observe(2, 1.0)
+        assert sd.stragglers() == []
+        assert sd.mitigation(2) in ("rebalance_data", "swap_at_checkpoint")
+
 
 class TestElastic:
     def test_plan_preserves_model_axis(self):
@@ -245,3 +327,41 @@ class TestElastic:
     def test_insufficient_devices_raises(self):
         with pytest.raises(ValueError):
             plan_remesh(("data", "model"), (16, 16), available_devices=8)
+
+    def test_non_divisible_survivors(self):
+        """13 survivors of a (4,4) mesh: only 3 data rows of 4 devices
+        fit, one survivor is dropped, per-shard batch grows 4/3."""
+        plan = plan_remesh(("data", "model"), (4, 4), available_devices=13)
+        assert plan.new_shape == (3, 4)
+        assert plan.dropped_devices == 1
+        assert abs(plan.batch_per_shard_scale - 4 / 3) < 1e-9
+        # rectangular invariant: the plan uses exactly its device grid
+        assert int(np.prod(plan.new_shape)) + plan.dropped_devices == 13
+
+    def test_no_model_axis_mesh(self):
+        """Without a 'model' axis the LAST axis is preserved instead."""
+        plan = plan_remesh(("replica", "data"), (4, 2),
+                           available_devices=6)
+        assert plan.new_shape[-1] == 2            # preserved axis intact
+        assert int(np.prod(plan.new_shape)) <= 6
+        assert int(np.prod(plan.new_shape)) + plan.dropped_devices == 6
+        assert plan.batch_per_shard_scale == pytest.approx(4 / 3)
+
+    def test_shrink_to_one_data_row(self):
+        """Exactly model-axis devices left: one data row survives and
+        every shard carries the whole former data dimension."""
+        plan = plan_remesh(("data", "model"), (8, 4), available_devices=4)
+        assert plan.new_shape == (1, 4)
+        assert plan.dropped_devices == 0
+        assert plan.batch_per_shard_scale == pytest.approx(8.0)
+
+    def test_rectangular_invariant_sweep(self):
+        """new_shape is always rectangular and never exceeds the
+        survivors, across a survivor-count sweep."""
+        for avail in range(4, 33):
+            plan = plan_remesh(("data", "model"), (8, 4),
+                               available_devices=avail)
+            used = int(np.prod(plan.new_shape))
+            assert plan.new_shape[1] == 4
+            assert used + plan.dropped_devices == avail
+            assert used <= avail
