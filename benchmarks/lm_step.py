@@ -11,6 +11,11 @@ experts — the hottest expert histogram zipf routing can produce):
   lm_moe_skew_retry   ``exchange.suggest_rounds`` picks the dispatch
                       round count from the observed expert_load
                       trajectory; every token is served
+
+The ``--async`` arm (DESIGN.md section 1.9) runs the reduced MoE step
+with sync vs split-phase dispatch (``cfg.moe_async_dispatch``): the
+async row's overlap_launches column counts the deferred dispatch
+launches and every other cost column matches the sync row.
 """
 
 from __future__ import annotations
@@ -74,13 +79,58 @@ def _moe_skew_arm(results: dict, smoke: bool):
     arm(suggest_rounds(hot_loads, uniform_cap), "lm_moe_skew_retry")
 
 
-def run(smoke: bool = False, skew: str = "none"):
+def _moe_async_arm(results: dict, smoke: bool):
+    """Split-phase MoE dispatch (DESIGN.md section 1.9): the sync and
+    async arms run the identical reduced MoE step; the async row's
+    overlap_launches column counts the dispatch launches whose
+    completion was deferred past the overlap window, and every other
+    cost column matches the sync row exactly (the attribution rule:
+    deferred launches are charged once, at the wait)."""
+    from repro.core import costs
+    from repro.models import moe as moe_mod
+
+    b, t = (2, 16) if smoke else (4, 64)
+    cfg = reduced(get_config("arctic-480b"), d_model=32, vocab=256)
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, n_experts=8, top_k=2,
+                                     expert_d_ff=16))
+    mesh = make_test_mesh(1, 1)
+    axes = Axes.from_mesh(mesh)
+    params = moe_mod.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, t, cfg.d_model))
+    n_tok = b * t
+
+    def arm(split, tag):
+        cfg_a = dataclasses.replace(cfg, moe_async_dispatch=split)
+
+        @jax.jit
+        def step(params, x):
+            y, _, _ = moe_mod.moe_apply(params, x, cfg_a, mesh, axes)
+            return y
+
+        with costs.recording() as log:
+            jax.block_until_ready(step(params, x))
+        dt = time_fn(step, params, x, warmup=1, iters=3)
+        results[tag] = dt / n_tok * 1e6
+        c = log.total()
+        results[tag + "_overlap"] = c.overlap_launches
+        emit(tag, results[tag],
+             "split-phase dispatch" if split else "sync dispatch baseline",
+             cost=c, n_ops=n_tok)
+
+    arm(False, "lm_moe_dispatch_sync")
+    arm(True, "lm_moe_dispatch_async")
+
+
+def run(smoke: bool = False, skew: str = "none", async_: bool = False):
     mesh = make_test_mesh(1, 1)
     axes = Axes.from_mesh(mesh)
     rng = jax.random.PRNGKey(0)
     results = {}
     if skew == "zipf":
         _moe_skew_arm(results, smoke)
+    if async_:
+        _moe_async_arm(results, smoke)
     archs = ("stablelm-1.6b",) if smoke else \
         ("stablelm-1.6b", "arctic-480b", "rwkv6-1.6b")
     for arch in archs:

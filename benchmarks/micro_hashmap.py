@@ -16,6 +16,11 @@ at mean-load wire capacity):
   insert_skew_drop    drop-mode: overflowed inserts fail (counted)
   insert_skew_retry   carryover retry rounds: every insert lands
 
+The ``--async`` arm adds the split-phase pair (DESIGN.md section 1.9):
+  find_insert_sync    one-shot commit baseline
+  find_insert_async   commit_async/finish: identical results and cost
+                      columns, plus the overlap_launches observable
+
 The ``--faults`` arm (DESIGN.md section 1.8) inserts through a
 FaultInjectingTransport with a seeded corrupt spec under the integrity
 checksum, re-sends the unacked inserts over a clean wire, and probes a
@@ -47,7 +52,8 @@ WAVES = 8                      # fine-grained ops issue per-wave
 
 
 def run(smoke: bool = False, fused: bool = False, skew: str = "none",
-        transport: str = "dense", faults: bool = False):
+        transport: str = "dense", faults: bool = False,
+        async_: bool = False):
     tr, sfx = resolve_transport(transport)
     n_ops = 1 << 8 if smoke else N_OPS
     table = 1 << 11 if smoke else TABLE
@@ -159,6 +165,41 @@ def run(smoke: bool = False, fused: bool = False, skew: str = "none",
             results[tag] = time_fn(fn, st_f, keys, keys2, keys2 * 5 + 1) \
                 / (2 * n_ops) * 1e6
 
+    # --- async arm: split-phase find_insert (DESIGN.md section 1.9) ---
+    if async_:
+        keys3 = jnp.asarray(rng.permutation(1 << 22)[2 * n_ops:3 * n_ops],
+                            jnp.uint32)
+
+        def fia(split, tag):
+            spec_a, st_a = fresh()
+            st_a, _ = hm.insert(bk, spec_a, st_a, keys, vals, capacity=n_ops)
+
+            @jax.jit
+            def rounds(st, fk, ik, iv):
+                for i in range(WAVES):
+                    sl = slice(i * wave, (i + 1) * wave)
+                    if split:
+                        pend = hm.find_insert(
+                            bk, spec_a, st, fk[sl], ik[sl], iv[sl],
+                            capacity=wave,
+                            promise=ConProm.HashMap.find_insert,
+                            transport=tr, async_=True)
+                        st, _, _, _ = pend.finish()
+                    else:
+                        st, _, _, _ = hm.find_insert(
+                            bk, spec_a, st, fk[sl], ik[sl], iv[sl],
+                            capacity=wave,
+                            promise=ConProm.HashMap.find_insert,
+                            transport=tr)
+                return st
+
+            obs[tag] = trace_costs(rounds, st_a, keys, keys3, keys3 * 5 + 1)
+            results[tag] = time_fn(rounds, st_a, keys, keys3, keys3 * 5 + 1) \
+                / (2 * n_ops) * 1e6
+
+        fia(False, "hashmap_find_insert_sync")
+        fia(True, "hashmap_find_insert_async")
+
     # --- skew arm: mean-load capacity, drop-mode vs carryover retries ---
     if skew == "zipf":
         from benchmarks.util import (bench_skew_arm, mean_load_cap,
@@ -251,6 +292,14 @@ def run(smoke: bool = False, fused: bool = False, skew: str = "none",
         emit("hashmap_find_insert_fine" + sfx, results["hashmap_find_insert_fine"],
              "FINE oracle: 4 collectives",
              cost=obs["hashmap_find_insert_fine"], n_ops=2 * n_ops)
+    if async_:
+        emit("hashmap_find_insert_sync" + sfx,
+             results["hashmap_find_insert_sync"], "one-shot commit",
+             cost=obs["hashmap_find_insert_sync"], n_ops=2 * n_ops)
+        emit("hashmap_find_insert_async" + sfx,
+             results["hashmap_find_insert_async"],
+             "split-phase commit_async/finish",
+             cost=obs["hashmap_find_insert_async"], n_ops=2 * n_ops)
     return results
 
 

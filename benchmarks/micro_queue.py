@@ -18,6 +18,12 @@ bucket the paper's aggregation can produce):
   fq_push_skew_retry            carryover retry rounds: zero drops at
                                 the same per-round capacity
 
+The ``--async`` arm adds the split-phase pair (DESIGN.md section 1.9):
+  cq_push_pop_sync              one-shot commit baseline
+  cq_push_pop_async             commit_async/finish: identical results
+                                and cost columns, plus the
+                                overlap_launches observable
+
 The ``--faults`` arm (DESIGN.md section 1.8) pushes through a
 FaultInjectingTransport with a seeded corrupt spec under the integrity
 checksum, heals the invalidated arrivals with a carry re-push, and
@@ -45,7 +51,8 @@ WAVES = 8
 
 
 def run(smoke: bool = False, fused: bool = False, skew: str = "none",
-        transport: str = "dense", faults: bool = False):
+        transport: str = "dense", faults: bool = False,
+        async_: bool = False):
     tr, sfx = resolve_transport(transport)
     n_ops = 1 << 8 if smoke else N_OPS
     bk = get_backend(None)
@@ -139,6 +146,38 @@ def run(smoke: bool = False, fused: bool = False, skew: str = "none",
         pp(ConProm.CircularQueue.push_pop, "cq_push_pop_fused")
         pp(ConProm.CircularQueue.push_pop | Promise.FINE, "cq_push_pop_fine")
 
+    # --- async arm: split-phase push_pop (DESIGN.md section 1.9) ---
+    if async_:
+        def ppa(split, tag):
+            spec, st0 = q.queue_create(bk, n_ops * 2, SDS((), jnp.uint32),
+                                       circular=True)
+
+            @jax.jit
+            def waves(st, vals, dest):
+                outs = []
+                for i in range(WAVES):
+                    sl = slice(i * wave, (i + 1) * wave)
+                    if split:
+                        pend = q.push_pop(
+                            bk, spec, st, vals[sl], dest[sl], wave, wave, 0,
+                            promise=ConProm.CircularQueue.push_pop,
+                            transport=tr, async_=True)
+                        st, _, _, out, _ = pend.finish()
+                    else:
+                        st, _, _, out, _ = q.push_pop(
+                            bk, spec, st, vals[sl], dest[sl], wave, wave, 0,
+                            promise=ConProm.CircularQueue.push_pop,
+                            transport=tr)
+                    outs.append(out)
+                return st, outs
+
+            obs[tag] = trace_costs(waves, st0, vals, dest)
+            results[tag] = time_fn(waves, st0, vals, dest) \
+                / (2 * n_ops) * 1e6
+
+        ppa(False, "cq_push_pop_sync")
+        ppa(True, "cq_push_pop_async")
+
     # --- skew arm: mean-load capacity, drop-mode vs carryover retries ---
     if skew == "zipf":
         from benchmarks.util import (bench_skew_arm, mean_load_cap,
@@ -221,6 +260,13 @@ def run(smoke: bool = False, fused: bool = False, skew: str = "none",
         emit("cq_push_pop_fine" + sfx, results["cq_push_pop_fine"],
              "FINE oracle: 3 collectives", cost=obs["cq_push_pop_fine"],
              n_ops=2 * n_ops)
+    if async_:
+        emit("cq_push_pop_sync" + sfx, results["cq_push_pop_sync"],
+             "one-shot commit", cost=obs["cq_push_pop_sync"],
+             n_ops=2 * n_ops)
+        emit("cq_push_pop_async" + sfx, results["cq_push_pop_async"],
+             "split-phase commit_async/finish",
+             cost=obs["cq_push_pop_async"], n_ops=2 * n_ops)
     return results
 
 

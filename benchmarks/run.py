@@ -34,6 +34,12 @@ the modules that have them: a seeded FaultSpec corrupts wire segments
 under the integrity checksum, the carry retry heals the loss, and a
 degraded commit masks a dead rank — the lost_bytes / recovered /
 unreachable columns track the robustness observables over time.
+
+``--async`` adds the split-phase arms (DESIGN.md section 1.9) to the
+modules that have them: the same ops issued via commit_async, completed
+via finish after an overlap window — the overlap_launches column counts
+the deferred launches while every other cost column matches the sync
+row (the charge-once-at-wait attribution rule).
 """
 
 from __future__ import annotations
@@ -58,6 +64,7 @@ def main() -> None:
     smoke = "--smoke" in args
     fused = "--fused" in args
     faults = "--faults" in args
+    async_ = "--async" in args
     skew = "none"
     if "--skew" in args:
         i = args.index("--skew")
@@ -73,7 +80,7 @@ def main() -> None:
         if transport not in ("dense", "hier"):
             sys.exit(f"--transport takes dense or hier, got {transport!r}")
         del args[i:i + 2]
-    args = [a for a in args if a not in ("--smoke", "--fused", "--faults")]
+    args = [a for a in args if a not in ("--smoke", "--fused", "--faults", "--async")]
     only = args[0] if args else None
     print(HEADER)
     for name, mod in mods.items():
@@ -91,15 +98,17 @@ def main() -> None:
             kw["transport"] = transport
         if faults and "faults" in params:
             kw["faults"] = True
+        if async_ and "async_" in params:
+            kw["async_"] = True
         try:
             if smoke and "smoke" not in params:
-                print(f"{name},SKIPPED,,,,,,,,,,,no smoke mode yet")
+                print(f"{name},SKIPPED,,,,,,,,,,,,no smoke mode yet")
             elif transport != "dense" and "transport" not in params:
-                print(f"{name},SKIPPED,,,,,,,,,,,no transport arm yet")
+                print(f"{name},SKIPPED,,,,,,,,,,,,no transport arm yet")
             else:
                 mod.run(**kw)
         except Exception as e:  # keep the harness going; report the row
-            print(f"{name},ERROR,,,,,,,,,,,{type(e).__name__}: {e}")
+            print(f"{name},ERROR,,,,,,,,,,,,{type(e).__name__}: {e}")
 
 
 if __name__ == "__main__":

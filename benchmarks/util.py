@@ -43,7 +43,7 @@ def trace_costs(fn, *args, **kw):
 #: ``--transport`` arms' extra stage shows up next to wall time.
 HEADER = ("name,us_per_call,collectives,bytes_moved,rounds,"
           "rounds_per_op,retry_rounds,dropped,hops,"
-          "lost_bytes,recovered,unreachable,derived")
+          "lost_bytes,recovered,unreachable,overlap_launches,derived")
 
 
 def resolve_transport(name: str):
@@ -142,6 +142,9 @@ def emit(name: str, us_per_call: float, derived: str = "",
     injected faults, items healed by the integrity+carry retry, and dead
     destination ranks masked by a degraded commit; cost rows default the
     lost_bytes/unreachable columns from the recorded Cost fields.
+    ``overlap_launches`` is the ``--async`` arms' observable (DESIGN.md
+    section 1.9): collective launches issued split-phase whose
+    completion was deferred past an overlap window.
     """
     rr = "" if retry_rounds is None else str(retry_rounds)
     dr = "" if dropped is None else str(dropped)
@@ -150,7 +153,7 @@ def emit(name: str, us_per_call: float, derived: str = "",
     un = "" if unreachable is None else str(unreachable)
     if cost is None:
         print(f"{name},{us_per_call:.2f},,,,,{rr},{dr},,"
-              f"{lb},{rc},{un},{derived}")
+              f"{lb},{rc},{un},,{derived}")
         return
     if lost_bytes is None:
         lb = str(cost.lost_bytes)
@@ -159,4 +162,4 @@ def emit(name: str, us_per_call: float, derived: str = "",
     rpo = f"{cost.rounds / n_ops:.6f}" if n_ops else ""
     print(f"{name},{us_per_call:.2f},{cost.collectives},"
           f"{cost.bytes_moved},{cost.rounds},{rpo},{rr},{dr},"
-          f"{cost.hops},{lb},{rc},{un},{derived}")
+          f"{cost.hops},{lb},{rc},{un},{cost.overlap_launches},{derived}")

@@ -116,6 +116,10 @@ class ArchConfig:
     window_cache: bool = False       # cap 'l'-layer decode caches at window
     moe_payload_dtype: str = "float32"   # bfloat16 halves exchange bytes
     moe_dedup_dispatch: bool = False     # one copy per distinct owner rank
+    moe_async_dispatch: bool = False     # split-phase dispatch: issue the
+                                         # exchange, overlap the always-on
+                                         # (shared/dense) paths, then finish
+                                         # (DESIGN.md section 1.9)
     attn_q_block: int = 2048
     attn_k_block: int = 1024
     xent_chunk: int = 512

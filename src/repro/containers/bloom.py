@@ -26,7 +26,7 @@ import jax.numpy as jnp
 
 from repro.core import costs
 from repro.core.backend import Backend
-from repro.core.exchange import ExchangePlan
+from repro.core.exchange import ExchangePlan, PendingResult
 from repro.core.hashing import double_hash, hash_lanes
 from repro.core.object_container import Packer, packer_for
 from repro.core.promises import Promise, fine_grained, validate
@@ -133,7 +133,8 @@ def insert_find(backend: Backend, spec: BloomSpec, state: BloomState,
                 find_valid: jax.Array | None = None,
                 promise: Promise = Promise.NONE,
                 max_rounds: int = 1,
-                transport=None):
+                transport=None,
+                async_: bool = False):
     """Fused insert + membership query sharing ONE exchange round trip.
 
     The insert is serialized before the find, so the query observes this
@@ -143,16 +144,23 @@ def insert_find(backend: Backend, spec: BloomSpec, state: BloomState,
     bytes (ragged segments, DESIGN.md section 1.5 — the 1-bit answers
     ride 1-word reply rows).  Returns
     ``(state, already_present, present)``.
+
+    ``async_=True`` issues the plan split-phase (DESIGN.md section 1.9)
+    and instead returns a :class:`~repro.core.PendingResult` whose
+    ``finish()`` yields the same triple.
     """
     validate(promise)
     if fine_grained(promise):
-        state, already = insert(backend, spec, state, ins_items,
-                                capacity_ins, valid=ins_valid,
-                                max_rounds=max_rounds, transport=transport)
-        present = find(backend, spec, state, find_items, capacity_find,
-                       valid=find_valid, max_rounds=max_rounds,
-                       transport=transport)
-        return state, already, present
+        def _fine():
+            st, already = insert(backend, spec, state, ins_items,
+                                 capacity_ins, valid=ins_valid,
+                                 max_rounds=max_rounds, transport=transport)
+            present = find(backend, spec, st, find_items, capacity_find,
+                           valid=find_valid, max_rounds=max_rounds,
+                           transport=transport)
+            return st, already, present
+        # split-phase FINE stays the sequential oracle: run eagerly
+        return PendingResult(lambda s=_fine(): s) if async_ else _fine()
 
     ni, body_i, owner_i, ins_valid = _words_of(spec, ins_items, ins_valid)
     nf, body_f, owner_f, find_valid = _words_of(spec, find_items, find_valid)
@@ -161,8 +169,19 @@ def insert_find(backend: Backend, spec: BloomSpec, state: BloomState,
                   valid=ins_valid, op_name="bloom.insert")
     hf = plan.add(body_f, owner_f, capacity_find, reply_lanes=1,
                   valid=find_valid, op_name="bloom.find")
+    if async_:
+        pend = plan.commit_async(backend, impl=spec.impl,
+                                 max_rounds=max_rounds, transport=transport)
+        return PendingResult(lambda: _insert_find_complete(
+            backend, spec, state, pend.finish(backend), hi, hf, nf))
     c = plan.commit(backend, impl=spec.impl, max_rounds=max_rounds,
                     transport=transport)
+    return _insert_find_complete(backend, spec, state, c, hi, hf, nf)
+
+
+def _insert_find_complete(backend, spec, state, c, hi, hf, nf):
+    """Owner-side work + reply round of :func:`insert_find` (both the
+    synchronous and the split-phase path complete through here)."""
     vi, vf = c.view(hi), c.view(hf)
 
     rb_i = jnp.where(vi.valid, vi.payload[:, 0].astype(_I32), 0)

@@ -37,7 +37,7 @@ import jax.numpy as jnp
 
 from repro.core import costs
 from repro.core.backend import Backend
-from repro.core.exchange import ExchangePlan
+from repro.core.exchange import ExchangePlan, PendingResult
 from repro.core.hashing import hash_lanes
 from repro.core.object_container import Packer, packer_for
 from repro.core.promises import (Promise, find_only, fine_grained,
@@ -360,7 +360,8 @@ def find_insert(backend: Backend, spec: HashMapSpec, state: HashMapState,
                 max_rounds: int = 1,
                 transport=None,
                 dead_ranks=None,
-                integrity: bool = False):
+                integrity: bool = False,
+                async_: bool = False):
     """Fused find + insert sharing ONE exchange round trip.
 
     Under ``ConProm.HashMap.find_insert`` the two batches are promised
@@ -377,6 +378,12 @@ def find_insert(backend: Backend, spec: HashMapSpec, state: HashMapState,
 
     Returns ``(state, values, found, ins_ok)`` — find results aligned
     with ``find_keys``, insert successes aligned with ``ins_keys``.
+
+    ``async_=True`` issues the plan split-phase (DESIGN.md section 1.9)
+    and instead returns a :class:`~repro.core.PendingResult` whose
+    ``finish()`` yields the same 4-tuple: the request wire is in flight
+    when the call returns, and everything the caller traces before
+    ``finish()`` overlaps with it.
     """
     validate(promise)
     # per-op atomicity gates mirror the standalone ops exactly, so the
@@ -384,7 +391,7 @@ def find_insert(backend: Backend, spec: HashMapSpec, state: HashMapState,
     # status-word traffic for ANY promise, not just find_insert
     find_atomic = not find_only(promise)
     ins_atomic = fully_atomic_hashmap(promise)
-    if fine_grained(promise):
+    if fine_grained(promise) and not async_:
         state, vals, found = find(backend, spec, state, find_keys, capacity,
                                   promise=promise, valid=find_valid,
                                   attempts=1, max_rounds=max_rounds,
@@ -396,6 +403,16 @@ def find_insert(backend: Backend, spec: HashMapSpec, state: HashMapState,
                            max_rounds=max_rounds, transport=transport,
                            dead_ranks=dead_ranks, integrity=integrity)
         return state, vals, found, ok
+    if fine_grained(promise):
+        # split-phase FINE stays the sequential oracle: commit eagerly,
+        # hand completion back through the same future type
+        sync = find_insert(backend, spec, state, find_keys, ins_keys,
+                           ins_vals, capacity, promise=promise,
+                           find_valid=find_valid, ins_valid=ins_valid,
+                           mode=mode, max_rounds=max_rounds,
+                           transport=transport, dead_ranks=dead_ranks,
+                           integrity=integrity)
+        return PendingResult(lambda: sync)
 
     kf = spec.key_packer.pack(find_keys)
     ki = spec.key_packer.pack(ins_keys)
@@ -417,9 +434,26 @@ def find_insert(backend: Backend, spec: HashMapSpec, state: HashMapState,
                                   axis=1),
                   owner_i, capacity, reply_lanes=1,
                   valid=ins_valid, op_name="hashmap.insert")
+    if async_:
+        pend = plan.commit_async(backend, impl=spec.impl,
+                                 max_rounds=max_rounds, transport=transport,
+                                 dead_ranks=dead_ranks, integrity=integrity)
+        return PendingResult(lambda: _find_insert_complete(
+            backend, spec, state, pend.finish(backend), hf, hi, lk,
+            find_valid, ins_valid, mode, find_atomic, ins_atomic, nf, ni))
     c = plan.commit(backend, impl=spec.impl, max_rounds=max_rounds,
                     transport=transport, dead_ranks=dead_ranks,
                     integrity=integrity)
+    return _find_insert_complete(backend, spec, state, c, hf, hi, lk,
+                                 find_valid, ins_valid, mode,
+                                 find_atomic, ins_atomic, nf, ni)
+
+
+def _find_insert_complete(backend, spec, state, c, hf, hi, lk,
+                          find_valid, ins_valid, mode,
+                          find_atomic, ins_atomic, nf, ni):
+    """Owner-side work + reply round of :func:`find_insert` (both the
+    synchronous and the split-phase path complete through here)."""
     vf, vw = c.view(hf), c.view(hi)
 
     # find against the pre-insert table (the chosen serialization)

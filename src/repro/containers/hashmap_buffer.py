@@ -29,7 +29,8 @@ import jax.numpy as jnp
 
 from repro.core import costs
 from repro.core.backend import Backend
-from repro.core.exchange import CommittedPlan, ExchangePlan
+from repro.core.exchange import (CommittedPlan, ExchangePlan,
+                                 PendingResult)
 from repro.core.promises import ConProm, Promise
 from repro.containers import hashmap as hm
 from repro.containers import queue as q
@@ -199,7 +200,7 @@ def spill_absorb(outs: tuple, spec: HashMapBufferSpec,
 def spill(backend: Backend, spec: HashMapBufferSpec,
           state: HashMapBufferState, capacity: int,
           max_rounds: int = 1, overflow: str = "drop",
-          transport=None):
+          transport=None, async_: bool = False):
     """Push staged items to the owners' FastQueues (paper: buffer full).
 
     Eager wrapper: a fresh single-flow plan around
@@ -207,24 +208,35 @@ def spill(backend: Backend, spec: HashMapBufferSpec,
     the flow declares the ring reply, so the spill is lossless against
     BOTH wire overflow and ring-full rejects (the drop count is then
     zero — everything unlanded is re-staged in the returned buffer).
+
+    ``async_=True`` issues the plan split-phase (DESIGN.md section 1.9)
+    and instead returns a :class:`~repro.core.PendingResult` whose
+    ``finish()`` yields the same ``(state, dropped)``.
     """
     plan = ExchangePlan(name="queue.push")
     carrying = overflow == "carry"
     h = spill_flow(plan, spec, state, capacity, ring_reply=carrying)
-    committed = plan.commit(backend, max_rounds=max_rounds,
-                            overflow=overflow, transport=transport)
-    state, dropped = spill_apply(backend, committed, h, spec, state,
-                                 overflow=overflow)
-    if carrying:
-        state = spill_absorb(committed.finish(backend)[h], spec, state)
-    return state, dropped
+
+    def complete(committed):
+        st, dropped = spill_apply(backend, committed, h, spec, state,
+                                  overflow=overflow)
+        if carrying:
+            st = spill_absorb(committed.finish(backend)[h], spec, st)
+        return st, dropped
+
+    if async_:
+        pend = plan.commit_async(backend, max_rounds=max_rounds,
+                                 overflow=overflow, transport=transport)
+        return PendingResult(lambda: complete(pend.finish(backend)))
+    return complete(plan.commit(backend, max_rounds=max_rounds,
+                                overflow=overflow, transport=transport))
 
 
 def flush(backend: Backend, spec: HashMapBufferSpec,
           state: HashMapBufferState, capacity: int,
           mode: int = kops.MODE_SET,
           max_rounds: int = 1, overflow: str = "drop",
-          transport=None):
+          transport=None, async_: bool = False):
     """Spill + drain own queue with fast local inserts (paper flush()).
 
     Returns (state, dropped) — dropped counts route/ring/table overflow.
@@ -234,10 +246,28 @@ def flush(backend: Backend, spec: HashMapBufferSpec,
     so repeated flushes are lossless as long as the table keeps up;
     ``max_rounds`` shrinks the number of cycles needed by retrying
     inside the spill itself.
+
+    ``async_=True`` runs the SPILL wire split-phase: the caller's own
+    compute overlaps the spill exchange (the drain + local insert stay
+    ordered after the wire — they consume what the spill delivers), and
+    the returned :class:`~repro.core.PendingResult` finishes to the
+    same ``(state, dropped)``.
     """
-    state, dropped = spill(backend, spec, state, capacity,
-                           max_rounds=max_rounds, overflow=overflow,
-                           transport=transport)
+    if async_:
+        pend = spill(backend, spec, state, capacity,
+                     max_rounds=max_rounds, overflow=overflow,
+                     transport=transport, async_=True)
+        return PendingResult(lambda: _flush_complete(
+            backend, spec, *pend.finish(), mode=mode))
+    st, dropped = spill(backend, spec, state, capacity,
+                        max_rounds=max_rounds, overflow=overflow,
+                        transport=transport)
+    return _flush_complete(backend, spec, st, dropped, mode=mode)
+
+
+def _flush_complete(backend, spec, state, dropped, mode):
+    """Drain + local-insert half of :func:`flush` (both the synchronous
+    and the split-phase path complete through here)."""
     backend.barrier()
 
     rows, got = q.local_drain(spec.queue_spec, state.queue)

@@ -33,7 +33,7 @@ import jax.numpy as jnp
 
 from repro.core import costs
 from repro.core.backend import Backend
-from repro.core.exchange import ExchangePlan, route
+from repro.core.exchange import ExchangePlan, PendingResult, route
 from repro.core.object_container import Packer, packer_for
 from repro.core.promises import (Promise, fine_grained, fully_atomic_queue,
                                  validate)
@@ -271,7 +271,8 @@ def push_pop(backend: Backend, spec: QueueSpec, state: QueueState,
              overflow: str = "drop",
              transport=None,
              dead_ranks=None,
-             integrity: bool = False):
+             integrity: bool = False,
+             async_: bool = False):
     """Fused push + pop sharing ONE exchange round trip.
 
     Under ``ConProm.CircularQueue.push_pop`` the two ops are promised
@@ -293,12 +294,26 @@ def push_pop(backend: Backend, spec: QueueSpec, state: QueueState,
     to ``(state, pushed, dropped=0, out_values, got, carry)`` where
     ``carry`` marks every valid item that never shipped or was refused
     by a full ring.
+
+    ``async_=True`` issues the plan split-phase (DESIGN.md section 1.9)
+    and instead returns a :class:`~repro.core.PendingResult` whose
+    ``finish()`` yields the same tuple — the request wire overlaps with
+    whatever the caller traces before finishing.
     """
     validate(promise)
     if overflow not in ("drop", "carry"):
         raise ValueError(
             f'queue.push_pop overflow must be "drop" or "carry", '
             f"got {overflow!r}")
+    if async_ and fine_grained(promise):
+        # split-phase FINE stays the sequential oracle: run eagerly,
+        # hand completion back through the same future type
+        sync = push_pop(backend, spec, state, values, dest, capacity, n,
+                        src, valid=valid, promise=promise,
+                        max_rounds=max_rounds, overflow=overflow,
+                        transport=transport, dead_ranks=dead_ranks,
+                        integrity=integrity)
+        return PendingResult(lambda: sync)
     if fine_grained(promise):
         if overflow == "carry":
             state, pushed, dropped, carry = push(
@@ -334,8 +349,23 @@ def push_pop(backend: Backend, spec: QueueSpec, state: QueueState,
                   reply_lanes=1 if carrying else 0, op_name="queue.push")
     hq = plan.add(jnp.zeros((n, 1), _U32), src, n,
                   reply_lanes=spec.lanes + 1, op_name="queue.pop")
+    if async_:
+        pend = plan.commit_async(backend, max_rounds=max_rounds,
+                                 transport=transport, dead_ranks=dead_ranks,
+                                 integrity=integrity)
+        return PendingResult(lambda: _push_pop_complete(
+            backend, spec, state, pend.finish(backend), hp, hq, valid,
+            promise, carrying, nv, n))
     c = plan.commit(backend, max_rounds=max_rounds, transport=transport,
                     dead_ranks=dead_ranks, integrity=integrity)
+    return _push_pop_complete(backend, spec, state, c, hp, hq, valid,
+                              promise, carrying, nv, n)
+
+
+def _push_pop_complete(backend, spec, state, c, hp, hq, valid, promise,
+                       carrying, nv, n):
+    """Owner-side work + reply round of :func:`push_pop` (both the
+    synchronous and the split-phase path complete through here)."""
     vp, vq = c.view(hp), c.view(hq)
 
     state, pushed, full_drop, accept = _append(spec, state, vp.payload,

@@ -18,8 +18,8 @@ from repro.core.backend import Backend, SerialBackend, SpmdBackend, get_backend
 from repro.core.promises import ConProm, Promise
 from repro.core.pointers import GlobalPointer
 from repro.core.exchange import (ExchangeOverflowError, ExchangePlan,
-                                 RouteResult, carry_mask, reply, route,
-                                 suggest_rounds)
+                                 PendingPlan, PendingResult, RouteResult,
+                                 carry_mask, reply, route, suggest_rounds)
 from repro.core.transport import (DenseTransport, HierarchicalTransport,
                                   Transport, make_transport)
 from repro.core.faults import FaultInjectingTransport, FaultSpec
@@ -35,6 +35,8 @@ __all__ = [
     "GlobalPointer",
     "ExchangePlan",
     "ExchangeOverflowError",
+    "PendingPlan",
+    "PendingResult",
     "carry_mask",
     "route",
     "reply",

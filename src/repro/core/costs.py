@@ -50,6 +50,11 @@ class Cost:
     #                       to be dead at commit time (degraded commits,
     #                       DESIGN.md section 1.8); static upper bound
     unreachable: int = 0  # dead destination ranks masked at admission
+    overlap_launches: int = 0  # collective launches issued split-phase
+    #                       (commit_async start) whose completion was
+    #                       deferred to finish(); counted once, at wait
+    #                       time, alongside the launch's normal
+    #                       collectives/hops/bytes (DESIGN.md section 1.9)
 
     def __add__(self, other: "Cost") -> "Cost":
         return Cost(
@@ -66,6 +71,7 @@ class Cost:
             self.hops + other.hops,
             self.lost_bytes + other.lost_bytes,
             self.unreachable + other.unreachable,
+            self.overlap_launches + other.overlap_launches,
         )
 
     def formula(self) -> str:

@@ -97,7 +97,7 @@ from repro.core import costs
 from repro.core.backend import Backend
 from repro.core.promises import Promise, fine_grained, validate
 from repro.core.transport import (DENSE, FlowWire, RequestArgs, Transport,
-                                  make_transport)
+                                  _DenseCtx, make_transport)
 from repro.kernels import ops as kops
 
 _U32 = jnp.uint32
@@ -330,6 +330,62 @@ class ExchangePlan:
         ack/carry retry path instead of poisoning owner state.  Both
         default off, leaving the wire byte-identical to a plain commit.
         """
+        dead, transport = self._precommit(backend, max_rounds, overflow,
+                                          dead_ranks, transport)
+        if fine_grained(self.promise):
+            return self._commit_fine(backend, impl, int(max_rounds),
+                                     overflow, transport, dead, integrity)
+        st = self._stage_fused(backend, impl, int(max_rounds), overflow,
+                               transport, dead, integrity)
+        segments, extra_drop, tctx = transport.request(backend, st.args)
+        return self._finalize_fused(backend, st, segments, extra_drop,
+                                    tctx, transport)
+
+    def commit_async(self, backend: Backend, impl: str = "auto",
+                     max_rounds: int = 1,
+                     overflow: str = "drop",
+                     transport: Transport | str | None = None,
+                     dead_ranks: tuple[int, ...] | None = None,
+                     integrity: bool = False) -> "PendingPlan":
+        """Split-phase :meth:`commit`: start the wire, defer completion.
+
+        Issues the request's collectives through the transport's
+        ``request_start`` and returns a :class:`PendingPlan`; the caller
+        traces independent compute in the window before calling
+        ``finish()``, which completes the transport wait and yields the
+        same :class:`CommittedPlan` a synchronous commit would have —
+        bit-identical views, drops, and send maps (DESIGN.md §1.9).
+        Retry rounds are double-buffered for free: every round's launch
+        is issued at start, so round ``r+1``'s all-to-all is already in
+        flight while round ``r``'s arrivals are processed at the wait.
+
+        Cost attribution: the launches record their normal
+        collectives/hops/bytes exactly once, at the wait (where the
+        owner segments materialize); the start additionally records
+        ``overlap_launches`` — the count of collectives whose completion
+        was deferred — under the plan op, so logs show HOW MUCH of the
+        wire ran split-phase without double-charging any hop.
+
+        The ``Promise.FINE`` oracle stays sequential: under a FINE
+        promise the plan commits eagerly (no overlap window, no
+        ``overlap_launches``) and the returned PendingPlan is already
+        complete — ``finish()`` just unwraps it.
+        """
+        dead, transport = self._precommit(backend, max_rounds, overflow,
+                                          dead_ranks, transport)
+        if fine_grained(self.promise):
+            return PendingPlan(self, committed=self._commit_fine(
+                backend, impl, int(max_rounds), overflow, transport,
+                dead, integrity))
+        st = self._stage_fused(backend, impl, int(max_rounds), overflow,
+                               transport, dead, integrity)
+        handle = transport.request_start(backend, st.args)
+        return PendingPlan(self, staged=st, handle=handle,
+                           transport=transport)
+
+    def _precommit(self, backend: Backend, max_rounds, overflow,
+                   dead_ranks, transport):
+        """Shared commit/commit_async validation + one-shot latch."""
         if not self._flows:
             raise ValueError("commit() on an empty ExchangePlan")
         if self._committed:
@@ -348,37 +404,43 @@ class ExchangePlan:
                 raise ValueError(
                     f"dead_ranks names rank {d}, outside the "
                     f"{backend.nprocs()}-rank axis")
-        transport = make_transport(transport)
         self._committed = True
-        if fine_grained(self.promise):
-            # sequential oracle: one single-flow plan per flow, in
-            # registration order; the sub-plans carry the replies so the
-            # oracle exercises the SAME transport end to end
-            subs = []
-            for f in self._flows:
-                p = ExchangePlan(name=f.op_name)
-                p.add(f.payload, f.dest, f.capacity,
-                      reply_lanes=f.reply_lanes, valid=f.valid,
-                      op_name=f.op_name)
-                subs.append(p.commit(
-                    backend, impl=impl,
-                    max_rounds=_flow_rounds(f, int(max_rounds)),
-                    overflow=overflow, transport=transport,
-                    dead_ranks=dead, integrity=integrity))
-            return CommittedPlan(self, [c.view(0) for c in subs],
-                                 sequential=True, subplans=subs,
-                                 dead_ranks=dead)
-        return self._commit_fused(backend, impl, int(max_rounds), overflow,
-                                  transport, dead, integrity)
+        return dead, make_transport(transport)
+
+    def _commit_fine(self, backend: Backend, impl: str, max_rounds: int,
+                     overflow: str, transport: Transport,
+                     dead: tuple[int, ...],
+                     integrity: bool) -> "CommittedPlan":
+        # sequential oracle: one single-flow plan per flow, in
+        # registration order; the sub-plans carry the replies so the
+        # oracle exercises the SAME transport end to end
+        subs = []
+        for f in self._flows:
+            p = ExchangePlan(name=f.op_name)
+            p.add(f.payload, f.dest, f.capacity,
+                  reply_lanes=f.reply_lanes, valid=f.valid,
+                  op_name=f.op_name)
+            subs.append(p.commit(
+                backend, impl=impl,
+                max_rounds=_flow_rounds(f, max_rounds),
+                overflow=overflow, transport=transport,
+                dead_ranks=dead, integrity=integrity))
+        return CommittedPlan(self, [c.view(0) for c in subs],
+                             sequential=True, subplans=subs,
+                             dead_ranks=dead)
 
     # -- fused lowering ---------------------------------------------------
 
-    def _commit_fused(self, backend: Backend, impl: str,
-                      max_rounds: int = 1,
-                      overflow: str = "drop",
-                      transport: Transport = DENSE,
-                      dead_ranks: tuple[int, ...] = (),
-                      integrity: bool = False) -> "CommittedPlan":
+    def _stage_fused(self, backend: Backend, impl: str,
+                     max_rounds: int = 1,
+                     overflow: str = "drop",
+                     transport: Transport = DENSE,
+                     dead_ranks: tuple[int, ...] = (),
+                     integrity: bool = False) -> "_StagedCommit":
+        """Everything that happens BEFORE the wire moves: the one binning
+        pass, admission, wire bodies, send maps, and the RequestArgs the
+        transport ships.  Shared verbatim by the synchronous commit and
+        commit_async, which is what makes the two bit-identical."""
         flows = self._flows
         nprocs = backend.nprocs()
         nflows = len(flows)
@@ -515,15 +577,31 @@ class ExchangePlan:
             send_valid = jnp.concatenate(
                 [valid_all, jnp.ones((n_ck,), bool)])
 
-        segments, extra_drop, tctx = transport.request(
-            backend, RequestArgs(specs, bodies, send_dest, send_flow,
-                                 send_off, send_valid, plan_op, impl))
+        return _StagedCommit(
+            args=RequestArgs(specs, bodies, send_dest, send_flow,
+                             send_off, send_valid, plan_op, impl),
+            rounds_f=rounds_f, counts=counts, eff_arr=eff_arr, ok=ok,
+            send_items=send_items, send_occs=send_occs,
+            overflow=overflow, dead_ranks=dead_ranks,
+            integrity=integrity, ck_rmax=ck_rmax, impl=impl)
+
+    def _finalize_fused(self, backend: Backend, st: "_StagedCommit",
+                        segments, extra_drop, tctx,
+                        transport: Transport) -> "CommittedPlan":
+        """Everything that happens AFTER the wire lands: integrity
+        verification, overflow accounting, owner views."""
+        flows = self._flows
+        nprocs = backend.nprocs()
+        nflows = len(flows)
+        rounds_f, ok, integrity = st.rounds_f, st.ok, st.integrity
+        caps = [f.capacity for f in flows]
+        impl, ck_rmax = st.impl, st.ck_rmax
 
         # one psum covers every flow's overflow accounting; only rank
         # >= R_f*C_f is a drop — earlier overflow was carried to a retry.
         # A transport with explicitly undersized stage capacities may
         # drop admitted items too; those counts arrive psum'ed.
-        over = jnp.maximum(counts - eff_arr[None, :], 0).sum(0)   # (F,)
+        over = jnp.maximum(st.counts - st.eff_arr[None, :], 0).sum(0)  # (F,)
         lost = None
         good_by_flow: list[jax.Array] = []
         if integrity:
@@ -577,16 +655,38 @@ class ExchangePlan:
             src_rank = jnp.repeat(jnp.arange(nprocs, dtype=_I32), cap_e)
             views.append(RouteResult(pay, out_valid, src_rank, out_src_pos,
                                      dropped[fi], cap_e,
-                                     send_items[fi], send_occs[fi],
+                                     st.send_items[fi], st.send_occs[fi],
                                      lost[fi] if lost is not None
                                      else jnp.int32(0)))
 
-        if overflow == "raise-in-test":
+        if st.overflow == "raise-in-test":
             _raise_on_drops(flows, dropped)
 
         return CommittedPlan(self, views, sequential=False,
                              transport=transport, tctx=tctx,
-                             dead_ranks=dead_ranks)
+                             dead_ranks=st.dead_ranks)
+
+
+@dataclasses.dataclass
+class _StagedCommit:
+    """Pre-wire state of a fused commit (shared by sync + async paths).
+
+    ``args`` is what the transport ships; the rest is what
+    ``_finalize_fused`` needs once the owner segments land.
+    """
+
+    args: RequestArgs
+    rounds_f: list[int]
+    counts: jax.Array
+    eff_arr: jax.Array
+    ok: jax.Array
+    send_items: list[jax.Array]
+    send_occs: list[jax.Array]
+    overflow: str
+    dead_ranks: tuple[int, ...]
+    integrity: bool
+    ck_rmax: int
+    impl: str
 
 
 class CommittedPlan:
@@ -720,6 +820,68 @@ class CommittedPlan:
         return outs
 
 
+class PendingPlan:
+    """Future returned by :meth:`ExchangePlan.commit_async`.
+
+    The request's collectives are already in flight (traced into the
+    program) when this object exists; ``finish(backend)`` completes the
+    transport wait and returns the :class:`CommittedPlan` — bit-identical
+    to what the synchronous commit would have produced.  Everything the
+    caller traces between the two calls sits in the overlap window.
+    """
+
+    def __init__(self, plan: ExchangePlan,
+                 committed: CommittedPlan | None = None,
+                 staged: _StagedCommit | None = None,
+                 handle=None, transport: Transport | None = None):
+        self._plan = plan
+        self._committed = committed        # FINE oracle: already complete
+        self._staged = staged
+        self._handle = handle
+        self._transport = transport
+        self._done = False
+
+    def finish(self, backend: Backend) -> CommittedPlan:
+        """Complete the wire; one-shot (a second wait would duplicate
+        the transport's completion collectives and cost records)."""
+        if self._done:
+            raise ValueError("PendingPlan already finished")
+        self._done = True
+        if self._committed is not None:
+            return self._committed
+        st = self._staged
+        # the deferred launches' collectives/hops/bytes record exactly
+        # once, inside request_wait; the start's only extra observable
+        # is HOW MANY launches ran split-phase
+        costs.record(st.args.plan_op,
+                     costs.Cost(overlap_launches=self._handle.launched))
+        segments, extra_drop, tctx = self._transport.request_wait(
+            backend, self._handle)
+        return self._plan._finalize_fused(backend, st, segments,
+                                          extra_drop, tctx,
+                                          self._transport)
+
+
+class PendingResult:
+    """Future for a container op issued split-phase (``async_=True``).
+
+    Wraps the op's completion closure: the exchange wire is in flight,
+    and ``finish()`` runs the owner-side work + reply round, returning
+    exactly what the synchronous op would have returned.  One-shot.
+    """
+
+    def __init__(self, complete):
+        self._complete = complete
+        self._done = False
+
+    def finish(self):
+        if self._done:
+            raise ValueError("PendingResult already finished")
+        self._done = True
+        out, self._complete = self._complete, None
+        return out()
+
+
 def carry_mask(req: RouteResult, valid: jax.Array) -> jax.Array:
     """Items of the ORIGINAL batch that were valid but never shipped.
 
@@ -798,7 +960,9 @@ def reply(backend: Backend,
           req: RouteResult,
           reply_payload: jax.Array,
           orig_n: int,
-          op_name: str = "reply") -> tuple[jax.Array, jax.Array]:
+          op_name: str = "reply",
+          transport: Transport | str | None = None
+          ) -> tuple[jax.Array, jax.Array]:
     """Route per-request replies back to the requesters (single flow).
 
     ``reply_payload`` is (P*C, L) aligned with ``req.payload`` rows.
@@ -816,17 +980,34 @@ def reply(backend: Backend,
     ``CommittedPlan.finish`` instead, which fuses every flow's replies
     into ONE such inverse permutation (calling ``reply`` on a fused view
     is semantically correct — the slot maps are flow-local — but launches
-    an unfused collective per flow).  This helper is the DENSE inverse
-    permutation only: a plan committed over a non-dense transport must
-    reply through ``finish`` (declare ``reply_lanes`` on the flow), so
-    the reply rides the transport's exact inverse hop sequence.
+    an unfused collective per flow).
+
+    ``transport`` must name the transport the request moved over, and
+    only the dense inverse permutation is expressible from a bare
+    :class:`RouteResult` — a view routed over a multi-hop transport
+    carries per-launch relay state that only the committed plan holds,
+    so a non-dense transport raises here and the caller must reply
+    through ``finish`` (declare ``reply_lanes`` on the flow).
     """
+    tr = make_transport(transport)
+    if tr.name != "dense":
+        raise ValueError(
+            f"reply({op_name!r}): the standalone reply is the dense "
+            f"inverse permutation; a flow routed over transport "
+            f"{tr.name!r} must declare reply_lanes and reply through "
+            f"CommittedPlan.finish, which holds the transport's inverse "
+            f"hop state")
     if reply_payload.ndim == 1:
         reply_payload = reply_payload[:, None]
     lanes = reply_payload.shape[1]
 
-    send = jnp.where(req.valid[:, None], reply_payload.astype(_U32), 0)
-    back = backend.all_to_all(send)
+    # ride the transport's inverse permutation (one single-flow wire):
+    # bit-identical to the pre-transport direct all-to-all, and keeps
+    # every physical collective inside core/transport.py
+    spec = FlowWire(req.capacity, 1, lanes + 1, lanes, orig_n, op_name)
+    staged = {0: jnp.where(req.valid[:, None],
+                           reply_payload.astype(_U32), 0)}
+    back = tr.reply(backend, _DenseCtx([spec], op_name), staged)[0]
 
     # back[k] answers the item this rank placed in send slot k of the
     # original route call
@@ -834,11 +1015,6 @@ def reply(backend: Backend,
     out = jnp.zeros((orig_n, lanes), _U32).at[item].set(back, mode="drop")
     answered = jnp.zeros((orig_n,), bool).at[item].set(
         req.send_occ, mode="drop")
-
-    wire_bytes = send.shape[0] * lanes * 4
-    costs.record(op_name, costs.Cost(
-        collectives=1, rounds=1, hops=1, bytes_moved=wire_bytes,
-        bytes_in=wire_bytes))
     return out, answered
 
 

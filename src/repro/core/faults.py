@@ -198,5 +198,14 @@ class FaultInjectingTransport(Transport):
     def request(self, backend: Backend, args) -> tuple[list, Any, Any]:
         return self.inner.request(self._wrap(backend), args)
 
+    def request_start(self, backend: Backend, args):
+        # split-phase launches count through the SAME shared counter, so
+        # a spec's launch indices address collectives in the overlapped
+        # program order (all starts, then the waits)
+        return self.inner.request_start(self._wrap(backend), args)
+
+    def request_wait(self, backend: Backend, handle):
+        return self.inner.request_wait(self._wrap(backend), handle)
+
     def reply(self, backend: Backend, ctx, staged):
         return self.inner.reply(self._wrap(backend), ctx, staged)

@@ -118,11 +118,44 @@ class RequestArgs:
     impl: str
 
 
+@dataclasses.dataclass
+class InFlight:
+    """Handle for a split-phase request (DESIGN.md §1.9).
+
+    ``request_start`` returns one; ``request_wait`` consumes it.  The
+    window between the two calls is where callers place independent
+    compute — every collective counted in ``launched`` is already in
+    the traced program when start returns, so the scheduler can overlap
+    it with whatever the caller traces before the wait.
+    """
+
+    launched: int   # collectives issued before start returned
+    state: Any      # transport-private completion state
+
+
 class Transport(abc.ABC):
     """Physical movement strategy for the exchange engine's collectives."""
 
     #: stable identifier ("dense" / "hier") used by config/benchmark knobs
     name: str
+
+    def request_start(self, backend: Backend, args: RequestArgs) -> InFlight:
+        """Issue the request's collectives; completion deferred to wait.
+
+        Default: the synchronous one-shot — every launch is issued (and
+        the owner segments fully materialized) before start returns, so
+        :meth:`request_wait` just unwraps.  Dense keeps this default
+        (its single hop leaves nothing to defer: start IS the oracle
+        path); transports with dependent hops override both halves to
+        leave later hops for the wait.
+        """
+        nrounds = max(s.rounds for s in args.specs)
+        return InFlight(nrounds, self.request(backend, args))
+
+    def request_wait(self, backend: Backend, handle: InFlight
+                     ) -> tuple[list[jax.Array], jax.Array | None, Any]:
+        """Complete a :meth:`request_start`; returns what request returns."""
+        return handle.state
 
     @abc.abstractmethod
     def request(self, backend: Backend, args: RequestArgs
@@ -315,6 +348,49 @@ class _HierCtx:
     rounds: list[_HierRound]
 
 
+@dataclasses.dataclass
+class _HierPre:
+    """Launch-invariant state shared by every round's two stages."""
+
+    args: RequestArgs
+    pr: int
+    pc: int
+    row_groups: tuple
+    col_groups: tuple
+    myrow: jax.Array
+    caps_arr: jax.Array
+    rounds_arr: jax.Array
+    w1: list[int]
+    w1_arr: jax.Array
+    c1: list[int]
+    c2: list[int]
+    c1_arr: jax.Array
+    c2_arr: jax.Array
+    nrounds: int
+    destcol: jax.Array
+    hop1: jax.Array
+
+
+@dataclasses.dataclass
+class _Stage1Out:
+    """One round's source->relay hop, awaiting its relay->owner hop."""
+
+    live: list[int]
+    woff1_map: dict[int, int]
+    recv1: jax.Array
+    src: dict[int, tuple[jax.Array, jax.Array]]
+    extra: jax.Array
+
+
+@dataclasses.dataclass
+class _RoundOut:
+    """One completed round: inverse-permutation state + owner scatters."""
+
+    rnd: _HierRound
+    scatters: dict[int, tuple[jax.Array, jax.Array]]  # fi -> (dslot, rows)
+    extra: jax.Array
+
+
 class HierarchicalTransport(Transport):
     """Two-stage all-to-all over the factored rank axis ``P = Pr x Pc``.
 
@@ -375,9 +451,9 @@ class HierarchicalTransport(Transport):
         # a relay forwards <= min(C_f, N_f) per (row source, dest rank)
         return (min(pr * s.capacity, s.n), pc * min(s.capacity, s.n))
 
-    def request(self, backend, args):
+    def _pre(self, backend, args):
+        """Validate, factor the axis, and derive launch-invariant state."""
         specs = args.specs
-        nflows = len(specs)
         nprocs = backend.nprocs()
         pr, pc = self._factor(nprocs)
         if nprocs > _MAX_RANKS:
@@ -401,137 +477,164 @@ class HierarchicalTransport(Transport):
         w1_arr = jnp.asarray(w1, _I32)
         c1 = [self._stage_caps(s, pr, pc)[0] for s in specs]
         c2 = [self._stage_caps(s, pr, pc)[1] for s in specs]
-        c1_arr = jnp.asarray(c1, _I32)
-        c2_arr = jnp.asarray(c2, _I32)
         nrounds = max(s.rounds for s in specs)
 
         destcol = (args.dest % pc).astype(_I32)
         # hop lane, source->relay: final dest rank | dense bucket rank o
         hop1 = ((args.dest.astype(_U32) << _HOP_SHIFT)
                 | (args.offsets.astype(_U32) & _U32(_HOP_MASK)))
+        return _HierPre(args, pr, pc, row_groups, col_groups, myrow,
+                        caps_arr, rounds_arr, w1, w1_arr, c1, c2,
+                        jnp.asarray(c1, _I32), jnp.asarray(c2, _I32),
+                        nrounds, destcol, hop1)
+
+    def _stage1(self, backend, pre, r):
+        """Round r's source->relay hop: bin by dest column, row a2a."""
+        args, specs = pre.args, pre.args.specs
+        nflows = len(specs)
+        pc, w1, c1 = pre.pc, pre.w1, pre.c1
+        live = [fi for fi in range(nflows) if specs[fi].rounds > r]
+        live_arr = jnp.asarray(
+            [1 if specs[fi].rounds > r else 0 for fi in range(nflows)],
+            _I32)
+        # this launch ships exactly the dense round-r window — the
+        # same items DenseTransport's round r ships
+        fl = args.flow_id
+        in_round = (args.valid & (pre.rounds_arr[fl] > r)
+                    & (args.offsets >= r * pre.caps_arr[fl])
+                    & (args.offsets < (r + 1) * pre.caps_arr[fl]))
+
+        costs.record("exchange.bin",
+                     costs.Cost(local=int(args.dest.shape[0])))
+        cnt1, off1 = kops.multi_bin_offsets(pre.destcol, fl, pc, nflows,
+                                            in_round, impl=args.impl)
+        starts1, w1r = ragged_offsets([c1[fi] * w1[fi] for fi in live])
+        woff1_map = dict(zip(live, starts1))
+        woff1 = jnp.asarray(
+            [woff1_map.get(fi, 0) for fi in range(nflows)], _I32)
+        slot1 = kops.stage_slots(pre.destcol, fl, off1, in_round, woff1,
+                                 pre.w1_arr, pre.c1_arr, live_arr, w1r,
+                                 pc * w1r, impl=args.impl)
+        send1 = jnp.zeros((pc * w1r,), _U32)
+        src_state = {}
+        row0 = 0
+        nprocs = backend.nprocs()
+        for fi, s in enumerate(specs):
+            sl = slice(row0, row0 + s.n)
+            if s.rounds > r:
+                rows1 = jnp.concatenate(
+                    [args.bodies[fi], pre.hop1[sl][:, None]], axis=1)
+                send1 = scatter_rows(send1, slot1[sl], rows1)
+                ship1 = in_round[sl] & (off1[sl] < c1[fi])
+                r1 = jnp.where(ship1, pre.destcol[sl] * c1[fi] + off1[sl],
+                               pc * c1[fi]).astype(_I32)
+                dslot = jnp.where(
+                    ship1, args.dest[sl] * s.cap_e + args.offsets[sl],
+                    nprocs * s.cap_e).astype(_I32)
+                src_state[fi] = (r1, dslot)
+            row0 += s.n
+        extra = jnp.maximum(cnt1 - pre.c1_arr[None, :], 0).sum(0)
+        recv1 = backend.all_to_all(send1, groups=pre.row_groups) \
+            .reshape(pc, w1r)
+        return _Stage1Out(live, woff1_map, recv1, src_state, extra)
+
+    def _stage2(self, backend, pre, s1):
+        """One round's relay re-bin + relay->owner hop + owner scatter."""
+        args, specs = pre.args, pre.args.specs
+        nflows = len(specs)
+        pr, pc, w1, c1, c2 = pre.pr, pre.pc, pre.w1, pre.c1, pre.c2
+        live, woff1_map, recv1 = s1.live, s1.woff1_map, s1.recv1
+        nprocs = backend.nprocs()
+
+        # ---- relay: recover source positionally, re-bin by row ----
+        rel_bins, rel_flow, rel_valid, rel_rows = [], [], [], []
+        for fi in live:
+            s = specs[fi]
+            seg = recv1[:, woff1_map[fi]:
+                        woff1_map[fi] + c1[fi] * w1[fi]] \
+                .reshape(pc * c1[fi], w1[fi])
+            meta = seg[:, s.roww - 1]
+            hop = seg[:, s.roww]
+            rv = (meta & _VALID_BIT) != 0
+            dst = (hop >> _HOP_SHIFT).astype(_I32)
+            o = (hop & _U32(_HOP_MASK))
+            # stage-1 arrival block index IS the source's column
+            src_col = jnp.arange(pc * c1[fi], dtype=_I32) // c1[fi]
+            src = (pre.myrow * pc + src_col).astype(_U32)
+            hop2 = (src << _HOP_SHIFT) | o
+            rel_rows.append(jnp.concatenate(
+                [seg[:, :s.roww], hop2[:, None]], axis=1))
+            rel_bins.append(jnp.where(rv, dst // pc, 0))
+            rel_flow.append(jnp.full((pc * c1[fi],), fi, _I32))
+            rel_valid.append(rv)
+        rbins = jnp.concatenate(rel_bins)
+        rflow = jnp.concatenate(rel_flow)
+        rvalid = jnp.concatenate(rel_valid)
+
+        # ---- stage 2: bin by destination row, column all-to-all ----
+        costs.record("exchange.bin",
+                     costs.Cost(local=int(rbins.shape[0])))
+        cnt2, off2 = kops.multi_bin_offsets(rbins, rflow, pr, nflows,
+                                            rvalid, impl=args.impl)
+        live_arr = jnp.asarray(
+            [1 if fi in live else 0 for fi in range(nflows)], _I32)
+        starts2, w2r = ragged_offsets([c2[fi] * w1[fi] for fi in live])
+        woff2_map = dict(zip(live, starts2))
+        woff2 = jnp.asarray(
+            [woff2_map.get(fi, 0) for fi in range(nflows)], _I32)
+        slot2 = kops.stage_slots(rbins, rflow, off2, rvalid, woff2,
+                                 pre.w1_arr, pre.c2_arr, live_arr, w2r,
+                                 pr * w2r, impl=args.impl)
+        send2 = jnp.zeros((pr * w2r,), _U32)
+        rel_state = {}
+        m0 = 0
+        for k, fi in enumerate(live):
+            mfi = pc * c1[fi]
+            sl = slice(m0, m0 + mfi)
+            send2 = scatter_rows(send2, slot2[sl], rel_rows[k])
+            ship2 = rvalid[sl] & (off2[sl] < c2[fi])
+            rel_state[fi] = jnp.where(
+                ship2, rbins[sl] * c2[fi] + off2[sl],
+                pr * c2[fi]).astype(_I32)
+            m0 += mfi
+        extra = s1.extra + jnp.maximum(cnt2 - pre.c2_arr[None, :], 0).sum(0)
+        recv2 = backend.all_to_all(send2, groups=pre.col_groups) \
+            .reshape(pr, w2r)
+
+        # ---- owner: recover dense slots for the scatter ----
+        own_state = {}
+        scatters = {}
+        for fi in live:
+            s = specs[fi]
+            seg2 = recv2[:, woff2_map[fi]:
+                         woff2_map[fi] + c2[fi] * w1[fi]] \
+                .reshape(pr * c2[fi], w1[fi])
+            meta2 = seg2[:, s.roww - 1]
+            hop2v = seg2[:, s.roww]
+            v2 = (meta2 & _VALID_BIT) != 0
+            src2 = (hop2v >> _HOP_SHIFT).astype(_I32)
+            o2 = (hop2v & _U32(_HOP_MASK)).astype(_I32)
+            dslot = jnp.where(v2, src2 * s.cap_e + o2,
+                              nprocs * s.cap_e).astype(_I32)
+            scatters[fi] = (dslot, seg2[:, :s.roww])
+            own_state[fi] = dslot
+        return _RoundOut(_HierRound(live, s1.src, rel_state, own_state),
+                         scatters, extra)
+
+    def _assemble(self, backend, pre, rounds):
+        """Fold completed rounds into owner segments + cost records."""
+        args, specs = pre.args, pre.args.specs
+        nflows = len(specs)
+        pr, pc, w1, c1, c2 = pre.pr, pre.pc, pre.w1, pre.c1, pre.c2
+        nprocs = backend.nprocs()
 
         seg_out = [jnp.zeros((nprocs * s.cap_e, s.roww), _U32)
                    for s in specs]
         extra = jnp.zeros((nflows,), _I32)
-        ctx_rounds: list[_HierRound] = []
-
-        for r in range(nrounds):
-            live = [fi for fi in range(nflows) if specs[fi].rounds > r]
-            live_arr = jnp.asarray(
-                [1 if specs[fi].rounds > r else 0 for fi in range(nflows)],
-                _I32)
-            # this launch ships exactly the dense round-r window — the
-            # same items DenseTransport's round r ships
-            fl = args.flow_id
-            in_round = (args.valid & (rounds_arr[fl] > r)
-                        & (args.offsets >= r * caps_arr[fl])
-                        & (args.offsets < (r + 1) * caps_arr[fl]))
-
-            # ---- stage 1: bin by destination column, row all-to-all ----
-            costs.record("exchange.bin",
-                         costs.Cost(local=int(args.dest.shape[0])))
-            cnt1, off1 = kops.multi_bin_offsets(destcol, fl, pc, nflows,
-                                                in_round, impl=args.impl)
-            starts1, w1r = ragged_offsets([c1[fi] * w1[fi] for fi in live])
-            woff1_map = dict(zip(live, starts1))
-            woff1 = jnp.asarray(
-                [woff1_map.get(fi, 0) for fi in range(nflows)], _I32)
-            slot1 = kops.stage_slots(destcol, fl, off1, in_round, woff1,
-                                     w1_arr, c1_arr, live_arr, w1r,
-                                     pc * w1r, impl=args.impl)
-            send1 = jnp.zeros((pc * w1r,), _U32)
-            src_state = {}
-            row0 = 0
-            for fi, s in enumerate(specs):
-                sl = slice(row0, row0 + s.n)
-                if s.rounds > r:
-                    rows1 = jnp.concatenate(
-                        [args.bodies[fi], hop1[sl][:, None]], axis=1)
-                    send1 = scatter_rows(send1, slot1[sl], rows1)
-                    ship1 = in_round[sl] & (off1[sl] < c1[fi])
-                    r1 = jnp.where(ship1, destcol[sl] * c1[fi] + off1[sl],
-                                   pc * c1[fi]).astype(_I32)
-                    dslot = jnp.where(
-                        ship1, args.dest[sl] * s.cap_e + args.offsets[sl],
-                        nprocs * s.cap_e).astype(_I32)
-                    src_state[fi] = (r1, dslot)
-                row0 += s.n
-            extra = extra + jnp.maximum(cnt1 - c1_arr[None, :], 0).sum(0)
-            recv1 = backend.all_to_all(send1, groups=row_groups) \
-                .reshape(pc, w1r)
-
-            # ---- relay: recover source positionally, re-bin by row ----
-            rel_bins, rel_flow, rel_valid, rel_rows = [], [], [], []
-            for fi in live:
-                s = specs[fi]
-                seg = recv1[:, woff1_map[fi]:
-                            woff1_map[fi] + c1[fi] * w1[fi]] \
-                    .reshape(pc * c1[fi], w1[fi])
-                meta = seg[:, s.roww - 1]
-                hop = seg[:, s.roww]
-                rv = (meta & _VALID_BIT) != 0
-                dst = (hop >> _HOP_SHIFT).astype(_I32)
-                o = (hop & _U32(_HOP_MASK))
-                # stage-1 arrival block index IS the source's column
-                src_col = jnp.arange(pc * c1[fi], dtype=_I32) // c1[fi]
-                src = (myrow * pc + src_col).astype(_U32)
-                hop2 = (src << _HOP_SHIFT) | o
-                rel_rows.append(jnp.concatenate(
-                    [seg[:, :s.roww], hop2[:, None]], axis=1))
-                rel_bins.append(jnp.where(rv, dst // pc, 0))
-                rel_flow.append(jnp.full((pc * c1[fi],), fi, _I32))
-                rel_valid.append(rv)
-            rbins = jnp.concatenate(rel_bins)
-            rflow = jnp.concatenate(rel_flow)
-            rvalid = jnp.concatenate(rel_valid)
-
-            # ---- stage 2: bin by destination row, column all-to-all ----
-            costs.record("exchange.bin",
-                         costs.Cost(local=int(rbins.shape[0])))
-            cnt2, off2 = kops.multi_bin_offsets(rbins, rflow, pr, nflows,
-                                                rvalid, impl=args.impl)
-            starts2, w2r = ragged_offsets([c2[fi] * w1[fi] for fi in live])
-            woff2_map = dict(zip(live, starts2))
-            woff2 = jnp.asarray(
-                [woff2_map.get(fi, 0) for fi in range(nflows)], _I32)
-            slot2 = kops.stage_slots(rbins, rflow, off2, rvalid, woff2,
-                                     w1_arr, c2_arr, live_arr, w2r,
-                                     pr * w2r, impl=args.impl)
-            send2 = jnp.zeros((pr * w2r,), _U32)
-            rel_state = {}
-            m0 = 0
-            for k, fi in enumerate(live):
-                mfi = pc * c1[fi]
-                sl = slice(m0, m0 + mfi)
-                send2 = scatter_rows(send2, slot2[sl], rel_rows[k])
-                ship2 = rvalid[sl] & (off2[sl] < c2[fi])
-                rel_state[fi] = jnp.where(
-                    ship2, rbins[sl] * c2[fi] + off2[sl],
-                    pr * c2[fi]).astype(_I32)
-                m0 += mfi
-            extra = extra + jnp.maximum(cnt2 - c2_arr[None, :], 0).sum(0)
-            recv2 = backend.all_to_all(send2, groups=col_groups) \
-                .reshape(pr, w2r)
-
-            # ---- owner: scatter arrivals into the dense layout ----
-            own_state = {}
-            for fi in live:
-                s = specs[fi]
-                seg2 = recv2[:, woff2_map[fi]:
-                             woff2_map[fi] + c2[fi] * w1[fi]] \
-                    .reshape(pr * c2[fi], w1[fi])
-                meta2 = seg2[:, s.roww - 1]
-                hop2v = seg2[:, s.roww]
-                v2 = (meta2 & _VALID_BIT) != 0
-                src2 = (hop2v >> _HOP_SHIFT).astype(_I32)
-                o2 = (hop2v & _U32(_HOP_MASK)).astype(_I32)
-                dslot = jnp.where(v2, src2 * s.cap_e + o2,
-                                  nprocs * s.cap_e).astype(_I32)
-                seg_out[fi] = seg_out[fi].at[dslot].set(
-                    seg2[:, :s.roww], mode="drop")
-                own_state[fi] = dslot
-            ctx_rounds.append(_HierRound(live, src_state, rel_state,
-                                         own_state))
+        for out in rounds:
+            for fi, (dslot, rows) in out.scatters.items():
+                seg_out[fi] = seg_out[fi].at[dslot].set(rows, mode="drop")
+            extra = extra + out.extra
 
         # cost attribution: the requester-side hop under the flow's own
         # op (retry launches under "<op>.retry"); ALL relay->owner hop
@@ -550,14 +653,39 @@ class HierarchicalTransport(Transport):
                          costs.Cost(bytes_moved=rel, bytes_out=rel))
         costs.record(args.plan_op, costs.Cost(collectives=2, rounds=2,
                                               hops=2))
-        for _ in range(nrounds - 1):
+        for _ in range(pre.nrounds - 1):
             costs.record(f"{args.plan_op}.retry",
                          costs.Cost(collectives=2, rounds=2, hops=2))
 
         dropped = backend.psum(extra).astype(_I32)
-        ctx = _HierCtx(specs, args.plan_op, pr, pc, c1, c2, row_groups,
-                       col_groups, ctx_rounds)
+        ctx = _HierCtx(specs, args.plan_op, pr, pc, c1, c2, pre.row_groups,
+                       pre.col_groups, [out.rnd for out in rounds])
         return seg_out, dropped, ctx
+
+    def request(self, backend, args):
+        # synchronous path: the stages interleave per round, exactly the
+        # pre-split launch order [s1_r0, s2_r0, s1_r1, s2_r1, ...] — the
+        # fault-injection launch numbering and every cost pin depend on
+        # this ordering staying put
+        pre = self._pre(backend, args)
+        rounds = [self._stage2(backend, pre, self._stage1(backend, pre, r))
+                  for r in range(pre.nrounds)]
+        return self._assemble(backend, pre, rounds)
+
+    def request_start(self, backend, args):
+        # split-phase: issue EVERY round's source->relay hop up front
+        # (the hops are mutually independent — each ships its own dense
+        # round window), deferring relays, owner hops, and scatters to
+        # the wait.  Launch order becomes [s1_r0 .. s1_rk, s2_r0 ..],
+        # overlapping the two hops across the caller's window.
+        pre = self._pre(backend, args)
+        s1s = [self._stage1(backend, pre, r) for r in range(pre.nrounds)]
+        return InFlight(pre.nrounds, (pre, s1s))
+
+    def request_wait(self, backend, handle):
+        pre, s1s = handle.state
+        rounds = [self._stage2(backend, pre, s1) for s1 in s1s]
+        return self._assemble(backend, pre, rounds)
 
     def reply(self, backend, ctx, staged):
         specs = ctx.specs

@@ -17,6 +17,7 @@ data order (the FT guarantee).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -45,11 +46,17 @@ def main(argv=None):
     ap.add_argument("--kill-at", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--async-dispatch", action="store_true",
+                    help="split-phase MoE dispatch: issue the exchange "
+                         "wire, overlap the always-on paths, then finish "
+                         "(DESIGN.md section 1.9)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
+    if args.async_dispatch:
+        cfg = dataclasses.replace(cfg, moe_async_dispatch=True)
 
     n_dev = len(jax.devices())
     model_par = 1

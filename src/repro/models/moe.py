@@ -200,8 +200,22 @@ def moe_apply(params, x, cfg, mesh: Mesh, axes: Axes):
     _expert_ffn = _make_expert_ffn(cfg)
     # physical collective layer for the dispatch plan (DESIGN.md §1.7)
     transport = make_transport(cfg.exchange_transport)
+    # split-phase dispatch (DESIGN.md §1.9): commit_async issues the
+    # wire, the always-on row-wise paths (shared/dense MLP) run in the
+    # overlap window on the local shard, then finish() completes the
+    # exchange before the owner-side expert compute
+    async_ = bool(cfg.moe_async_dispatch)
+    extra_keys = tuple(kk for kk in ("shared", "dense") if kk in params)
 
-    def dispatch_dedup(xl, idxl, wl, wg, wi, wo_):
+    def _overlap_window(xl, extras):
+        from repro.models.layers import mlp
+        out = None
+        for p in extras:
+            o = mlp(p, xl, cfg.activation)
+            out = o if out is None else out + o
+        return out
+
+    def dispatch_dedup(xl, idxl, wl, wg, wi, wo_, *extras):
         """One exchange row per (token, distinct owner rank): the owner
         runs ALL of its local experts for the token and replies the
         weighted partial sum — for top-8 over 16 ranks the expected
@@ -240,8 +254,15 @@ def moe_apply(params, x, cfg, mesh: Mesh, axes: Axes):
                          reply_lanes=act_lanes, valid=first.reshape(-1),
                          op_name="moe.dispatch")
         h_st = _stats_flow(plan, e, e_loc)
-        c = plan.commit(bk, max_rounds=cfg.moe_dispatch_rounds,
-                        transport=transport)
+        if async_:
+            pend = plan.commit_async(bk, max_rounds=cfg.moe_dispatch_rounds,
+                                     transport=transport)
+            win = _overlap_window(xl, extras)
+            c = pend.finish(bk)
+        else:
+            win = None
+            c = plan.commit(bk, max_rounds=cfg.moe_dispatch_rounds,
+                            transport=transport)
         res = c.view(h_tok)
 
         m = res.payload.shape[0]
@@ -277,15 +298,17 @@ def moe_apply(params, x, cfg, mesh: Mesh, axes: Axes):
         load = outs[h_st][0][:, 0].astype(_F32)[None]          # (1, e)
         yk = _unpack_act(out_lanes, bf16).reshape(n_tok, k, d)
         # weights applied at owner
-        return (yk.sum(axis=1).reshape(bl, tl, d), load,
-                res.dropped[None])
+        ybt = yk.sum(axis=1).reshape(bl, tl, d)
+        if win is not None:
+            ybt = ybt.astype(xl.dtype) + win
+        return ybt, load, res.dropped[None]
 
-    def dispatch(xl, idxl, wl, wg, wi, wo_):
+    def dispatch(xl, idxl, wl, wg, wi, wo_, *extras):
         # xl (b_loc, t_loc, D); idxl/wl (b_loc, t_loc, K) — PER-DEVICE
         # shapes, so the static exchange capacities are sized from the
         # tokens this rank actually holds (uniform expectation x slack).
         if cfg.moe_dedup_dispatch:
-            return dispatch_dedup(xl, idxl, wl, wg, wi, wo_)
+            return dispatch_dedup(xl, idxl, wl, wg, wi, wo_, *extras)
         bk = SpmdBackend(axes.model)
         bl, tl = xl.shape[0], xl.shape[1]
         cap = max(1, int(bl * tl * k / nm * cfg.moe_capacity_slack) + 1)
@@ -304,8 +327,15 @@ def moe_apply(params, x, cfg, mesh: Mesh, axes: Axes):
         h_tok = plan.add(payload, dest, cap, reply_lanes=act_lanes,
                          op_name="moe.dispatch")
         h_st = _stats_flow(plan, e, e_loc)
-        c = plan.commit(bk, max_rounds=cfg.moe_dispatch_rounds,
-                        transport=transport)
+        if async_:
+            pend = plan.commit_async(bk, max_rounds=cfg.moe_dispatch_rounds,
+                                     transport=transport)
+            win = _overlap_window(xl, extras)
+            c = pend.finish(bk)
+        else:
+            win = None
+            c = plan.commit(bk, max_rounds=cfg.moe_dispatch_rounds,
+                            transport=transport)
         res = c.view(h_tok)
 
         rows = _unpack_act(res.payload[:, :act_lanes], bf16)
@@ -331,8 +361,10 @@ def moe_apply(params, x, cfg, mesh: Mesh, axes: Axes):
         load = outs[h_st][0][:, 0].astype(_F32)[None]           # (1, e)
         yk = _unpack_act(out_lanes, bf16)                       # (n, D)
         yk = yk.reshape(bl, tl, k, d)
-        return (jnp.einsum("btkd,btk->btd", yk, wl.astype(_F32)), load,
-                res.dropped[None])
+        ybt = jnp.einsum("btkd,btk->btd", yk, wl.astype(_F32))
+        if win is not None:
+            ybt = ybt.astype(xl.dtype) + win
+        return ybt, load, res.dropped[None]
 
     din = axes.data
     if seq_split:
@@ -342,15 +374,19 @@ def moe_apply(params, x, cfg, mesh: Mesh, axes: Axes):
         in_x = P(din, None, None)
         in_i = P(din, None, None)
     espec = lambda *rest: P(axes.model, *rest)
+    # under split-phase dispatch the shared/dense trees ride into the
+    # shard_map (replicated) so the window can compute them on xl rows
+    extra_args = tuple(params[kk] for kk in extra_keys) if async_ else ()
     y, load, drops = shard_map(
         dispatch, mesh=mesh,
         in_specs=(in_x, in_i, in_i,
-                  espec(None, None), espec(None, None), espec(None, None)),
+                  espec(None, None), espec(None, None), espec(None, None))
+                 + tuple(P() for _ in extra_args),
         out_specs=(in_x, P(din, None), P(din)),
         check_vma=False,   # replication over 'model' holds by construction
     )(x, top_idx.astype(_I32), top_w,
       params["experts"]["w_gate"], params["experts"]["w_in"],
-      params["experts"]["w_out"])
+      params["experts"]["w_out"], *extra_args)
     y = y.astype(x.dtype)
     expert_load = load.sum(axis=0)        # (E,) summed over data shards
     # wire drops of the token flow (already global over the model axis);
@@ -359,10 +395,13 @@ def moe_apply(params, x, cfg, mesh: Mesh, axes: Axes):
     dispatch_dropped = drops.sum()
 
     # ---- always-on paths ----
-    from repro.models.layers import mlp
-    if "shared" in params:
-        y = y + mlp(params["shared"], x, cfg.activation)
-    if "dense" in params:
-        y = y + mlp(params["dense"], x, cfg.activation)
+    # (under async dispatch these were already folded in per shard,
+    # inside the overlap window between commit_async and finish)
+    if not async_:
+        from repro.models.layers import mlp
+        if "shared" in params:
+            y = y + mlp(params["shared"], x, cfg.activation)
+        if "dense" in params:
+            y = y + mlp(params["dense"], x, cfg.activation)
     return y, aux, {"expert_load": expert_load,
                     "dispatch_dropped": dispatch_dropped}

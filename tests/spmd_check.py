@@ -172,6 +172,37 @@ def main():
           all(np.array_equal(np.asarray(a), np.asarray(b))
               for a, b in zip(got_rf, got_rs)))
 
+    # ---- split-phase commit_async == sync commit on 8 ranks ----
+    # the same mixed-width plan issued split-phase (DESIGN.md section
+    # 1.9): commit_async starts the wire, finish() completes it — views,
+    # replies, answered masks, and drop counts must be bit-identical to
+    # the one-shot commit above, on both physical transports (the
+    # hierarchical one overlaps its two hops across retry rounds).
+    def ragged_async(transport):
+        def body(p1, p3, d1, d3):
+            bk = get_backend("bcl")
+            plan = ExchangePlan(name="ragged")
+            h1 = plan.add(p1, d1, 8, reply_lanes=1, op_name="narrow")
+            h3 = plan.add(p3, d3, 8, reply_lanes=2, op_name="wide")
+            c = plan.commit_async(bk, max_rounds=2,
+                                  transport=transport).finish(bk)
+            c.set_reply(h1, c.view(h1).payload[:, 0] * 3 + 1)
+            c.set_reply(h3, c.view(h3).payload[:, :2] + 5)
+            outs = c.finish(bk)
+            v1, v3 = c.view(h1), c.view(h3)
+            return (outs[h1][0], outs[h1][1], outs[h3][0], outs[h3][1],
+                    v1.payload, v1.valid, v3.payload, v3.valid,
+                    v1.dropped[None], v3.dropped[None])
+
+        return jax.jit(shard_map(body, mesh=mesh, in_specs=(P("bcl"),) * 4,
+                                 out_specs=(P("bcl"),) * 10))
+
+    for tag, tr_a in (("plan.async_equals_sync_8rank", None),
+                      ("plan.async_equals_sync_8rank_hier", "hier")):
+        got_ra = ragged_async(tr_a)(*rg_args)
+        check(tag, all(np.array_equal(np.asarray(a), np.asarray(b))
+                       for a, b in zip(got_ra, got_rf)))
+
     # ---- zipf-skewed destinations: retry rounds make push lossless ----
     # mean-load capacity (n_loc / P) with zipf destination draws: the
     # hot rank overflows every (src, hot) bucket; carryover retries
@@ -657,6 +688,79 @@ def main():
     check("chaos.corrupt_carry_heals",
           int(np.asarray(c1).sum()) > 0 and int(np.asarray(c2).sum()) == 0
           and sorted(healed.tolist()) == sorted(np.asarray(lv).tolist()))
+
+    # ---- faults x split-phase (DESIGN.md sections 1.8 + 1.9) ----
+    # the same seeded corruption driven through commit_async/finish:
+    # with double-buffered retry rounds the next round's wire is already
+    # in flight while the previous round's checksum windows are being
+    # verified, and the loss accounting must not change.  A FRESH
+    # FaultInjectingTransport re-bases the trace-time launch counter, so
+    # the injected faults hit the same launches as the sync arm.
+    from repro.core import ExchangePlan as _EP
+    astr = FaultInjectingTransport(make_transport("dense"), cspec)
+
+    def corrupt_lose_async(pay, dst):
+        bk = get_backend("bcl")
+        plan = _EP(name="lose")
+        h = plan.add(pay, dst, 64, op_name="lose")
+        c = plan.commit_async(bk, transport=astr, integrity=True).finish(bk)
+        res = c.view(h)
+        return (res.valid.sum()[None], res.lost[None], res.dropped[None])
+
+    arr_a, lost_a, drp_a = jax.jit(shard_map(
+        corrupt_lose_async, mesh=mesh, in_specs=(P("bcl"),) * 2,
+        out_specs=(P("bcl"),) * 3))(lv[:, None], ld)
+    check("chaos.async_corrupt_lost_accounted",
+          int(np.asarray(lost_a)[0]) == n_lost
+          and np.array_equal(np.asarray(arr_a), np.asarray(arr))
+          and int(np.asarray(drp_a).sum()) == 0)
+
+    # heal arm, split-phase: a fused push_pop under overflow="carry" +
+    # integrity, issued via commit_async with 2 retry rounds — round 2
+    # is committed while round 1's checksums settle.  The async and
+    # sync schedules of the SAME program must agree bit-for-bit, the
+    # first shot must lose loudly (carry > 0), the re-push must heal
+    # (carry2 == 0), and drain + pops must recover the full multiset.
+    def heal_pair(split):
+        ptr = FaultInjectingTransport(make_transport("dense"), cspec)
+
+        def body(vals_, dst):
+            bk = get_backend("bcl")
+            qspec, qst = q.queue_create(bk, 1024, SDS((), jnp.uint32),
+                                        circular=True)
+
+            def pp(st, valid):
+                if split:
+                    return q.push_pop(
+                        bk, qspec, st, vals_, dst, 64, 8, 0, valid=valid,
+                        max_rounds=2, overflow="carry", transport=ptr,
+                        integrity=True, async_=True).finish()
+                return q.push_pop(
+                    bk, qspec, st, vals_, dst, 64, 8, 0, valid=valid,
+                    max_rounds=2, overflow="carry", transport=ptr,
+                    integrity=True)
+
+            qst, _, _, out1, got1, carry = pp(qst, None)
+            qst, _, _, out2, got2, carry2 = pp(qst, carry)
+            rows, got = q.local_drain(qspec, qst)
+            return (carry.sum()[None], carry2.sum()[None], rows, got,
+                    out1, got1, out2, got2)
+
+        return jax.jit(shard_map(body, mesh=mesh, in_specs=(P("bcl"),) * 2,
+                                 out_specs=(P("bcl"),) * 8))(lv, ld)
+
+    hp_sync = heal_pair(False)
+    hp_async = heal_pair(True)
+    recovered = np.concatenate(
+        [np.asarray(hp_async[2])[np.asarray(hp_async[3])],
+         np.asarray(hp_async[4])[np.asarray(hp_async[5])],
+         np.asarray(hp_async[6])[np.asarray(hp_async[7])]])
+    check("chaos.async_corrupt_carry_heals",
+          all(np.array_equal(np.asarray(a), np.asarray(b))
+              for a, b in zip(hp_sync, hp_async))
+          and int(np.asarray(hp_async[0]).sum()) > 0
+          and int(np.asarray(hp_async[1]).sum()) == 0
+          and sorted(recovered.tolist()) == sorted(np.asarray(lv).tolist()))
 
     print("ALL SPMD CHECKS PASSED")
 

@@ -116,6 +116,60 @@ def test_lm_moe_skew_arm_smoke(capsys):
     assert int(retry_row.split(",")[6]) > 1
 
 
+def test_micro_async_arms_smoke(capsys):
+    """The --async arms (DESIGN.md section 1.9): the split-phase rows
+    carry overlap_launches > 0 while every other cost column (including
+    collectives/bytes/hops) matches the sync row exactly — the
+    charge-once-at-wait attribution rule, checked end to end through
+    the CSV schema."""
+    from benchmarks import micro_hashmap, micro_queue
+    from benchmarks.util import HEADER
+    ncols = len(HEADER.split(","))
+    rq = micro_queue.run(smoke=True, async_=True)
+    assert rq["cq_push_pop_sync"] > 0 and rq["cq_push_pop_async"] > 0
+    rh = micro_hashmap.run(smoke=True, async_=True)
+    assert rh["hashmap_find_insert_sync"] > 0
+    assert rh["hashmap_find_insert_async"] > 0
+    rows = [ln for ln in capsys.readouterr().out.strip().splitlines()
+            if "," in ln]
+    for ln in rows:
+        assert len(ln.split(",")) == ncols, ln
+    for sync_tag, async_tag in (
+            ("cq_push_pop_sync", "cq_push_pop_async"),
+            ("hashmap_find_insert_sync", "hashmap_find_insert_async")):
+        s = [ln.split(",") for ln in rows
+             if ln.startswith(sync_tag + ",")][0]
+        a = [ln.split(",") for ln in rows
+             if ln.startswith(async_tag + ",")][0]
+        # collectives, bytes, rounds, hops, lost, unreachable all equal
+        for i in (2, 3, 4, 8, 9, 11):
+            assert s[i] == a[i], (sync_tag, i, s[i], a[i])
+        assert s[12] == "0", s          # sync arm defers nothing
+        assert int(a[12]) > 0, a        # async arm reports its deferrals
+
+
+def test_lm_moe_async_arm_smoke(capsys):
+    """The lm_step --async arm: split-phase MoE dispatch overlaps the
+    wire (overlap_launches > 0) with cost totals equal to the sync arm
+    (ISSUE acceptance: lm_step --async)."""
+    from benchmarks import lm_step
+    from benchmarks.util import HEADER
+    ncols = len(HEADER.split(","))
+    results = {}
+    lm_step._moe_async_arm(results, smoke=True)
+    assert results["lm_moe_dispatch_async_overlap"] > 0
+    assert results["lm_moe_dispatch_sync_overlap"] == 0
+    rows = [ln for ln in capsys.readouterr().out.strip().splitlines()
+            if ln.startswith("lm_moe_dispatch_")]
+    assert len(rows) == 2
+    s = [ln.split(",") for ln in rows if "_sync," in ln][0]
+    a = [ln.split(",") for ln in rows if "_async," in ln][0]
+    assert len(s) == ncols and len(a) == ncols
+    for i in (2, 3, 4, 8, 9, 11):
+        assert s[i] == a[i], (i, s[i], a[i])
+    assert s[12] == "0" and int(a[12]) > 0
+
+
 def test_micro_faults_arms_smoke(capsys):
     """The --faults arms (DESIGN.md section 1.8): seeded corruption under
     the integrity checksum loses items (never silently), the carry /

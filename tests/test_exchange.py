@@ -72,6 +72,31 @@ def test_cost_recording():
     assert c.rounds == 1 and c.bytes_out == c.bytes_moved and c.bytes_in == 0
 
 
+def test_reply_rejects_non_dense_transport():
+    """The standalone reply is the dense inverse permutation; a flow
+    routed hierarchically must reply through CommittedPlan.finish (which
+    holds the transport's inverse hop state) — asking the one-shot
+    helper for it is an error that NAMES the op, never a silent
+    mis-permutation."""
+    bk = get_backend(None)
+    pay = jnp.arange(8, dtype=jnp.uint32)
+    res = route(bk, pay, jnp.zeros(8, jnp.int32), capacity=8)
+    with pytest.raises(ValueError, match="reply\\('myop'\\)"):
+        reply(bk, res, res.payload[:, 0], orig_n=8, op_name="myop",
+              transport="hier")
+
+
+def test_reply_explicit_dense_transport_matches_default():
+    bk = get_backend(None)
+    pay = jnp.arange(16, dtype=jnp.uint32)
+    res = route(bk, pay, jnp.zeros(16, jnp.int32), capacity=16)
+    out_d, ans_d = reply(bk, res, res.payload[:, 0] * 7, orig_n=16)
+    out_e, ans_e = reply(bk, res, res.payload[:, 0] * 7, orig_n=16,
+                         transport="dense")
+    assert np.array_equal(np.asarray(out_d), np.asarray(out_e))
+    assert np.array_equal(np.asarray(ans_d), np.asarray(ans_e))
+
+
 def test_capacity_heuristic():
     assert exchange_capacity(1024, 1) == 1024
     c = exchange_capacity(1024, 16)

@@ -95,6 +95,41 @@ def test_no_unused_locals():
     assert not findings, "\n".join(findings)
 
 
+#: the physical collective layer (DESIGN.md sections 1.7/1.9): only the
+#: transport implementations, the backend itself, and the fault-injection
+#: wrapper may launch the raw all-to-all — everything else goes through
+#: Transport.request/request_start so split-phase scheduling, fault
+#: injection, and cost attribution stay layered.
+_ALL_TO_ALL_ALLOWED = {
+    "src/repro/core/transport.py",
+    "src/repro/core/backend.py",
+    "src/repro/core/faults.py",
+}
+
+
+def test_no_raw_all_to_all_outside_transport():
+    """Layering rule: no ``<obj>.all_to_all(...)`` call outside the
+    physical collective layer.  The standalone ``exchange.reply`` used
+    to hold the last such call; it now rides ``DenseTransport.reply``,
+    so a new direct launch is a layering regression."""
+    findings = []
+    for path in _py_files():
+        rel = str(path.relative_to(_ROOT))
+        if rel in _ALL_TO_ALL_ALLOWED:
+            continue
+        tree = ast.parse(path.read_text(), filename=str(path))
+        for node in ast.walk(tree):
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "all_to_all"):
+                findings.append(
+                    f"{rel}:{node.lineno}: direct all_to_all launch "
+                    "outside core/transport.py (route it through "
+                    "Transport.request / request_start)")
+    assert not findings, "\n".join(findings)
+
+
 if __name__ == "__main__":
     test_no_unused_locals()
+    test_no_raw_all_to_all_outside_transport()
     print("lint fallback clean", file=sys.stderr)

@@ -295,6 +295,65 @@ def test_hierarchical_transport_equals_dense_over_flow_mixes(data):
         assert np.array_equal(np.asarray(ad), np.asarray(ah))
 
 
+@given(st.data())
+@settings(max_examples=10, deadline=None)
+def test_commit_async_equals_sync_over_flow_mixes(data):
+    """Split-phase commit_async -> finish == synchronous commit == the
+    Promise.FINE sequential oracle over random flow mixes (1-4 flows,
+    lane widths 1..4, reply widths 0..3, carryover retry rounds 1..3)
+    on BOTH physical transports — owner views, replies, answered masks,
+    and per-flow drop counts are all bit-identical, so deferring the
+    wait is pure scheduling, never a semantic change (DESIGN.md
+    section 1.9).  FINE + async stays the sequential oracle (run
+    eagerly, wrapped in a degenerate pending)."""
+    bk = get_backend(None)
+    nflows = data.draw(st.integers(1, 4), label="nflows")
+    rounds = data.draw(st.integers(1, 3), label="rounds")
+    transport = data.draw(st.sampled_from(["dense", "hier"]),
+                          label="transport")
+    flows = []
+    for i in range(nflows):
+        n = data.draw(st.integers(1, 16), label=f"n{i}")
+        lanes = data.draw(st.integers(1, 4), label=f"lanes{i}")
+        cap = data.draw(st.integers(1, n + 4), label=f"cap{i}")
+        rl = data.draw(st.integers(0, 3), label=f"rl{i}")
+        pay = jnp.asarray(
+            data.draw(st.lists(st.integers(0, 1 << 19),
+                               min_size=n * lanes, max_size=n * lanes),
+                      label=f"pay{i}"), jnp.uint32).reshape(n, lanes)
+        valid = jnp.asarray(
+            data.draw(st.lists(st.booleans(), min_size=n, max_size=n),
+                      label=f"valid{i}"))
+        flows.append((pay, valid, cap, rl))
+
+    def run(promise, async_):
+        plan = ExchangePlan(promise=promise, name="mix")
+        hs = [plan.add(p, jnp.zeros(p.shape[0], jnp.int32), cap,
+                       reply_lanes=rl, valid=v, op_name=f"f{i}")
+              for i, (p, v, cap, rl) in enumerate(flows)]
+        if async_:
+            c = plan.commit_async(bk, max_rounds=rounds,
+                                  transport=transport).finish(bk)
+        else:
+            c = plan.commit(bk, max_rounds=rounds, transport=transport)
+        for h, (p, v, cap, rl) in zip(hs, flows):
+            if rl:
+                c.set_reply(h, jnp.tile(
+                    c.view(h).payload[:, :1] * 3 + h + 1, (1, rl)))
+        fin = c.finish(bk)
+        return ([tuple(c.view(h)) for h in hs], sorted(fin.items()))
+
+    sync = run(Promise.NONE, False)
+    asyn = run(Promise.NONE, True)
+    fine = run(Promise.FINE, True)
+    for other in (sync, fine):
+        assert _tree_equal(asyn[0], other[0])
+        for (ha, (oa, aa)), (ho, (oo, ao)) in zip(asyn[1], other[1]):
+            assert ha == ho
+            assert np.array_equal(np.asarray(oa), np.asarray(oo))
+            assert np.array_equal(np.asarray(aa), np.asarray(ao))
+
+
 @given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=2,
                 max_size=64))
 @settings(max_examples=20, deadline=None)
