@@ -27,6 +27,13 @@ checksum, re-sends the unacked inserts over a clean wire, and probes a
 degraded commit; the lost_bytes / recovered / unreachable columns
 report the loss, the heal, and the dead-rank mask.
 
+The ``--wire {scatter,fused}`` arm re-runs every variant with the
+send-buffer construction pinned (DESIGN.md section 1.10): ``scatter``
+forces the two-pass scatter_rows fallback, ``fused`` the one-kernel
+Pallas pack; rows gain the suffix and the hbm_passes column reports the
+traced call's standalone scatter-op count (strictly fewer when fused,
+identical bytes/collectives).
+
 Reported as microseconds per operation (amortized over the batch) plus
 the collective/bytes/rounds observables and rounds_per_op, so the
 paper's relative claims (buffer >> insert; find 2-3x over find_atomic)
@@ -41,7 +48,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax import ShapeDtypeStruct as SDS
 
-from benchmarks.util import emit, resolve_transport, time_fn, trace_costs
+from benchmarks.util import (count_hbm_passes, emit, resolve_transport,
+                             resolve_wire, time_fn, trace_costs)
 from repro.core import ConProm, Promise, get_backend
 from repro.containers import hashmap as hm
 from repro.containers import hashmap_buffer as hb
@@ -53,8 +61,10 @@ WAVES = 8                      # fine-grained ops issue per-wave
 
 def run(smoke: bool = False, fused: bool = False, skew: str = "none",
         transport: str = "dense", faults: bool = False,
-        async_: bool = False):
+        async_: bool = False, wire: str = "auto"):
     tr, sfx = resolve_transport(transport)
+    impl, wsfx = resolve_wire(wire)
+    sfx = sfx + wsfx
     n_ops = 1 << 8 if smoke else N_OPS
     table = 1 << 11 if smoke else TABLE
     bk = get_backend(None)
@@ -63,13 +73,16 @@ def run(smoke: bool = False, fused: bool = False, skew: str = "none",
     vals = keys * 3 + 1
     results = {}
     obs = {}
+    passes = {}
 
     def fresh():
         return hm.hashmap_create(bk, table, SDS((), jnp.uint32),
-                                 SDS((), jnp.uint32), block_size=64)
+                                 SDS((), jnp.uint32), block_size=64,
+                                 impl=impl)
 
     def bench(tag, fn, *args):
         obs[tag] = trace_costs(fn, *args)
+        passes[tag] = count_hbm_passes(fn, *args)
         results[tag] = time_fn(fn, *args) / n_ops * 1e6
 
     # --- insert (fully atomic), issued in WAVES batches ---
@@ -274,17 +287,22 @@ def run(smoke: bool = False, fused: bool = False, skew: str = "none",
              unreachable=int(flog.total().unreachable))
 
     emit("hashmap_insert" + sfx, results["hashmap_insert"], "2A+W",
-         cost=obs["hashmap_insert"], n_ops=n_ops)
+         cost=obs["hashmap_insert"], n_ops=n_ops,
+         hbm_passes=passes["hashmap_insert"])
     emit("hashmap_insert_buffer" + sfx, results["hashmap_insert_buffer"],
          f"speedup={results['hashmap_insert'] / results['hashmap_insert_buffer']:.2f}x",
-         cost=obs["hashmap_insert_buffer"], n_ops=n_ops)
+         cost=obs["hashmap_insert_buffer"], n_ops=n_ops,
+         hbm_passes=passes["hashmap_insert_buffer"])
     emit("hashmap_find_atomic" + sfx, results["hashmap_find_atomic"], "2A+R",
-         cost=obs["hashmap_find_atomic"], n_ops=n_ops)
+         cost=obs["hashmap_find_atomic"], n_ops=n_ops,
+         hbm_passes=passes["hashmap_find_atomic"])
     emit("hashmap_find" + sfx, results["hashmap_find"],
          f"speedup={results['hashmap_find_atomic'] / results['hashmap_find']:.2f}x",
-         cost=obs["hashmap_find"], n_ops=n_ops)
+         cost=obs["hashmap_find"], n_ops=n_ops,
+         hbm_passes=passes["hashmap_find"])
     emit("hashmap_find_2attempt" + sfx, results["hashmap_find_2attempt"],
-         "2 rounds/wave", cost=obs["hashmap_find_2attempt"], n_ops=n_ops)
+         "2 rounds/wave", cost=obs["hashmap_find_2attempt"], n_ops=n_ops,
+         hbm_passes=passes["hashmap_find_2attempt"])
     if fused:
         emit("hashmap_find_insert_fused" + sfx, results["hashmap_find_insert_fused"],
              "2 collectives/round-trip",

@@ -40,6 +40,14 @@ modules that have them: the same ops issued via commit_async, completed
 via finish after an overlap window — the overlap_launches column counts
 the deferred launches while every other cost column matches the sync
 row (the charge-once-at-wait attribution rule).
+
+``--wire {scatter,fused}`` pins the send-buffer construction path
+(DESIGN.md section 1.10) on the modules that have wire arms: ``scatter``
+forces the documented scatter_rows fallback (impl="jnp"), ``fused`` the
+one-kernel Pallas pack (impl="pallas"); rows are suffixed ``_scatter`` /
+``_fused`` and the hbm_passes column reports the traced call's
+standalone scatter-op count — fewer on the fused path, same bytes and
+collectives everywhere.
 """
 
 from __future__ import annotations
@@ -80,6 +88,13 @@ def main() -> None:
         if transport not in ("dense", "hier"):
             sys.exit(f"--transport takes dense or hier, got {transport!r}")
         del args[i:i + 2]
+    wire = "auto"
+    if "--wire" in args:
+        i = args.index("--wire")
+        wire = args[i + 1] if i + 1 < len(args) else ""
+        if wire not in ("scatter", "fused"):
+            sys.exit(f"--wire takes scatter or fused, got {wire!r}")
+        del args[i:i + 2]
     args = [a for a in args if a not in ("--smoke", "--fused", "--faults", "--async")]
     only = args[0] if args else None
     print(HEADER)
@@ -100,15 +115,19 @@ def main() -> None:
             kw["faults"] = True
         if async_ and "async_" in params:
             kw["async_"] = True
+        if wire != "auto" and "wire" in params:
+            kw["wire"] = wire
         try:
             if smoke and "smoke" not in params:
-                print(f"{name},SKIPPED,,,,,,,,,,,,no smoke mode yet")
+                print(f"{name},SKIPPED,,,,,,,,,,,,,no smoke mode yet")
             elif transport != "dense" and "transport" not in params:
-                print(f"{name},SKIPPED,,,,,,,,,,,,no transport arm yet")
+                print(f"{name},SKIPPED,,,,,,,,,,,,,no transport arm yet")
+            elif wire != "auto" and "wire" not in params:
+                print(f"{name},SKIPPED,,,,,,,,,,,,,no wire arm yet")
             else:
                 mod.run(**kw)
         except Exception as e:  # keep the harness going; report the row
-            print(f"{name},ERROR,,,,,,,,,,,,{type(e).__name__}: {e}")
+            print(f"{name},ERROR,,,,,,,,,,,,,{type(e).__name__}: {e}")
 
 
 if __name__ == "__main__":

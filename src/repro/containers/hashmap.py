@@ -166,9 +166,6 @@ def insert(backend: Backend, spec: HashMapSpec, state: HashMapState,
                         transport=transport, dead_ranks=dead_ranks,
                         integrity=integrity)
         res = c.view(h)
-        rb = jnp.where(res.valid, res.payload[:, 0].astype(_I32), 0)
-        rk = res.payload[:, 1:1 + spec.key_packer.lanes]
-        rv = res.payload[:, 1 + spec.key_packer.lanes:]
 
         tk, tv, st = new_state
         if atomic:
@@ -176,10 +173,12 @@ def insert(backend: Backend, spec: HashMapSpec, state: HashMapState,
             # machine is owner-serialized here, but we execute the reserve
             # pass so its traffic is real: a net-zero RMW on the status
             # word of every touched block.
+            rb = jnp.where(res.valid, res.payload[:, 0].astype(_I32), 0)
             st = st.at[rb].add(_READ_BIT, mode="drop")
             st = st.at[rb].add(_U32(0) - _READ_BIT, mode="drop")
-        tk, tv, st, ok_here = kops.bulk_insert(
-            tk, tv, st, rb, rk, rv, res.valid, mode, impl=spec.impl)
+        # the arrival segment feeds the probe directly (DESIGN.md §1.10)
+        tk, tv, st, ok_here = kops.bulk_insert_arrivals(
+            tk, tv, st, res.payload, res.valid, mode, impl=spec.impl)
         new_state = HashMapState(tk, tv, st)
 
         if rl:
@@ -233,16 +232,14 @@ def _find_speculative(backend: Backend, spec: HashMapSpec,
                     integrity=integrity)
     v0, v1 = c.view(h0), c.view(h1)
 
-    rb = jnp.concatenate([
-        jnp.where(v0.valid, v0.payload[:, 0].astype(_I32), 0),
-        jnp.where(v1.valid, v1.payload[:, 0].astype(_I32), 0)])
-    rk = jnp.concatenate([v0.payload[:, 1:], v1.payload[:, 1:]])
+    seg = jnp.concatenate([v0.payload, v1.payload])
     rvalid = jnp.concatenate([v0.valid, v1.valid])
     tk, tv, st = state
     if atomic:
+        rb = jnp.where(rvalid, seg[:, 0].astype(_I32), 0)
         st = st.at[rb].add(_READ_BIT, mode="drop")
-    found_here, vlanes = kops.bulk_find(tk, tv, st, rb, rk, rvalid,
-                                        impl=spec.impl)
+    found_here, vlanes = kops.bulk_find_arrivals(tk, tv, st, seg, rvalid,
+                                                 impl=spec.impl)
     if atomic:
         st = st.at[rb].add(_U32(0) - _READ_BIT, mode="drop")
         state = HashMapState(tk, tv, st)
@@ -326,14 +323,14 @@ def find(backend: Backend, spec: HashMapSpec, state: HashMapState,
                         transport=transport, dead_ranks=dead_ranks,
                         integrity=integrity)
         res = c.view(h)
-        rb = jnp.where(res.valid, res.payload[:, 0].astype(_I32), 0)
-        rk = res.payload[:, 1:]
         tk, tv, st = state
         if atomic:
             # fetch-and-or a read bit, read, fetch-and-and it away
+            rb = jnp.where(res.valid, res.payload[:, 0].astype(_I32), 0)
             st = st.at[rb].add(_READ_BIT, mode="drop")
-        found_here, vlanes = kops.bulk_find(tk, tv, st, rb, rk, res.valid,
-                                            impl=spec.impl)
+        found_here, vlanes = kops.bulk_find_arrivals(tk, tv, st, res.payload,
+                                                     res.valid,
+                                                     impl=spec.impl)
         if atomic:
             st = st.at[rb].add(_U32(0) - _READ_BIT, mode="drop")
             state = HashMapState(tk, tv, st)
@@ -456,26 +453,25 @@ def _find_insert_complete(backend, spec, state, c, hf, hi, lk,
     synchronous and the split-phase path complete through here)."""
     vf, vw = c.view(hf), c.view(hi)
 
-    # find against the pre-insert table (the chosen serialization)
-    rb_f = jnp.where(vf.valid, vf.payload[:, 0].astype(_I32), 0)
-    rk_f = vf.payload[:, 1:]
+    # find against the pre-insert table (the chosen serialization); both
+    # owner-side probes consume their arrival segments directly
     tk, tv, st = state
     if find_atomic:
+        rb_f = jnp.where(vf.valid, vf.payload[:, 0].astype(_I32), 0)
         st = st.at[rb_f].add(_READ_BIT, mode="drop")
-    found_here, vlanes = kops.bulk_find(tk, tv, st, rb_f, rk_f, vf.valid,
-                                        impl=spec.impl)
+    found_here, vlanes = kops.bulk_find_arrivals(tk, tv, st, vf.payload,
+                                                 vf.valid, impl=spec.impl)
     if find_atomic:
         st = st.at[rb_f].add(_U32(0) - _READ_BIT, mode="drop")
 
     # insert (same reserve dance as the standalone op)
-    rb_i = jnp.where(vw.valid, vw.payload[:, 0].astype(_I32), 0)
-    rk_i = vw.payload[:, 1:1 + lk]
-    rv_i = vw.payload[:, 1 + lk:]
     if ins_atomic:
+        rb_i = jnp.where(vw.valid, vw.payload[:, 0].astype(_I32), 0)
         st = st.at[rb_i].add(_READ_BIT, mode="drop")
         st = st.at[rb_i].add(_U32(0) - _READ_BIT, mode="drop")
-    tk, tv, st, ok_here = kops.bulk_insert(tk, tv, st, rb_i, rk_i, rv_i,
-                                           vw.valid, mode, impl=spec.impl)
+    tk, tv, st, ok_here = kops.bulk_insert_arrivals(tk, tv, st, vw.payload,
+                                                    vw.valid, mode,
+                                                    impl=spec.impl)
     state = HashMapState(tk, tv, st)
 
     c.set_reply(hf, jnp.concatenate(

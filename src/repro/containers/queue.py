@@ -90,7 +90,8 @@ def push(backend: Backend, spec: QueueSpec, state: QueueState,
          overflow: str = "drop",
          transport=None,
          dead_ranks=None,
-         integrity: bool = False):
+         integrity: bool = False,
+         impl: str = "auto"):
     """Push each value to the ring hosted on ``dest[i]``.
 
     Returns (state, pushed_here, dropped):
@@ -114,8 +115,8 @@ def push(backend: Backend, spec: QueueSpec, state: QueueState,
     4-tuple contract straight from its local accept mask, with zero
     collectives.
 
-    ``dead_ranks``/``integrity`` pass straight to
-    :meth:`ExchangePlan.commit` (DESIGN.md section 1.8): items bound for
+    ``dead_ranks``/``integrity``/``impl`` pass straight to
+    :meth:`ExchangePlan.commit` (DESIGN.md sections 1.8/1.10): items bound for
     a dead rank are masked at admission (reappearing in ``carry`` so a
     caller can re-target them), and with ``integrity=True`` arrivals
     whose wire segment fails its checksum are invalidated — under
@@ -145,8 +146,9 @@ def push(backend: Backend, spec: QueueSpec, state: QueueState,
         plan = ExchangePlan(name="queue.push")
         h = plan.add(lanes, dest, capacity, reply_lanes=1, valid=valid,
                      op_name="queue.push")
-        c = plan.commit(backend, max_rounds=max_rounds, transport=transport,
-                        dead_ranks=dead_ranks, integrity=integrity)
+        c = plan.commit(backend, impl=impl, max_rounds=max_rounds,
+                        transport=transport, dead_ranks=dead_ranks,
+                        integrity=integrity)
         res = c.view(h)
         state, pushed, _, accept = _append(spec, state, res.payload,
                                            res.valid)
@@ -158,7 +160,7 @@ def push(backend: Backend, spec: QueueSpec, state: QueueState,
         return state, pushed, jnp.int32(0), valid & ~landed
 
     res = route(backend, lanes, dest, capacity, valid=valid,
-                op_name="queue.push", max_rounds=max_rounds,
+                op_name="queue.push", impl=impl, max_rounds=max_rounds,
                 transport=transport, dead_ranks=dead_ranks,
                 integrity=integrity)
     state, pushed, full_drop, _ = _append(spec, state, res.payload,
@@ -230,7 +232,8 @@ def pop(backend: Backend, spec: QueueSpec, state: QueueState,
         max_rounds: int = 1,
         transport=None,
         dead_ranks=None,
-        integrity: bool = False):
+        integrity: bool = False,
+        impl: str = "auto"):
     """Pop up to ``n`` items from the ring hosted on rank ``src``.
 
     Every rank issues its own request; the owner grants ranges in
@@ -249,8 +252,9 @@ def pop(backend: Backend, spec: QueueSpec, state: QueueState,
     plan = ExchangePlan(name="queue.pop")
     h = plan.add(jnp.zeros((n, 1), _U32), src, n,
                  reply_lanes=spec.lanes + 1, op_name="queue.pop")
-    c = plan.commit(backend, max_rounds=max_rounds, transport=transport,
-                    dead_ranks=dead_ranks, integrity=integrity)
+    c = plan.commit(backend, impl=impl, max_rounds=max_rounds,
+                    transport=transport, dead_ranks=dead_ranks,
+                    integrity=integrity)
     req = c.view(h)
     new, body = _grant(spec, state, req.valid, promise)
     c.set_reply(h, body)
@@ -272,7 +276,8 @@ def push_pop(backend: Backend, spec: QueueSpec, state: QueueState,
              transport=None,
              dead_ranks=None,
              integrity: bool = False,
-             async_: bool = False):
+             async_: bool = False,
+             impl: str = "auto"):
     """Fused push + pop sharing ONE exchange round trip.
 
     Under ``ConProm.CircularQueue.push_pop`` the two ops are promised
@@ -312,7 +317,7 @@ def push_pop(backend: Backend, spec: QueueSpec, state: QueueState,
                         src, valid=valid, promise=promise,
                         max_rounds=max_rounds, overflow=overflow,
                         transport=transport, dead_ranks=dead_ranks,
-                        integrity=integrity)
+                        integrity=integrity, impl=impl)
         return PendingResult(lambda: sync)
     if fine_grained(promise):
         if overflow == "carry":
@@ -320,21 +325,22 @@ def push_pop(backend: Backend, spec: QueueSpec, state: QueueState,
                 backend, spec, state, values, dest, capacity, valid=valid,
                 promise=promise, max_rounds=max_rounds, overflow="carry",
                 transport=transport, dead_ranks=dead_ranks,
-                integrity=integrity)
+                integrity=integrity, impl=impl)
             state, out, got = pop(backend, spec, state, n, src,
                                   promise=promise, max_rounds=max_rounds,
                                   transport=transport, dead_ranks=dead_ranks,
-                                  integrity=integrity)
+                                  integrity=integrity, impl=impl)
             return state, pushed, dropped, out, got, carry
         state, pushed, dropped = push(backend, spec, state, values, dest,
                                       capacity, valid=valid, promise=promise,
                                       max_rounds=max_rounds,
                                       transport=transport,
                                       dead_ranks=dead_ranks,
-                                      integrity=integrity)
+                                      integrity=integrity, impl=impl)
         state, out, got = pop(backend, spec, state, n, src, promise=promise,
                               max_rounds=max_rounds, transport=transport,
-                              dead_ranks=dead_ranks, integrity=integrity)
+                              dead_ranks=dead_ranks, integrity=integrity,
+                              impl=impl)
         return state, pushed, dropped, out, got
 
     lanes = spec.packer.pack(values)
@@ -350,14 +356,15 @@ def push_pop(backend: Backend, spec: QueueSpec, state: QueueState,
     hq = plan.add(jnp.zeros((n, 1), _U32), src, n,
                   reply_lanes=spec.lanes + 1, op_name="queue.pop")
     if async_:
-        pend = plan.commit_async(backend, max_rounds=max_rounds,
+        pend = plan.commit_async(backend, impl=impl, max_rounds=max_rounds,
                                  transport=transport, dead_ranks=dead_ranks,
                                  integrity=integrity)
         return PendingResult(lambda: _push_pop_complete(
             backend, spec, state, pend.finish(backend), hp, hq, valid,
             promise, carrying, nv, n))
-    c = plan.commit(backend, max_rounds=max_rounds, transport=transport,
-                    dead_ranks=dead_ranks, integrity=integrity)
+    c = plan.commit(backend, impl=impl, max_rounds=max_rounds,
+                    transport=transport, dead_ranks=dead_ranks,
+                    integrity=integrity)
     return _push_pop_complete(backend, spec, state, c, hp, hq, valid,
                               promise, carrying, nv, n)
 

@@ -508,12 +508,16 @@ class ExchangePlan:
             sl_f = jnp.where(okf,
                              f.dest * cap_e + offsets[row0:row0 + f.n],
                              nprocs * cap_e).astype(_I32)
-            send_items.append(jnp.full((nprocs * cap_e,), f.n, _I32)
-                              .at[sl_f].set(jnp.arange(f.n, dtype=_I32),
-                                            mode="drop"))
-            send_occs.append(jnp.zeros((nprocs * cap_e,), bool)
-                             .at[sl_f].set(jnp.ones((f.n,), bool),
-                                           mode="drop"))
+            # 1-lane in-kernel scatters (kops.place_rows): commit traces
+            # zero standalone XLA scatter ops (DESIGN.md section 1.10);
+            # values are < 2**31 so the u32 round trip is exact
+            send_items.append(kops.place_rows(
+                jnp.full((nprocs * cap_e,), f.n, _U32), sl_f,
+                jnp.arange(f.n, dtype=_U32)[:, None],
+                impl=impl).astype(_I32))
+            send_occs.append(kops.place_rows(
+                jnp.zeros((nprocs * cap_e,), _U32), sl_f,
+                jnp.ones((f.n, 1), _U32), impl=impl) != 0)
             row0 += f.n
 
         # physical movement: the transport owns the launches, the wire
@@ -1007,7 +1011,7 @@ def reply(backend: Backend,
     spec = FlowWire(req.capacity, 1, lanes + 1, lanes, orig_n, op_name)
     staged = {0: jnp.where(req.valid[:, None],
                            reply_payload.astype(_U32), 0)}
-    back = tr.reply(backend, _DenseCtx([spec], op_name), staged)[0]
+    back = tr.reply(backend, _DenseCtx([spec], op_name, "auto"), staged)[0]
 
     # back[k] answers the item this rank placed in send slot k of the
     # original route call

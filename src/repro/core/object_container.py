@@ -97,17 +97,26 @@ def ragged_offsets(widths) -> tuple[list[int], int]:
     return starts, off
 
 
-def scatter_rows(flat: jax.Array, base: jax.Array,
-                 rows: jax.Array) -> jax.Array:
+def scatter_rows(flat: jax.Array, base: jax.Array, rows: jax.Array,
+                 widths: jax.Array | None = None) -> jax.Array:
     """Pack (N, W) u32 rows into a flat word buffer at per-row offsets.
 
     Row ``i`` lands at words ``[base[i], base[i] + W)``; a sentinel
     ``base[i] >= flat.size`` drops the row.  This is the ragged wire's
-    serializer: rows of different flows have different widths, so each
-    flow packs with its own call instead of one rectangular scatter.
+    serializer and the declared fallback/oracle for the fused Pallas
+    wire (``kernels/ops.pack_rows`` — DESIGN.md section 1.10): the hot
+    path packs in-kernel, this XLA scatter stays as the jnp reference.
+
+    With ``widths`` (per-row word counts <= W), lanes past ``widths[i]``
+    are dropped — one rectangular call packs right-padded rows of mixed
+    flow widths bit-identically to per-flow calls on disjoint slots.
     """
     w = rows.shape[1]
-    idx = base[:, None] + jnp.arange(w, dtype=base.dtype)[None, :]
+    lane = jnp.arange(w, dtype=base.dtype)[None, :]
+    idx = base[:, None] + lane
+    if widths is not None:
+        idx = jnp.where(lane < widths[:, None].astype(base.dtype), idx,
+                        flat.shape[0])
     return flat.at[idx].set(rows.astype(_U32), mode="drop")
 
 

@@ -67,7 +67,7 @@ import jax.numpy as jnp
 
 from repro.core import costs
 from repro.core.backend import Backend
-from repro.core.object_container import ragged_offsets, scatter_rows
+from repro.core.object_container import ragged_offsets
 from repro.kernels import ops as kops
 
 _U32 = jnp.uint32
@@ -188,10 +188,23 @@ class Transport(abc.ABC):
 # dense: one-shot tiled all-to-all over the full rank axis
 # ---------------------------------------------------------------------------
 
+def _pad_rows(mats: list[jax.Array], wmax: int) -> jax.Array:
+    """Right-pad per-flow row matrices to one (N, wmax) u32 matrix.
+
+    The fused wire kernel (``kops.pack_rows``) takes all flows' rows in
+    item order with each flow using its own first ``roww_f`` lanes; the
+    pad lanes never reach the wire (the kernel masks ``lane < roww_f``).
+    """
+    return jnp.concatenate(
+        [m if m.shape[1] == wmax else jnp.pad(m, ((0, 0), (0, wmax - m.shape[1])))
+         for m in mats], axis=0).astype(_U32)
+
+
 @dataclasses.dataclass
 class _DenseCtx:
     specs: list[FlowWire]
     plan_op: str
+    impl: str
 
 
 class DenseTransport(Transport):
@@ -217,9 +230,13 @@ class DenseTransport(Transport):
 
         # round r's all-to-all carries only the flows still retrying at
         # r, each in its own ragged word segment of this round's
-        # (narrower) wire; the kernel turns the ONE binning pass's ranks
-        # into word slots for the items whose rank lands in the round's
-        # capacity window, and each flow packs its own row width
+        # (narrower) wire; the fused kernel turns the ONE binning pass's
+        # ranks into word slots AND packs the rows in the same pass
+        # (items outside the round's capacity window, and flows done
+        # retrying, drop at the sentinel) — one HBM write of the wire
+        # per launch (DESIGN.md §1.10)
+        wmax = max(s.roww for s in specs)
+        rows_all = _pad_rows(args.bodies, wmax)
         recvs, woffs_by_round = [], []
         for r in range(nrounds):
             live = [fi for fi in range(nflows) if specs[fi].rounds > r]
@@ -228,17 +245,10 @@ class DenseTransport(Transport):
             woff_map = dict(zip(live, starts))
             woff_round = jnp.asarray(
                 [woff_map.get(fi, 0) for fi in range(nflows)], _I32)
-            slot_w = kops.ragged_slots(
-                args.dest, args.flow_id, args.offsets, args.valid, r,
-                woff_round, roww_arr, caps_arr, rounds_arr, w_r,
+            send = kops.pack_rows(
+                rows_all, args.dest, args.flow_id, args.offsets, args.valid,
+                r, woff_round, roww_arr, caps_arr, rounds_arr, w_r,
                 nprocs * w_r, impl=args.impl)
-            send = jnp.zeros((nprocs * w_r,), _U32)
-            row0 = 0
-            for fi, s in enumerate(specs):
-                if s.rounds > r:
-                    send = scatter_rows(send, slot_w[row0:row0 + s.n],
-                                        args.bodies[fi])
-                row0 += s.n
             recvs.append(backend.all_to_all(send).reshape(nprocs, w_r))
             woffs_by_round.append(woff_map)
 
@@ -273,7 +283,7 @@ class DenseTransport(Transport):
         for _ in range(nrounds - 1):
             costs.record(f"{args.plan_op}.retry",
                          costs.Cost(collectives=1, rounds=1, hops=1))
-        return segments, None, _DenseCtx(specs, args.plan_op)
+        return segments, None, _DenseCtx(specs, args.plan_op, args.impl)
 
     def reply(self, backend, ctx, staged):
         specs = ctx.specs
@@ -296,7 +306,7 @@ class DenseTransport(Transport):
             # segment, exactly R_f words per reply
             ar = jnp.arange(nprocs * cap, dtype=_I32)
             base = (ar // cap) * wtot + seg_off[fi] + (ar % cap) * rl
-            send = scatter_rows(send, base, staged[fi])
+            send = kops.place_rows(send, base, staged[fi], impl=ctx.impl)
 
         back2 = backend.all_to_all(send).reshape(nprocs, wtot)
 
@@ -339,6 +349,7 @@ class _HierRound:
 class _HierCtx:
     specs: list[FlowWire]
     plan_op: str
+    impl: str
     pr: int
     pc: int
     c1: list[int]
@@ -369,6 +380,7 @@ class _HierPre:
     nrounds: int
     destcol: jax.Array
     hop1: jax.Array
+    rows1: jax.Array   # (N, max w1) right-padded stage-1 rows, hop lane last
 
 
 @dataclasses.dataclass
@@ -483,10 +495,20 @@ class HierarchicalTransport(Transport):
         # hop lane, source->relay: final dest rank | dense bucket rank o
         hop1 = ((args.dest.astype(_U32) << _HOP_SHIFT)
                 | (args.offsets.astype(_U32) & _U32(_HOP_MASK)))
+        # stage-1 rows (body + hop lane), launch-invariant: every round
+        # packs a window of the same matrix through the fused kernel
+        row0, w1max = 0, max(w1)
+        mats = []
+        for fi, s in enumerate(specs):
+            mats.append(jnp.concatenate(
+                [args.bodies[fi],
+                 hop1[row0:row0 + s.n].astype(_U32)[:, None]], axis=1))
+            row0 += s.n
+        rows1 = _pad_rows(mats, w1max)
         return _HierPre(args, pr, pc, row_groups, col_groups, myrow,
                         caps_arr, rounds_arr, w1, w1_arr, c1, c2,
                         jnp.asarray(c1, _I32), jnp.asarray(c2, _I32),
-                        nrounds, destcol, hop1)
+                        nrounds, destcol, hop1, rows1)
 
     def _stage1(self, backend, pre, r):
         """Round r's source->relay hop: bin by dest column, row a2a."""
@@ -512,19 +534,17 @@ class HierarchicalTransport(Transport):
         woff1_map = dict(zip(live, starts1))
         woff1 = jnp.asarray(
             [woff1_map.get(fi, 0) for fi in range(nflows)], _I32)
-        slot1 = kops.stage_slots(pre.destcol, fl, off1, in_round, woff1,
-                                 pre.w1_arr, pre.c1_arr, live_arr, w1r,
-                                 pc * w1r, impl=args.impl)
-        send1 = jnp.zeros((pc * w1r,), _U32)
+        # fused wire pack: the stage form is the round-0 window with the
+        # per-flow live mask as "rounds" (kops.stage_slots's contract)
+        send1 = kops.pack_rows(pre.rows1, pre.destcol, fl, off1, in_round,
+                               0, woff1, pre.w1_arr, pre.c1_arr, live_arr,
+                               w1r, pc * w1r, impl=args.impl)
         src_state = {}
         row0 = 0
         nprocs = backend.nprocs()
         for fi, s in enumerate(specs):
             sl = slice(row0, row0 + s.n)
             if s.rounds > r:
-                rows1 = jnp.concatenate(
-                    [args.bodies[fi], pre.hop1[sl][:, None]], axis=1)
-                send1 = scatter_rows(send1, slot1[sl], rows1)
                 ship1 = in_round[sl] & (off1[sl] < c1[fi])
                 r1 = jnp.where(ship1, pre.destcol[sl] * c1[fi] + off1[sl],
                                pc * c1[fi]).astype(_I32)
@@ -582,16 +602,15 @@ class HierarchicalTransport(Transport):
         woff2_map = dict(zip(live, starts2))
         woff2 = jnp.asarray(
             [woff2_map.get(fi, 0) for fi in range(nflows)], _I32)
-        slot2 = kops.stage_slots(rbins, rflow, off2, rvalid, woff2,
-                                 pre.w1_arr, pre.c2_arr, live_arr, w2r,
-                                 pr * w2r, impl=args.impl)
-        send2 = jnp.zeros((pr * w2r,), _U32)
+        send2 = kops.pack_rows(
+            _pad_rows(rel_rows, max(w1[fi] for fi in live)), rbins, rflow,
+            off2, rvalid, 0, woff2, pre.w1_arr, pre.c2_arr, live_arr, w2r,
+            pr * w2r, impl=args.impl)
         rel_state = {}
         m0 = 0
-        for k, fi in enumerate(live):
+        for fi in live:
             mfi = pc * c1[fi]
             sl = slice(m0, m0 + mfi)
-            send2 = scatter_rows(send2, slot2[sl], rel_rows[k])
             ship2 = rvalid[sl] & (off2[sl] < c2[fi])
             rel_state[fi] = jnp.where(
                 ship2, rbins[sl] * c2[fi] + off2[sl],
@@ -633,7 +652,13 @@ class HierarchicalTransport(Transport):
         extra = jnp.zeros((nflows,), _I32)
         for out in rounds:
             for fi, (dslot, rows) in out.scatters.items():
-                seg_out[fi] = seg_out[fi].at[dslot].set(rows, mode="drop")
+                # dense-slot owner scatter through the in-kernel placer:
+                # word slot = row slot * row width, sentinel rows (dslot
+                # == P * cap_e) land exactly at the buffer size and drop
+                s = specs[fi]
+                seg_out[fi] = kops.place_rows(
+                    seg_out[fi].reshape(-1), dslot * s.roww, rows,
+                    impl=args.impl).reshape(nprocs * s.cap_e, s.roww)
             extra = extra + out.extra
 
         # cost attribution: the requester-side hop under the flow's own
@@ -658,8 +683,9 @@ class HierarchicalTransport(Transport):
                          costs.Cost(collectives=2, rounds=2, hops=2))
 
         dropped = backend.psum(extra).astype(_I32)
-        ctx = _HierCtx(specs, args.plan_op, pr, pc, c1, c2, pre.row_groups,
-                       pre.col_groups, [out.rnd for out in rounds])
+        ctx = _HierCtx(specs, args.plan_op, args.impl, pr, pc, c1, c2,
+                       pre.row_groups, pre.col_groups,
+                       [out.rnd for out in rounds])
         return seg_out, dropped, ctx
 
     def request(self, backend, args):
@@ -754,7 +780,9 @@ class HierarchicalTransport(Transport):
                 rows = jnp.where(
                     in_r[:, None],
                     rep1[jnp.minimum(r1, pc * c1[fi] - 1)], 0)
-                outs[fi] = outs[fi].at[dslot].set(rows, mode="drop")
+                outs[fi] = kops.place_rows(
+                    outs[fi].reshape(-1), dslot * rl, rows,
+                    impl=ctx.impl).reshape(nprocs * s.cap_e, rl)
 
         for fi in sorted(staged):
             s = specs[fi]

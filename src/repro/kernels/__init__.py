@@ -10,4 +10,17 @@ Each kernel ships three ways (see ops.py): a sequential-semantics oracle
   flash_attention  fused online-softmax attention (LM hot spot)
 """
 
-from repro.kernels import ops, ref  # noqa: F401
+import jax
+
+
+def interpret_mode() -> bool:
+    """Whether pallas_call should run in interpret mode (non-TPU hosts).
+
+    Shared by every kernel module so the backend check lives in exactly
+    one place; kernels pass ``interpret=interpret_mode()`` to
+    ``pl.pallas_call``.
+    """
+    return jax.default_backend() != "tpu"
+
+
+from repro.kernels import ops, ref  # noqa: E402,F401

@@ -15,13 +15,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import interpret_mode as _interpret
+
 _I32 = jnp.int32
 _F32 = jnp.float32
 _U32 = jnp.uint32
-
-
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def _hist_kernel(bins_ref, valid_ref, out_ref, *, nbins: int):
@@ -182,6 +180,150 @@ def ragged_slots(bins: jax.Array, flow: jax.Array, offsets: jax.Array,
       word_off.astype(_I32), row_words.astype(_I32), caps.astype(_I32),
       rounds.astype(_I32))
     return slots[:m]
+
+
+def _pack_rows_kernel(rows_ref, bins_ref, flow_ref, off_ref, valid_ref,
+                      woff_ref, roww_ref, caps_ref, rounds_ref,
+                      out_ref, *, nflows: int, rnd: int, wtot: int,
+                      total: int, wmax: int):
+    """Slot computation + row scatter fused: one pass writes the wire.
+
+    Same slot math as :func:`_ragged_slots_kernel`, but instead of
+    emitting the slot vector for an XLA ``.at[].set`` to consume (one
+    extra HBM round trip over the rows), each tile scatters its rows
+    straight into the flat send buffer held in the output block.  All
+    grid steps map the same (total,) block; step 0 zero-fills.  Lanes at
+    or past a row's flow width, rows outside the round window, and
+    sentinel rows all index past ``total`` and drop.
+    """
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    bins = bins_ref[...].astype(_I32)
+    flow = flow_ref[...].astype(_I32)
+    off = off_ref[...].astype(_I32)
+    valid = valid_ref[...]
+    tm = bins.shape[0]
+    oh = (flow[:, None] ==
+          jax.lax.broadcasted_iota(_I32, (tm, nflows), 1)).astype(_I32)
+
+    def sel(tbl_ref):
+        return (oh * tbl_ref[...][None, :]).sum(axis=1)
+
+    woff_i, roww_i = sel(woff_ref), sel(roww_ref)
+    cap_i, rnds_i = sel(caps_ref), sel(rounds_ref)
+    off_r = off - rnd * cap_i
+    in_r = valid & (rnds_i > rnd) & (off_r >= 0) & (off_r < cap_i)
+    slot = jnp.where(in_r, bins * wtot + woff_i + off_r * roww_i, total)
+    lane = jax.lax.broadcasted_iota(_I32, (tm, wmax), 1)
+    idx = jnp.where((lane < roww_i[:, None]) & in_r[:, None],
+                    slot[:, None] + lane, total)
+    buf = out_ref[...]
+    out_ref[...] = buf.at[idx.reshape(-1)].set(
+        rows_ref[...].astype(_U32).reshape(-1), mode="drop")
+
+
+def pack_rows(rows: jax.Array, bins: jax.Array, flow: jax.Array,
+              offsets: jax.Array, valid: jax.Array, rnd: int,
+              word_off: jax.Array, row_words: jax.Array, caps: jax.Array,
+              rounds: jax.Array, wtot: int, total: int,
+              tile: int = 2048) -> jax.Array:
+    """Fused ragged wire pack: one kernel, one HBM write of the buffer.
+
+    ``rows`` is the (N, wmax) right-padded u32 row matrix (flow ``f``
+    uses its first ``row_words[f]`` lanes); the result is the flat
+    ``(total,)`` u32 send buffer that :func:`ragged_slots` +
+    ``object_container.scatter_rows`` would produce in two passes.
+    Oracle: the jnp path of ``kernels/ops.py::pack_rows``.
+    """
+    m, wmax = rows.shape
+    nflows = word_off.shape[0]
+    pad = (-m) % tile
+    if pad:
+        rows = jnp.pad(rows, ((0, pad), (0, 0)))
+        bins = jnp.pad(bins, (0, pad))
+        flow = jnp.pad(flow, (0, pad))
+        offsets = jnp.pad(offsets, (0, pad))
+        valid = jnp.pad(valid, (0, pad))
+    mp = bins.shape[0]
+    kern = functools.partial(_pack_rows_kernel, nflows=nflows, rnd=rnd,
+                             wtot=wtot, total=total, wmax=wmax)
+    full = lambda i: (0,)
+    return pl.pallas_call(
+        kern,
+        grid=(mp // tile,),
+        in_specs=[pl.BlockSpec((tile, wmax), lambda i: (i, 0)),
+                  pl.BlockSpec((tile,), lambda i: (i,)),
+                  pl.BlockSpec((tile,), lambda i: (i,)),
+                  pl.BlockSpec((tile,), lambda i: (i,)),
+                  pl.BlockSpec((tile,), lambda i: (i,)),
+                  pl.BlockSpec((nflows,), full),
+                  pl.BlockSpec((nflows,), full),
+                  pl.BlockSpec((nflows,), full),
+                  pl.BlockSpec((nflows,), full)],
+        out_specs=pl.BlockSpec((total,), full),
+        out_shape=jax.ShapeDtypeStruct((total,), _U32),
+        interpret=_interpret(),
+    )(rows.astype(_U32), bins.astype(_I32), flow.astype(_I32),
+      offsets.astype(_I32), valid, word_off.astype(_I32),
+      row_words.astype(_I32), caps.astype(_I32), rounds.astype(_I32))
+
+
+def _place_rows_kernel(dst_ref, slot_ref, rows_ref, out_ref, *,
+                       total: int, w: int):
+    """Scatter fixed-width rows at precomputed word slots, in-kernel.
+
+    The output block starts as a copy of ``dst`` (step 0) and each tile
+    folds its rows in; a slot at or past ``total`` drops its row.  Used
+    where the wire slots are analytic (dense replies, owner-side
+    assembly by hop/slot lane) so even those writes stay off XLA's
+    scatter path.
+    """
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = dst_ref[...]
+
+    slot = slot_ref[...].astype(_I32)
+    tm = slot.shape[0]
+    lane = jax.lax.broadcasted_iota(_I32, (tm, w), 1)
+    idx = jnp.where(slot[:, None] < total, slot[:, None] + lane, total)
+    buf = out_ref[...]
+    out_ref[...] = buf.at[idx.reshape(-1)].set(
+        rows_ref[...].astype(_U32).reshape(-1), mode="drop")
+
+
+def place_rows(dst: jax.Array, slots: jax.Array, rows: jax.Array,
+               tile: int = 2048) -> jax.Array:
+    """In-kernel ``scatter_rows``: pack (N, W) rows into ``dst`` words.
+
+    Bit-identical to ``object_container.scatter_rows(dst, slots, rows)``
+    (the jnp oracle) including the drop-on-sentinel contract; rows whose
+    slot is ``>= dst.size`` are dropped whole.
+    """
+    m, w = rows.shape
+    total = dst.shape[0]
+    pad = (-m) % tile
+    if pad:
+        rows = jnp.pad(rows, ((0, pad), (0, 0)))
+        slots = jnp.pad(slots, (0, pad), constant_values=total)
+    mp = slots.shape[0]
+    kern = functools.partial(_place_rows_kernel, total=total, w=w)
+    full = lambda i: (0,)
+    return pl.pallas_call(
+        kern,
+        grid=(mp // tile,),
+        in_specs=[pl.BlockSpec((total,), full),
+                  pl.BlockSpec((tile,), lambda i: (i,)),
+                  pl.BlockSpec((tile, w), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((total,), full),
+        out_shape=jax.ShapeDtypeStruct((total,), _U32),
+        interpret=_interpret(),
+    )(dst.astype(_U32), slots.astype(_I32), rows.astype(_U32))
 
 
 def _row_mix_kernel(rows_ref, out_ref, *, lanes: int):

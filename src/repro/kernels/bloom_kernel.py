@@ -19,15 +19,14 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import interpret_mode as _interpret
+
 _U32 = jnp.uint32
 # plain ints: Pallas kernels cannot capture module-level array constants
 _C1 = 0x85EBCA6B
 _C2 = 0xC2B2AE35
 _PHI = 0x9E3779B9
 
-
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def _fmix32(h):

@@ -25,12 +25,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import interpret_mode as _interpret
+
 _F32 = jnp.float32
 _NEG_INF = -1e30
 
-
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,

@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import interpret_mode as _interpret
 from repro.kernels.ref import MODE_SET, MODE_ADD, MODE_KEEP
 
 # kernel-local constants (plain ints: Pallas kernels cannot capture arrays)
@@ -39,10 +40,6 @@ _FREE, _READY, _MASK = 0, 2, 3
 
 _U32 = jnp.uint32
 _I32 = jnp.int32
-
-
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 # --------------------------------------------------------------------------
@@ -190,6 +187,119 @@ def insert(tkeys, tvals, status, qblock, qkeys, qvals, qvalid,
     return otk, otv, ost, success
 
 
+def _insert_arrivals_kernel(tk_ref, tv_ref, st_ref, comb_ref,
+                            otk_ref, otv_ref, ost_ref, ok_ref, *, mode: int,
+                            q_cap: int, block_size: int, lk: int, lv: int):
+    """Insert straight off the combined arrival tile (DESIGN.md §1.10).
+
+    ``comb_ref`` holds one (TB, Q, lk+lv+1) tile of the wire's arrival
+    rows — key lanes, value lanes, validity — binned by ONE scatter on
+    the host side instead of one per component; the kernel slices the
+    columns (static slices on the VMEM block, free) and then runs the
+    exact :func:`_insert_kernel` ownership-serialized loop.
+    """
+    tk = tk_ref[...]          # (TB, B, Lk)
+    tv = tv_ref[...]          # (TB, B, Lv)
+    st = st_ref[...]          # (TB, B)
+    tb = tk.shape[0]
+
+    def body(j, carry):
+        tk, tv, st, ok = carry
+        row = jax.lax.dynamic_slice_in_dim(comb_ref[...], j, 1,
+                                           axis=1)[:, 0]  # (TB, L)
+        key = row[:, :lk]
+        val = row[:, lk:lk + lv]
+        vld = row[:, lk + lv]
+        state = st & _MASK
+        match = (tk == key[:, None, :]).all(axis=2) & (state == _READY)
+        has_match = match.any(axis=1)
+        free = state == _FREE
+        has_free = free.any(axis=1)
+        mslot = jnp.argmax(match, axis=1)
+        fslot = jnp.argmax(free, axis=1)
+        slot = jnp.where(has_match, mslot, fslot)
+        can = (vld == 1) & (has_match | has_free)
+
+        onehot = (jax.lax.broadcasted_iota(_I32, (tb, block_size), 1)
+                  == slot[:, None]) & can[:, None]
+        old_val = jnp.take_along_axis(tv, slot[:, None, None], axis=1)[:, 0]
+        if mode == MODE_ADD:
+            new_val = jnp.where(has_match[:, None], old_val + val, val)
+        elif mode == MODE_KEEP:
+            new_val = jnp.where(has_match[:, None], old_val, val)
+        else:
+            new_val = val
+        tk = jnp.where(onehot[:, :, None], key[:, None, :], tk)
+        tv = jnp.where(onehot[:, :, None], new_val[:, None, :], tv)
+        st = jnp.where(onehot, (st & ~_U32(_MASK)) | _U32(_READY), st)
+        ok = ok.at[:, j].set(can)
+        return tk, tv, st, ok
+
+    ok0 = jnp.zeros((tb, q_cap), bool)
+    tk, tv, st, ok = jax.lax.fori_loop(0, q_cap, body, (tk, tv, st, ok0))
+    otk_ref[...] = tk
+    otv_ref[...] = tv
+    ost_ref[...] = st
+    ok_ref[...] = ok.astype(_U32)
+
+
+def insert_arrivals(tkeys, tvals, status, seg, valid,
+                    mode: int = MODE_SET, q_cap: int | None = None,
+                    tile_blocks: int | None = None):
+    """Bulk insert consuming the contiguous arrival segment directly.
+
+    ``seg`` is the exchange wire's (M, 1+Lk+Lv) owner view — local
+    block, key lanes, value lanes — exactly as sliced off the arrival
+    buffer.  Semantics == :func:`insert` on the sliced columns, but the
+    host side bins with ONE combined scatter instead of three, so the
+    arrivals cross HBM once before the probe.
+    """
+    nb, bsz, lk = tkeys.shape
+    lv = tvals.shape[2]
+    m = seg.shape[0]
+    q_cap = q_cap or default_q_cap(m, nb)
+    tb = tile_blocks or (8 if nb % 8 == 0 else 1)
+
+    qblock = jnp.where(valid, seg[:, 0].astype(_I32), 0)
+    slot, overflow = bin_queries(qblock, valid, nb, q_cap)
+    comb = jnp.concatenate([seg[:, 1:1 + lk + lv].astype(_U32),
+                            valid.astype(_U32)[:, None]], axis=1)
+    cb = _scatter_to_bins(comb, slot, nb, q_cap, lk + lv + 1)
+
+    grid = (nb // tb,)
+    kern = functools.partial(_insert_arrivals_kernel, mode=mode, q_cap=q_cap,
+                            block_size=bsz, lk=lk, lv=lv)
+    otk, otv, ost, okbins = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, bsz, lk), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tb, bsz, lv), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tb, bsz), lambda i: (i, 0)),
+            pl.BlockSpec((tb, q_cap, lk + lv + 1), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tb, bsz, lk), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tb, bsz, lv), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tb, bsz), lambda i: (i, 0)),
+            pl.BlockSpec((tb, q_cap), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, bsz, lk), _U32),
+            jax.ShapeDtypeStruct((nb, bsz, lv), _U32),
+            jax.ShapeDtypeStruct((nb, bsz), _U32),
+            jax.ShapeDtypeStruct((nb, q_cap), _U32),
+        ],
+        interpret=_interpret(),
+    )(tkeys, tvals, status, cb)
+
+    flat_ok = okbins.reshape(-1)
+    take = jnp.minimum(slot, nb * q_cap - 1)
+    success = jnp.where(slot < nb * q_cap, flat_ok[take] == 1, False)
+    success = success & ~overflow & valid
+    return otk, otv, ost, success
+
+
 # --------------------------------------------------------------------------
 # find kernel
 # --------------------------------------------------------------------------
@@ -267,4 +377,86 @@ def find(tkeys, tvals, status, qblock, qkeys, qvalid,
                                      overflow)
         found = found | f2
         vals = jnp.where(f2[:, None], v2, vals)
+    return found, vals
+
+
+def _find_arrivals_kernel(tk_ref, tv_ref, st_ref, comb_ref,
+                          found_ref, val_ref, *, block_size: int, lk: int):
+    """:func:`_find_kernel` off the combined (TB, Q, lk+1) arrival tile:
+    key lanes + validity binned by one host-side scatter, columns split
+    in-kernel (static VMEM slices)."""
+    tk = tk_ref[...]                      # (TB, B, Lk)
+    tv = tv_ref[...]                      # (TB, B, Lv)
+    st = st_ref[...]                      # (TB, B)
+    comb = comb_ref[...]                  # (TB, Q, Lk+1)
+    qk = comb[:, :, :lk]
+    vld = comb[:, :, lk] == 1             # (TB, Q)
+
+    ready = (st & _MASK) == _READY        # (TB, B)
+    match = (qk[:, :, None, :] == tk[:, None, :, :]).all(axis=3)
+    match = match & ready[:, None, :]     # (TB, Q, B)
+    found = match.any(axis=2) & vld
+    first = match & (jnp.cumsum(match.astype(_I32), axis=2) == 1)
+    slot = jnp.argmax(first, axis=2)      # (TB, Q)
+    vals_exact = jnp.take_along_axis(tv, slot[:, :, None], axis=1)
+    found_ref[...] = found.astype(_U32)
+    val_ref[...] = jnp.where(found[:, :, None], vals_exact, 0)
+
+
+def find_arrivals(tkeys, tvals, status, seg, valid,
+                  q_cap: int | None = None, tile_blocks: int | None = None):
+    """Bulk find consuming the contiguous arrival segment directly.
+
+    ``seg`` is the wire's (M, 1+Lk) owner view (local block + key
+    lanes); results are bit-identical to :func:`find` on the sliced
+    columns, with the arrivals binned by ONE combined scatter.
+    """
+    nb, bsz, lk = tkeys.shape
+    lv = tvals.shape[2]
+    m = seg.shape[0]
+    q_cap = q_cap or default_q_cap(m, nb)
+    tb = tile_blocks or (8 if nb % 8 == 0 else 1)
+
+    qblock = jnp.where(valid, seg[:, 0].astype(_I32), 0)
+    qkeys = seg[:, 1:1 + lk]
+    slot, overflow = bin_queries(qblock, valid, nb, q_cap)
+    comb = jnp.concatenate([qkeys.astype(_U32),
+                            (valid & ~overflow).astype(_U32)[:, None]],
+                           axis=1)
+    cb = _scatter_to_bins(comb, slot, nb, q_cap, lk + 1)
+
+    grid = (nb // tb,)
+    kern = functools.partial(_find_arrivals_kernel, block_size=bsz, lk=lk)
+    foundb, valb = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, bsz, lk), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tb, bsz, lv), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tb, bsz), lambda i: (i, 0)),
+            pl.BlockSpec((tb, q_cap, lk + 1), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tb, q_cap), lambda i: (i, 0)),
+            pl.BlockSpec((tb, q_cap, lv), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, q_cap), _U32),
+            jax.ShapeDtypeStruct((nb, q_cap, lv), _U32),
+        ],
+        interpret=_interpret(),
+    )(tkeys, tvals, status, cb)
+
+    flat_f = foundb.reshape(-1)
+    flat_v = valb.reshape(-1, lv)
+    take = jnp.minimum(slot, nb * q_cap - 1)
+    in_range = slot < nb * q_cap
+    found = jnp.where(in_range, flat_f[take] == 1, False) & valid & ~overflow
+    vals = jnp.where(found[:, None], flat_v[take], 0)
+
+    from repro.kernels.ref import hash_probe_find_ref
+    f2, v2 = hash_probe_find_ref(tkeys, tvals, status,
+                                 jnp.clip(qblock, 0, nb - 1), qkeys, overflow)
+    found = found | f2
+    vals = jnp.where(f2[:, None], v2, vals)
     return found, vals

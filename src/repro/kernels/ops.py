@@ -185,6 +185,45 @@ def bulk_find(tkeys, tvals, status, qblock, qkeys, qvalid, impl: str = "auto"):
     return _ref.hash_probe_find_ref(tkeys, tvals, status, qblock, qkeys, qvalid)
 
 
+def bulk_find_arrivals(tkeys, tvals, status, seg, valid, impl: str = "auto"):
+    """Batch find off the contiguous (M, 1+Lk) arrival segment.
+
+    ``seg`` is an exchange owner view — local block in lane 0, key lanes
+    after — consumed as-is (DESIGN.md section 1.10): the Pallas path
+    bins the combined segment with ONE scatter and splits columns
+    in-kernel, so no intermediate lane matrices cross HBM.  The jnp and
+    oracle paths slice the columns and run :func:`bulk_find` — the
+    fallback/oracle, bit-identical by construction.
+    """
+    impl = _resolve(impl)
+    if impl == "pallas":
+        from repro.kernels import hash_probe
+        return hash_probe.find_arrivals(tkeys, tvals, status, seg, valid)
+    lk = tkeys.shape[2]
+    qblock = jnp.where(valid, seg[:, 0].astype(_I32), 0)
+    return bulk_find(tkeys, tvals, status, qblock, seg[:, 1:1 + lk], valid,
+                     impl=impl)
+
+
+def bulk_insert_arrivals(tkeys, tvals, status, seg, valid,
+                         mode: int = MODE_SET, impl: str = "auto"):
+    """Batch insert off the contiguous (M, 1+Lk+Lv) arrival segment.
+
+    Arrival-buffer twin of :func:`bulk_insert` (see
+    :func:`bulk_find_arrivals` for the layout and the HBM argument).
+    Returns (tkeys, tvals, status, success(M,)).
+    """
+    impl = _resolve(impl)
+    if impl == "pallas":
+        from repro.kernels import hash_probe
+        return hash_probe.insert_arrivals(tkeys, tvals, status, seg, valid,
+                                          mode)
+    lk = tkeys.shape[2]
+    qblock = jnp.where(valid, seg[:, 0].astype(_I32), 0)
+    return bulk_insert(tkeys, tvals, status, qblock, seg[:, 1:1 + lk],
+                       seg[:, 1 + lk:], valid, mode, impl=impl)
+
+
 # --------------------------------------------------------------------------
 # blocked Bloom filter
 # --------------------------------------------------------------------------
@@ -343,6 +382,48 @@ def stage_slots(bins, flow, offsets, valid, word_off, row_words, caps,
     """
     return ragged_slots(bins, flow, offsets, valid, 0, word_off, row_words,
                         caps, live, wtot, sentinel, impl=impl)
+
+
+def pack_rows(rows, bins, flow, offsets, valid, rnd: int, word_off,
+              row_words, caps, rounds, wtot: int, total: int,
+              impl: str = "auto"):
+    """Fused ragged wire pack: slots + row scatter in one pass.
+
+    ``rows`` is the (N, wmax) right-padded u32 row matrix over all flows
+    in item order (flow ``f`` uses lanes ``[0, row_words[f])``); returns
+    the flat ``(total,)`` u32 send buffer for retry round ``rnd``.  The
+    jnp path is the declared fallback/oracle — :func:`ragged_slots`
+    followed by ``object_container.scatter_rows`` (the two-pass XLA
+    lowering, DESIGN.md section 1.10); the Pallas path writes the wire
+    exactly once (``kernels/binning.pack_rows``).
+    """
+    impl = _resolve(impl)
+    if impl == "pallas":
+        from repro.kernels import binning
+        return binning.pack_rows(rows, bins, flow, offsets, valid, rnd,
+                                 word_off, row_words, caps, rounds,
+                                 wtot, total)
+    from repro.core.object_container import scatter_rows
+    slots = ragged_slots(bins, flow, offsets, valid, rnd, word_off,
+                         row_words, caps, rounds, wtot, total, impl=impl)
+    return scatter_rows(jnp.zeros((total,), _U32), slots, rows,
+                        widths=row_words[flow.astype(_I32)])
+
+
+def place_rows(dst, slots, rows, impl: str = "auto"):
+    """Scatter fixed-width (N, W) rows into ``dst`` at word ``slots``.
+
+    Rows with ``slots[i] >= dst.size`` drop.  jnp path is
+    ``object_container.scatter_rows`` (the fallback/oracle); the Pallas
+    path folds the scatter into one kernel pass so analytic-slot writes
+    (dense replies, owner-side assembly) stay off XLA's scatter path.
+    """
+    impl = _resolve(impl)
+    if impl == "pallas":
+        from repro.kernels import binning
+        return binning.place_rows(dst, slots, rows)
+    from repro.core.object_container import scatter_rows
+    return scatter_rows(dst, slots, rows)
 
 
 # --------------------------------------------------------------------------

@@ -270,3 +270,41 @@ def analyze_pair(fn, *args, axis_env: dict | None = None):
     closed = jax.make_jaxpr(fn)(*args)
     return (analyze_jaxpr(closed, axis_env=axis_env, count_trips=True),
             analyze_jaxpr(closed, axis_env=axis_env, count_trips=False))
+
+
+def _count_ops(jaxpr, counts: dict, opaque_kernels: bool):
+    for eqn in jaxpr.eqns:
+        counts[eqn.primitive.name] = counts.get(eqn.primitive.name, 0) + 1
+        if opaque_kernels and eqn.primitive.name == "pallas_call":
+            continue
+        for v in eqn.params.values():
+            for sub in _iter_jaxprs(v):
+                _count_ops(sub, counts, opaque_kernels)
+
+
+def op_counts(fn_or_closed, *args, opaque_kernels: bool = True) -> dict:
+    """Static primitive census of a traced program: ``{prim_name: count}``
+    over the whole jaxpr, recursing into every nested (Closed)Jaxpr —
+    scan/while/cond bodies, shard_map, pjit calls, custom_jvp wrappers.
+
+    Counts are STATIC occurrences (a scan body counts once, not per
+    trip) — this is the structural-pinning view, not a cost model: the
+    wire-fusion tests assert e.g. ``op_counts(commit)["scatter"] == 0``
+    to prove the fused Pallas path replaced XLA's scatter lowering, and
+    pin the exact count on the fallback path so a regression that quietly
+    adds a wire pass fails loudly (DESIGN.md section 1.10).
+
+    ``opaque_kernels=True`` (the default) counts a ``pallas_call`` as one
+    opaque primitive without descending into its body: in-kernel
+    functional updates trace as scatter eqns INSIDE the kernel jaxpr but
+    lower to vector stores on the accelerator, so they are not XLA
+    scatter passes over HBM.  Pass ``False`` for a raw census.
+
+    Accepts a ClosedJaxpr, or a callable plus its example args (traced
+    via ``jax.make_jaxpr``).
+    """
+    closed = (fn_or_closed if isinstance(fn_or_closed, jcore.ClosedJaxpr)
+              else jax.make_jaxpr(fn_or_closed)(*args))
+    counts: dict = {}
+    _count_ops(closed.jaxpr, counts, opaque_kernels)
+    return counts

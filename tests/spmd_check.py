@@ -290,6 +290,99 @@ def main():
               all(np.array_equal(np.asarray(a), np.asarray(b))
                   for a, b in zip(got_dense, got_hier)))
 
+    # ---- one-kernel wire == scatter oracle on 8 ranks (§1.10) ----
+    # the SAME container battery run with impl="jnp" (the declared
+    # fallback wire, object_container.scatter_rows) and impl="pallas"
+    # (the fused slot+pack kernel that builds the wire in one pass):
+    # dense and two-stage transports, one-shot and split-phase commits,
+    # integrity checksums on, carryover retry rounds — every output must
+    # be bit-identical, raw table state included.
+    def wire_battery(impl, transport, split):
+        def body(keys, vals, fk, ik, iv, qv, qd, p3, d3):
+            bk = get_backend("bcl")
+            spec, st = hm.hashmap_create(bk, 8192, SDS((), jnp.uint32),
+                                         SDS((), jnp.uint32), block_size=16,
+                                         impl=impl)
+            st, ins_ok = hm.insert(bk, spec, st, keys, vals, capacity=NLOC,
+                                   max_rounds=2, transport=transport,
+                                   integrity=True)
+            st, fv, ff = hm.find(bk, spec, st, fk, capacity=NLOC,
+                                 transport=transport, integrity=True)
+            fi = hm.find_insert(
+                bk, spec, st, fk, ik, iv, capacity=NLOC,
+                promise=ConProm.HashMap.find_insert, transport=transport,
+                integrity=True, async_=split)
+            st, v, f, ok = fi.finish() if split else fi
+            qspec, qst = q.queue_create(bk, 512, SDS((), jnp.uint32),
+                                        circular=True)
+            nbr = (jax.lax.axis_index("bcl") + 1) % PROCS
+            pp = q.push_pop(bk, qspec, qst, qv, qd, 32, 24, nbr,
+                            promise=ConProm.CircularQueue.push_pop,
+                            transport=transport, integrity=True,
+                            impl=impl, async_=split)
+            qst, pushed, dropped, out, got = pp.finish() if split else pp
+            # raw plan with carryover retries, integrity on
+            plan = ExchangePlan(name="wire3")
+            h3 = plan.add(p3, d3, 8, reply_lanes=2, op_name="wire3")
+            if split:
+                c = plan.commit_async(bk, impl=impl, max_rounds=3,
+                                      transport=transport,
+                                      integrity=True).finish(bk)
+            else:
+                c = plan.commit(bk, impl=impl, max_rounds=3,
+                                transport=transport, integrity=True)
+            c.set_reply(h3, c.view(h3).payload[:, :2] + 9)
+            o3 = c.finish(bk)[h3]
+            v3 = c.view(h3)
+            return (ins_ok, fv, ff, v, f, ok, pushed[None], dropped[None],
+                    out, got, st.tkeys, st.tvals, st.status,
+                    o3[0], o3[1], v3.payload, v3.valid, v3.dropped[None])
+
+        return jax.jit(shard_map(body, mesh=mesh, in_specs=(P("bcl"),) * 9,
+                                 out_specs=(P("bcl"),) * 18))
+
+    for tag, tr_w, split in (("dense_sync", None, False),
+                             ("dense_async", None, True),
+                             ("hier_sync", HierarchicalTransport(2, 4),
+                              False),
+                             ("hier_async", HierarchicalTransport(2, 4),
+                              True)):
+        got_sc = wire_battery("jnp", tr_w, split)(*tb_args)
+        got_fu = wire_battery("pallas", tr_w, split)(*tb_args)
+        check(f"wire.fused_equals_scatter_8rank_{tag}",
+              all(np.array_equal(np.asarray(a), np.asarray(b))
+                  for a, b in zip(got_sc, got_fu)))
+
+    # faults arm: the same seeded corruption (integrity checksums on)
+    # must produce bit-identical arrivals AND loss accounting on both
+    # wires — fusion may not move bytes across checksum windows
+    from repro.core import (FaultInjectingTransport as _FIT,
+                            FaultSpec as _FSpec,
+                            make_transport as _mk_tr)
+
+    def wire_fault(impl):
+        ftr = _FIT(_mk_tr("dense"), _FSpec(seed=7, corrupt=((0, 2, 5),)))
+
+        def body(pay, dst):
+            bk = get_backend("bcl")
+            res = route(bk, pay, dst, capacity=64, op_name="wf", impl=impl,
+                        transport=ftr, integrity=True)
+            return res.payload, res.valid, res.lost[None], res.dropped[None]
+
+        return jax.jit(shard_map(body, mesh=mesh, in_specs=(P("bcl"),) * 2,
+                                 out_specs=(P("bcl"),) * 4))
+
+    wf_rng = np.random.default_rng(9)
+    wf_pay = jnp.asarray(wf_rng.integers(0, 1 << 30, (PROCS * 64, 2)),
+                         jnp.uint32)
+    wf_dst = jnp.asarray(wf_rng.integers(0, PROCS, PROCS * 64), jnp.int32)
+    got_wj = wire_fault("jnp")(wf_pay, wf_dst)
+    got_wp = wire_fault("pallas")(wf_pay, wf_dst)
+    check("wire.fused_equals_scatter_faults",
+          all(np.array_equal(np.asarray(a), np.asarray(b))
+              for a, b in zip(got_wj, got_wp))
+          and int(np.asarray(got_wj[2]).sum()) > 0)
+
     # ---- per-hop byte attribution + the sparse-destination wire pin ----
     # every rank sends all n items to ONE rank ((r+1) % 8): per-stage
     # loads are 8, so explicit stage caps (8, 8) are lossless while the

@@ -40,6 +40,42 @@ def test_micro_fused_arms_smoke():
     assert r["cq_push_pop_fine"] > 0
 
 
+def test_micro_wire_arms_smoke(capsys):
+    """The --wire {scatter,fused} arms (DESIGN.md section 1.10): both
+    wires run every variant, rows follow the shared CSV schema with the
+    hbm_passes column filled, the fused arm reports strictly fewer
+    standalone scatter passes than the scatter arm, and the wire choice
+    never changes bytes, collectives, or rounds."""
+    from benchmarks import micro_hashmap, micro_queue
+    from benchmarks.util import HEADER
+    ncols = len(HEADER.split(","))
+    hcols = HEADER.split(",")
+    ip = hcols.index("hbm_passes")
+    rs = micro_hashmap.run(smoke=True, wire="scatter")
+    rf = micro_hashmap.run(smoke=True, wire="fused")
+    rq = micro_queue.run(smoke=True, wire="fused")
+    for k in ("hashmap_insert", "hashmap_find"):
+        assert rs[k] > 0 and rf[k] > 0, k
+    assert rq["fq_push"] > 0
+    rows = [ln.split(",") for ln in capsys.readouterr().out.splitlines()
+            if "," in ln]
+    for cols in rows:
+        assert len(cols) == ncols, cols
+    by_name = {cols[0]: cols for cols in rows}
+    for base in ("hashmap_insert", "hashmap_insert_buffer",
+                 "hashmap_find_atomic", "hashmap_find",
+                 "hashmap_find_2attempt"):
+        s, f = by_name[base + "_scatter"], by_name[base + "_fused"]
+        # the structural win: fewer HBM scatter passes when fused
+        assert int(f[ip]) < int(s[ip]), base
+        # ...at identical collectives / bytes / rounds / hops
+        for i in (2, 3, 4, 8):
+            assert s[i] == f[i], (base, hcols[i], s[i], f[i])
+    for cols in by_name.values():
+        if cols[0].endswith(("_scatter", "_fused")):
+            assert cols[ip] != "", cols[0]        # column filled
+
+
 def test_micro_skew_arms_smoke(capsys):
     """The --skew zipf arms run; the drop-mode arm loses items, the
     retry arm loses none, and every CSV row follows the shared schema

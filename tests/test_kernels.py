@@ -64,6 +64,31 @@ def test_find_matches_oracle(rng, nb, B, lk, lv, m, impl):
     assert np.array_equal(np.asarray(vo), np.asarray(vj))
 
 
+@pytest.mark.parametrize("nb,B,lk,lv,m", SWEEP[:2])
+def test_arrivals_match_column_ops(rng, nb, B, lk, lv, m):
+    """Owner-side arrival entry points (DESIGN.md section 1.10): probing
+    straight off the contiguous (block | key | val) exchange segment is
+    bit-identical to slicing the columns and running bulk_find /
+    bulk_insert, across both impls."""
+    tk, tv, st = _mk_table(nb, B, lk, lv)
+    qb, qk, qv, qvalid = _mk_queries(rng, m, nb, lk, lv, key_space=m // 2)
+    seg_i = jnp.concatenate([qb.astype(jnp.uint32)[:, None], qk, qv], axis=1)
+    col = ops.bulk_insert(tk, tv, st, qb, qk, qv, qvalid, impl="jnp")
+    for impl in ("jnp", "pallas"):
+        got = ops.bulk_insert_arrivals(tk, tv, st, seg_i, qvalid, impl=impl)
+        for a, b_, name in zip(col, got, ["tkeys", "tvals", "status", "ok"]):
+            assert np.array_equal(np.asarray(a), np.asarray(b_)), \
+                f"insert {name} ({impl})"
+    tk, tv, st, _ = col[0], col[1], col[2], col[3]
+    fb, fk, _, fvalid = _mk_queries(rng, m, nb, lk, lv, key_space=m)
+    seg_f = jnp.concatenate([fb.astype(jnp.uint32)[:, None], fk], axis=1)
+    fo, vo = ops.bulk_find(tk, tv, st, fb, fk, fvalid, impl="jnp")
+    for impl in ("jnp", "pallas"):
+        fg, vg = ops.bulk_find_arrivals(tk, tv, st, seg_f, fvalid, impl=impl)
+        assert np.array_equal(np.asarray(fo), np.asarray(fg)), impl
+        assert np.array_equal(np.asarray(vo), np.asarray(vg)), impl
+
+
 def test_insert_stateful_sequence(rng):
     """Kernel equals oracle across a chain of dependent batches."""
     nb, B, lk, lv = 8, 16, 2, 1
@@ -148,6 +173,63 @@ class TestBinning:
             # in-round slots are unique (disjoint word ranges per item)
             live = np.asarray(sj) < nbins * wtot
             assert np.unique(np.asarray(sj)[live]).size == live.sum()
+
+    @pytest.mark.parametrize("n,nbins,nflows", [(100, 3, 2), (3000, 8, 4)])
+    def test_pack_rows_pallas_matches_jnp(self, rng, n, nbins, nflows):
+        """The one-kernel wire pack against its two-pass jnp oracle
+        (ragged_slots + scatter_rows), over every retry round: identical
+        buffers, and every live item's words land at distinct addresses
+        (sentinel rows — out of round, invalid, overflow — drop)."""
+        bins = jnp.asarray(rng.integers(0, nbins, n), jnp.int32)
+        flow = jnp.asarray(rng.integers(0, nflows, n), jnp.int32)
+        valid = jnp.asarray(rng.random(n) < 0.8)
+        _, offs = ops.multi_bin_offsets(bins, flow, nbins, nflows, valid)
+        roww = jnp.asarray(rng.integers(2, 6, nflows), jnp.int32)
+        caps = jnp.asarray(rng.integers(1, 9, nflows), jnp.int32)
+        rounds = jnp.asarray(rng.integers(1, 4, nflows), jnp.int32)
+        woff, wtot = [], 0
+        for f in range(nflows):
+            woff.append(wtot)
+            wtot += int(caps[f]) * int(roww[f])
+        woff = jnp.asarray(woff, jnp.int32)
+        wmax = int(roww.max())
+        # distinct nonzero payload per (item, lane) so uniqueness of the
+        # packed words proves no two rows overlapped in the buffer
+        rows = (jnp.arange(n, dtype=jnp.uint32)[:, None] * wmax
+                + jnp.arange(wmax, dtype=jnp.uint32)[None, :] + 1)
+        total = nbins * wtot
+        for r in range(int(rounds.max())):
+            args = (rows, bins, flow, offs, valid, r, woff, roww, caps,
+                    rounds, wtot, total)
+            bj = ops.pack_rows(*args, impl="jnp")
+            bp = ops.pack_rows(*args, impl="pallas")
+            assert np.array_equal(np.asarray(bj), np.asarray(bp)), r
+            slots = np.asarray(ops.ragged_slots(
+                bins, flow, offs, valid, r, woff, roww, caps, rounds,
+                wtot, total, impl="jnp"))
+            live = slots < total
+            written = np.asarray(bj)[np.asarray(bj) != 0]
+            expect_words = int((np.asarray(roww)[np.asarray(flow)])[live].sum())
+            assert written.size == expect_words, r
+            assert np.unique(written).size == written.size, r
+            # rows past the round window / invalid contribute nothing
+            drop_vals = np.asarray(rows)[~live].ravel()
+            assert not np.intersect1d(written, drop_vals).size, r
+
+    def test_place_rows_pallas_matches_jnp(self, rng):
+        """Analytic-slot row placement (dense replies, owner assembly):
+        kernel == scatter_rows oracle, OOB sentinel slots drop."""
+        n, w, total = 200, 3, 900
+        base = jnp.asarray(rng.permutation(total // w)[:n] * w, jnp.int32)
+        base = jnp.where(jnp.asarray(rng.random(n) < 0.15), total, base)
+        rows = jnp.asarray(rng.integers(1, 1 << 30, (n, w)), jnp.uint32)
+        dst = jnp.asarray(rng.integers(0, 1 << 30, total), jnp.uint32)
+        oj = ops.place_rows(dst, base, rows, impl="jnp")
+        op_ = ops.place_rows(dst, base, rows, impl="pallas")
+        assert np.array_equal(np.asarray(oj), np.asarray(op_))
+        kept = np.asarray(base) >= total
+        assert np.array_equal(np.asarray(oj)[np.asarray(base)[~kept]],
+                              np.asarray(rows)[~kept, 0])
 
 
 class TestFlashAttention:

@@ -129,7 +129,35 @@ def test_no_raw_all_to_all_outside_transport():
     assert not findings, "\n".join(findings)
 
 
+def test_no_scatter_updates_in_transport():
+    """One-kernel wire rule (DESIGN.md section 1.10): the physical
+    transport layer builds every wire buffer through
+    ``kernels/ops.pack_rows`` / ``place_rows`` — the scatter fallback
+    lives in ONE declared place (``object_container.scatter_rows``), so
+    ``core/transport.py`` must contain ZERO ``<expr>.at[...].set(...)``
+    updates.  A new one silently reintroduces a standalone XLA scatter
+    pass per commit and breaks the jaxpr census pin
+    (tests/test_wire_format.py::test_fused_wire_traces_zero_scatter_ops)."""
+    path = _ROOT / "src" / "repro" / "core" / "transport.py"
+    tree = ast.parse(path.read_text(), filename=str(path))
+    findings = []
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "set"
+                and isinstance(node.func.value, ast.Subscript)
+                and isinstance(node.func.value.value, ast.Attribute)
+                and node.func.value.value.attr == "at"):
+            findings.append(
+                f"src/repro/core/transport.py:{node.lineno}: "
+                ".at[...].set scatter update in the transport layer "
+                "(use kernels/ops.pack_rows or place_rows; the jnp "
+                "fallback is object_container.scatter_rows)")
+    assert not findings, "\n".join(findings)
+
+
 if __name__ == "__main__":
     test_no_unused_locals()
     test_no_raw_all_to_all_outside_transport()
+    test_no_scatter_updates_in_transport()
     print("lint fallback clean", file=sys.stderr)

@@ -470,6 +470,80 @@ def test_make_transport_knob():
 
 
 # ---------------------------------------------------------------------------
+# one-kernel wire path: jaxpr-level scatter census (DESIGN.md section 1.10)
+# ---------------------------------------------------------------------------
+
+def _commit_census(impl, transport=None, integrity=False):
+    """Primitive counts of ONE traced plan commit (request + owner view)."""
+    from repro.launch import jaxpr_stats
+    bk = get_backend(None)
+
+    def go(pay, dest):
+        plan = ExchangePlan(name="op")
+        h = plan.add(pay, dest, 16, reply_lanes=1, op_name="op")
+        c = plan.commit(bk, impl=impl, transport=transport,
+                        integrity=integrity)
+        v = c.view(h)
+        return v.payload, v.valid
+
+    return jaxpr_stats.op_counts(go, jnp.zeros((12, 2), jnp.uint32),
+                                 jnp.zeros(12, jnp.int32))
+
+
+def test_fused_wire_traces_zero_scatter_ops():
+    """The tentpole pin: with ``impl="pallas"`` a commit writes the wire
+    exactly once — the traced program contains ZERO standalone XLA
+    scatter ops, dense AND both hierarchical hops; the jnp fallback
+    keeps its exact two-pass scatter counts (4 dense: pack + 2 send
+    maps + owner assembly; 8 hier: both hops' packs + maps).  Any new
+    ``.at[].set`` on the commit path moves these numbers and fails
+    here."""
+    from repro.core import HierarchicalTransport
+    dense_p = _commit_census("pallas")
+    hier_p = _commit_census("pallas", transport=HierarchicalTransport())
+    assert dense_p.get("scatter", 0) == 0
+    assert hier_p.get("scatter", 0) == 0
+    # the fused lowering really is Pallas, not an elided wire
+    assert dense_p.get("pallas_call", 0) == 4
+    assert hier_p.get("pallas_call", 0) == 8
+    dense_j = _commit_census("jnp")
+    hier_j = _commit_census("jnp", transport=HierarchicalTransport())
+    assert dense_j.get("scatter", 0) == 4
+    assert hier_j.get("scatter", 0) == 8
+    assert dense_j.get("pallas_call", 0) == 0
+
+
+def test_integrity_checksum_is_scatter_add_not_scatter():
+    """Wire checksums (segment-summed row hashes) lower to scatter-add —
+    a reduction, not a wire pack — and stay OUT of the fused-wire pin:
+    the pallas commit keeps zero plain-scatter ops with integrity on."""
+    c = _commit_census("pallas", integrity=True)
+    assert c.get("scatter", 0) == 0
+    assert c.get("scatter-add", 0) == 1
+
+
+def test_op_counts_pallas_bodies_opaque_by_default():
+    """The census treats a pallas_call as one opaque primitive: in-kernel
+    functional stores are vector writes, not XLA scatter passes — the
+    raw (non-opaque) census still sees them, pinning that the distinction
+    is real."""
+    from repro.launch import jaxpr_stats
+    raw = _commit_census("pallas")
+    assert raw.get("scatter", 0) == 0
+    bk = get_backend(None)
+
+    def go(pay, dest):
+        plan = ExchangePlan(name="op")
+        h = plan.add(pay, dest, 16, op_name="op")
+        return plan.commit(bk, impl="pallas").view(h).payload
+
+    full = jaxpr_stats.op_counts(go, jnp.zeros((12, 2), jnp.uint32),
+                                 jnp.zeros(12, jnp.int32),
+                                 opaque_kernels=False)
+    assert full.get("scatter", 0) > 0        # the in-kernel stores
+
+
+# ---------------------------------------------------------------------------
 # fused reply == oracle alignment
 # ---------------------------------------------------------------------------
 
